@@ -1,0 +1,67 @@
+"""Benchmark harness entry point — one bench per paper table/figure family.
+
+Prints ``name,us_per_call,derived`` CSV rows (kernel/microbenches), the
+paper-protocol summary per (dataset × combo) from cached sweep artifacts
+(benchmarks.paper_sweep produces them; a small live sweep runs if absent),
+and the roofline tables from the dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parent.parent / "artifacts"
+
+
+def paper_summary():
+    files = sorted(glob.glob(str(ART / "paper_sweep" / "*.json")))
+    if not files:
+        print("# no paper_sweep artifacts; running a reduced live sweep "
+              "(synth-citation, 4 combos, Q=20)")
+        from benchmarks.paper_sweep import sweep_dataset
+        sweep_dataset("synth-citation", queries=20,
+                      combos=[(0.10, 1, 0.01), (0.20, 1, 0.10),
+                              (0.30, 0, 0.90), (0.30, 1, 0.90)])
+        files = sorted(glob.glob(str(ART / "paper_sweep" / "*.json")))
+    print("\n# paper protocol: dataset,combo,vertex_ratio,edge_ratio,"
+          "rbo_mean,rbo_final,speedup_mean,speedup_min,fallbacks")
+    best = {}
+    for f in files:
+        r = json.load(open(f))
+        s = r["summary"]
+        key = f"r{r['r']}_n{r['n']}_d{r['delta']}"
+        print(f"paper,{r['dataset']},{key},{s['vertex_ratio']:.4f},"
+              f"{s['edge_ratio']:.4f},{s['rbo']:.4f},{s['rbo_final']:.4f},"
+              f"{s['speedup']:.2f},{s['speedup_min']:.2f},{s['fallbacks']}")
+        d = best.setdefault(r["dataset"], {"speedup": 0.0, "rbo_at": 0.0})
+        if s["rbo"] > 0.95 and s["speedup"] > d["speedup"]:
+            d["speedup"] = s["speedup"]
+            d["rbo_at"] = s["rbo"]
+    print("\n# headline (best speedup with RBO > 0.95, the paper's claim "
+          "regime):")
+    for ds, d in sorted(best.items()):
+        print(f"headline,{ds},speedup={d['speedup']:.2f}x,rbo={d['rbo_at']:.4f}")
+
+
+def roofline_summary():
+    try:
+        from benchmarks.bench_roofline import main as roofline_main
+        roofline_main()
+    except Exception as e:
+        print(f"# roofline artifacts unavailable: {e}")
+
+
+def main() -> None:
+    print("# microbenchmarks (CPU wall time of the jnp reference paths)")
+    from benchmarks.bench_kernels import main as kernels_main
+    kernels_main()
+    paper_summary()
+    roofline_summary()
+
+
+if __name__ == "__main__":
+    main()

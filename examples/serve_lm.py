@@ -1,0 +1,24 @@
+"""Serve a small model with batched requests (prefill + lockstep decode).
+
+  PYTHONPATH=src python examples/serve_lm.py --arch yi_9b
+"""
+
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default="yi_9b")
+    ap.add_argument("--requests", type=int, default=8)
+    args = ap.parse_args()
+    stats = serve_main([
+        "--arch", args.arch, "--smoke", "--requests", str(args.requests),
+        "--prompt-len", "32", "--new-tokens", "16", "--slots", "4",
+    ])
+    assert stats.tokens_out == args.requests * 16
+
+
+if __name__ == "__main__":
+    main()

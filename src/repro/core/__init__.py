@@ -1,0 +1,6 @@
+"""VeilGraph core: the paper's contribution — approximate streaming graph
+processing via hot-vertex selection + big-vertex summarization."""
+from repro.core.engine import Action, EngineConfig, QueryStats, VeilGraphEngine
+from repro.core.hotset import HotSetStats, select_hot_set
+from repro.core.pagerank import (SummaryBuffers, build_summary, pagerank,
+                                 summarized_pagerank)

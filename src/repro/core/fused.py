@@ -1,0 +1,100 @@
+"""Fused approximate-query step: selection + summary + iteration in one jit.
+
+This is the performance-critical form of the paper's query path (Alg. 1
+lines 6–19 for the compute-approximate action) and the function the
+multi-pod dry-run lowers for the `veilgraph-pagerank` workload:
+
+    (GraphState, ranks, deg_prev, r, Δ)  ->  (ranks', stats)
+
+Differences vs the unfused engine path:
+- one XLA program per query (no host round-trips between selection, summary
+  construction and power iterations);
+- the overflow fallback (|K| or |E_K| over capacity -> exact recompute) is a
+  ``lax.cond`` so the decision stays on device;
+- with ``sharded=True`` callers pjit this function over a mesh with edge
+  arrays sharded along the flattened mesh axes; node vectors stay replicated
+  (the TPU analogue of Pregel's vertex-cut message exchange — the
+  per-iteration segment-sum lowers to a local partial sum + one all-reduce).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.graph import GraphState
+from repro.core.hotset import select_hot_set
+from repro.core.pagerank import (build_summary, pagerank,
+                                 summarized_pagerank)
+
+
+class QueryStepStats(NamedTuple):
+    num_hot: jax.Array
+    num_kr: jax.Array
+    num_kn: jax.Array
+    num_kdelta: jax.Array
+    num_ek: jax.Array
+    num_eb: jax.Array
+    iterations: jax.Array
+    used_fallback: jax.Array  # bool
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "hot_node_capacity", "hot_edge_capacity", "beta", "num_iters", "tol",
+        "n", "delta_hop_cap", "degree_mode", "expand_both",
+    ),
+)
+def approximate_query_step(
+    state: GraphState,
+    ranks_prev: jax.Array,
+    deg_prev: jax.Array,
+    active_prev: jax.Array,
+    r: jax.Array,
+    delta: jax.Array,
+    *,
+    hot_node_capacity: int,
+    hot_edge_capacity: int,
+    beta: float = 0.85,
+    num_iters: int = 30,
+    tol: float = 0.0,
+    n: int = 1,
+    delta_hop_cap: int = 4,
+    degree_mode: str = "out",
+    expand_both: bool = False,
+) -> Tuple[jax.Array, QueryStepStats]:
+    """One summarized-PageRank query over the current graph state."""
+    hot, hstats = select_hot_set(
+        state, deg_prev, ranks_prev, r, delta,
+        active_prev=active_prev, n=n, delta_hop_cap=delta_hop_cap,
+        degree_mode=degree_mode, expand_both=expand_both,
+    )
+    summary = build_summary(
+        state, ranks_prev, hot,
+        hot_node_capacity=hot_node_capacity,
+        hot_edge_capacity=hot_edge_capacity,
+    )
+
+    # No lax.cond here: the overflow fallback is almost never taken, and a
+    # cond bars XLA from fusing across the branch boundary (and forces extra
+    # buffer copies for the captured state).  The summarized result is
+    # computed unconditionally; when ``used_fallback`` is set the caller
+    # discards it and runs the exact recompute (engine does this on host).
+    ranks, iters = summarized_pagerank(
+        summary, ranks_prev, beta=beta, num_iters=num_iters, tol=tol
+    )
+    stats = QueryStepStats(
+        num_hot=hstats.num_hot,
+        num_kr=hstats.num_kr,
+        num_kn=hstats.num_kn,
+        num_kdelta=hstats.num_kdelta,
+        num_ek=summary.num_ek,
+        num_eb=summary.num_eb,
+        iterations=iters,
+        used_fallback=summary.overflow,
+    )
+    return ranks, stats

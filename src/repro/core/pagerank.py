@@ -1,0 +1,287 @@
+"""PageRank power method — exact and VeilGraph-summarized versions.
+
+Faithful to the paper (§2, §3.1):
+
+- vertex-centric formulation: each vertex u emits ``rank(u)/d_out(u)`` along
+  every out-edge; a vertex v sets ``rank(v) = (1-β) + β·Σ incoming`` (the
+  Gelly-style normalization the paper describes — the (1-β) teleport term is
+  *not* divided by |V| and dangling mass is not redistributed; both are
+  available as beyond-paper options).
+- the summarized version runs the same update *only for vertices in K*, with
+  the frozen big-vertex contribution ``b_in`` added each iteration and all
+  non-K ranks carried over unchanged.
+
+The summarized iteration runs in a *compacted* space: hot edges are gathered
+into a bounded ``hot_edge_capacity`` buffer and hot nodes are relabelled to
+``[0, hot_node_capacity)``, so per-iteration cost is O(|E_K| + |K|) — this
+is the paper's O(K) claim realized with XLA static shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.graph import GraphState, inv_out_degree
+
+
+# --------------------------------------------------------------------------
+# Exact PageRank over the full graph
+# --------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_iters", "beta", "tol", "teleport_by_n", "dangling"),
+)
+def pagerank(
+    state: GraphState,
+    init_ranks: Optional[jax.Array] = None,
+    *,
+    beta: float = 0.85,
+    num_iters: int = 30,
+    tol: float = 0.0,
+    teleport_by_n: bool = False,
+    dangling: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Full power-method PageRank.
+
+    Returns ``(ranks f32[N_cap], iterations_run)``.  With ``tol > 0`` the
+    loop exits early once ``‖r_t − r_{t−1}‖₁ < tol`` (bounded by num_iters).
+    """
+    n_cap = state.node_capacity
+    active = state.node_active
+    n_active = jnp.maximum(state.num_active_nodes().astype(jnp.float32), 1.0)
+    inv_deg = inv_out_degree(state)
+    mask = state.edge_mask()
+    teleport = jnp.where(teleport_by_n, (1.0 - beta) / n_active, 1.0 - beta)
+
+    if init_ranks is None:
+        r0 = jnp.where(active, jnp.where(teleport_by_n, 1.0 / n_active, 1.0), 0.0)
+    else:
+        r0 = init_ranks
+
+    edge_w = jnp.where(mask, inv_deg[state.src], 0.0)
+
+    def body(carry):
+        i, r, _ = carry
+        contrib = r[state.src] * edge_w
+        incoming = jax.ops.segment_sum(contrib, state.dst, num_segments=n_cap)
+        if dangling:
+            dangle = jnp.sum(jnp.where(active & (state.out_deg == 0), r, 0.0))
+            incoming = incoming + dangle / n_active
+        new_r = jnp.where(active, teleport + beta * incoming, 0.0)
+        delta = jnp.sum(jnp.abs(new_r - r))
+        return i + 1, new_r, delta
+
+    def cond(carry):
+        i, _, delta = carry
+        return (i < num_iters) & (delta > tol)
+
+    i, r, _ = jax.lax.while_loop(cond, body, (jnp.int32(0), r0, jnp.float32(jnp.inf)))
+    return r, i
+
+
+# --------------------------------------------------------------------------
+# Summarized PageRank over the hot set (the paper's contribution)
+# --------------------------------------------------------------------------
+
+
+def compact_indices(mask: jax.Array, size: int, *, rows: int = 64) -> jax.Array:
+    """Indices of True entries of ``mask``, compacted into int32[size].
+
+    Order-scrambled position assignment via a column-major prefix sum:
+    positions are ``col_off[j] + (#True in column j over rows < i)``, which
+    is a bijection onto [0, popcount).  Two design constraints drive the
+    layout:
+
+    - the lax.scan runs over the SHORT ``rows`` axis (64 trips) with the
+      long axis as the carry, so under GSPMD the carry stays sharded and
+      the partitioner never all-gathers the edge stream (§Perf iteration
+      V1: the previous layout scanned 2^21 rows of 512 and made GSPMD
+      replicate a 4.3 GB operand per trip — 9.0e15 bytes of HBM traffic
+      on the pod-scale veilgraph cell);
+    - column offsets need an exclusive cumsum over the (still sharded)
+      column-totals vector; a second short-scan level reduces it to a
+      cumsum over len/``rows``² elements, which is cheap and local.
+
+    Unused slots hold ``len(mask)`` (out-of-bounds sentinel: gathers clip,
+    scatters with mode="drop" ignore).  If more than ``size`` entries are
+    set, an arbitrary subset of exactly ``size`` survives — callers detect
+    overflow from the mask popcount.
+    """
+    e = mask.shape[0]
+
+    def col_prefix(m2):
+        """scan over rows: per-element prefix count within its column +
+        column totals."""
+        def body(carry, row):
+            return carry + row, carry
+        return jax.lax.scan(body, jnp.zeros(m2.shape[1], jnp.int32), m2)
+
+    cols = max((e + rows - 1) // rows, 1)
+    e_pad = rows * cols
+    m = jnp.pad(mask, (0, e_pad - e)) if e_pad != e else mask
+    m2 = m.reshape(rows, cols).astype(jnp.int32)
+    col_tot, pos_in_col = col_prefix(m2)               # (cols,), (rows, cols)
+
+    # exclusive cumsum of col_tot via a second short-scan level
+    cols2 = max((cols + rows - 1) // rows, 1)
+    pad2 = rows * cols2 - cols
+    ct = jnp.pad(col_tot, (0, pad2)) if pad2 else col_tot
+    ct2 = ct.reshape(rows, cols2)
+    grp_tot, pos_in_grp = col_prefix(ct2)              # (cols2,), (rows, cols2)
+    grp_off = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(grp_tot)[:-1]])
+    col_off = (grp_off[None, :] + pos_in_grp).reshape(-1)[:cols]
+
+    pos = (col_off[None, :] + pos_in_col).reshape(-1)
+    tgt = jnp.where(m & (pos < size), pos, size)
+    return jnp.full((size,), e, jnp.int32).at[tgt].set(
+        jnp.arange(e_pad, dtype=jnp.int32), mode="drop"
+    )
+
+
+class SummaryBuffers(NamedTuple):
+    """Compacted summary graph G = (K ∪ {B}, E_K ∪ E_B) — static capacities.
+
+    ``hot_ids[i]``   — global id of the i-th hot vertex (i < num_hot)
+    ``ek_src/dst``   — *local* endpoints of E_K edges (i < num_ek)
+    ``ek_w``         — val((u,v)) = 1/d_out(u) at summary-build time
+    ``b_in``         — per-hot-vertex frozen big-vertex contribution
+                       b_in[z] = Σ_{(w,z): w∉K} rank(w)/d_out(w)
+    ``overflow``     — True if |K| or |E_K| exceeded a capacity; the caller
+                       must fall back to exact recomputation.
+    """
+
+    hot_ids: jax.Array   # int32[K_cap]
+    num_hot: jax.Array   # int32
+    ek_src: jax.Array    # int32[H_cap] (local ids)
+    ek_dst: jax.Array    # int32[H_cap] (local ids)
+    ek_w: jax.Array      # f32[H_cap]
+    num_ek: jax.Array    # int32
+    b_in: jax.Array      # f32[K_cap]
+    num_eb: jax.Array    # int32  (size of E_B, for the paper's edge-ratio stat)
+    overflow: jax.Array  # bool
+
+
+@functools.partial(
+    jax.jit, static_argnames=("hot_node_capacity", "hot_edge_capacity")
+)
+def build_summary(
+    state: GraphState,
+    ranks_prev: jax.Array,
+    hot_mask: jax.Array,
+    *,
+    hot_node_capacity: int,
+    hot_edge_capacity: int,
+) -> SummaryBuffers:
+    """Construct the big-vertex summary (§3.1) into bounded buffers."""
+    n_cap = state.node_capacity
+    k_cap = hot_node_capacity
+    h_cap = hot_edge_capacity
+    mask = state.edge_mask()
+    inv_deg = inv_out_degree(state)
+
+    src_hot = hot_mask[state.src]
+    dst_hot = hot_mask[state.dst]
+    ek_mask = mask & src_hot & dst_hot
+    eb_mask = mask & (~src_hot) & dst_hot
+
+    num_hot = jnp.sum(hot_mask.astype(jnp.int32))
+    num_ek = jnp.sum(ek_mask.astype(jnp.int32))
+    num_eb = jnp.sum(eb_mask.astype(jnp.int32))
+    overflow = (num_hot > k_cap) | (num_ek > h_cap)
+
+    # ---- hot-vertex relabelling: global id -> local id ------------------
+    # Padding entries hold an out-of-bounds sentinel: gathers clip (and are
+    # masked by local_valid), scatters use mode="drop" so padding never
+    # clobbers a real slot.
+    hot_ids = compact_indices(hot_mask, k_cap)
+    local_valid = jnp.arange(k_cap, dtype=jnp.int32) < num_hot
+    local_of = jnp.zeros((n_cap,), jnp.int32)
+    local_of = local_of.at[hot_ids].set(
+        jnp.arange(k_cap, dtype=jnp.int32), mode="drop"
+    )
+
+    # ---- frozen big-vertex contribution (computed once per query) -------
+    # b_in_global[z] = Σ_{(w,z) ∈ E_B} rank_prev(w) / d_out(w)
+    # node-side precompute keeps this to a single O(E) gather
+    emit = ranks_prev * inv_deg
+    eb_contrib = jnp.where(eb_mask, emit[state.src], 0.0)
+    b_in_global = jax.ops.segment_sum(eb_contrib, state.dst, num_segments=n_cap)
+    b_in = jnp.where(local_valid, b_in_global[hot_ids], 0.0)
+
+    # ---- compact E_K into the bounded buffer ----------------------------
+    ek_idx = compact_indices(ek_mask, h_cap)
+    ek_valid = jnp.arange(h_cap, dtype=jnp.int32) < jnp.minimum(num_ek, h_cap)
+    gsrc = state.src[ek_idx]
+    gdst = state.dst[ek_idx]
+    # val((u,v)) = 1/d_out(u) *including* edges that leave K (paper §3.1:
+    # discarded out-edges still count in the emitting degree).
+    ek_w = jnp.where(ek_valid, inv_deg[gsrc], 0.0)
+    ek_src = jnp.where(ek_valid, local_of[gsrc], 0)
+    ek_dst = jnp.where(ek_valid, local_of[gdst], 0)
+
+    return SummaryBuffers(
+        hot_ids=hot_ids,
+        num_hot=num_hot,
+        ek_src=ek_src,
+        ek_dst=ek_dst,
+        ek_w=ek_w,
+        num_ek=num_ek,
+        b_in=b_in,
+        num_eb=num_eb,
+        overflow=overflow,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_iters", "beta", "tol")
+)
+def summarized_pagerank(
+    summary: SummaryBuffers,
+    ranks_prev: jax.Array,
+    *,
+    beta: float = 0.85,
+    num_iters: int = 30,
+    tol: float = 0.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Power iteration restricted to the summary graph (§3.1).
+
+    Per iteration, for every hot vertex z (local id):
+        rank(z) = (1-β) + β·( Σ_{(u,z)∈E_K} rank(u)·val((u,z)) + b_in(z) )
+    Cold ranks are carried over unchanged.  Returns the *global* rank vector
+    and the number of iterations run.
+    """
+    k_cap = summary.hot_ids.shape[0]
+    local_valid = jnp.arange(k_cap, dtype=jnp.int32) < summary.num_hot
+    r_local0 = jnp.where(local_valid, ranks_prev[summary.hot_ids], 0.0)
+
+    def body(carry):
+        i, r, _ = carry
+        contrib = r[summary.ek_src] * summary.ek_w
+        incoming = jax.ops.segment_sum(
+            contrib, summary.ek_dst, num_segments=k_cap
+        )
+        new_r = jnp.where(
+            local_valid, (1.0 - beta) + beta * (incoming + summary.b_in), 0.0
+        )
+        delta = jnp.sum(jnp.abs(new_r - r))
+        return i + 1, new_r, delta
+
+    def cond(carry):
+        i, _, delta = carry
+        return (i < num_iters) & (delta > tol)
+
+    i, r_local, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), r_local0, jnp.float32(jnp.inf))
+    )
+
+    # scatter hot results back into the global vector; padding entries of
+    # hot_ids are out of bounds and dropped.
+    ranks = ranks_prev.at[summary.hot_ids].set(r_local, mode="drop")
+    return ranks, i

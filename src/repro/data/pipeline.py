@@ -1,0 +1,109 @@
+"""Synthetic token data pipeline: sharded host loader with bounded prefetch.
+
+Production shape: each host generates/loads only its addressable slice of the
+global batch (process-sharded), a background thread keeps a bounded queue of
+device-ready batches (prefetch hides host latency and is the first line of
+straggler mitigation), and the iterator is deterministic in (seed, step) so a
+restarted job resumes mid-epoch without data skew.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    # synthetic LM task: noisy copy of a lag-k markov stream (learnable)
+    lag: int = 2
+    noise: float = 0.05
+
+
+class SyntheticLMData:
+    """Deterministic-per-step synthetic LM batches.
+
+    The task is a lag-k repeat-with-noise language: predictable enough that a
+    few hundred steps of a ~100M model show a clearly decreasing loss (used
+    by examples/train_lm.py), random enough not to be trivial.
+    """
+
+    def __init__(self, cfg: DataConfig, *, host_batch: Optional[int] = None):
+        self.cfg = cfg
+        self.host_batch = host_batch or max(
+            cfg.global_batch // jax.process_count(), 1)
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        cfg = self.cfg
+        rng = np.random.default_rng(
+            (cfg.seed * 1_000_003 + step) * (jax.process_index() + 1))
+        b, s = self.host_batch, cfg.seq_len
+        base = rng.integers(0, cfg.vocab_size, size=(b, s + cfg.lag),
+                            dtype=np.int64)
+        # token t copies token t-lag with prob (1-noise)
+        copy = rng.random((b, s + cfg.lag)) > cfg.noise
+        for t in range(cfg.lag, s + cfg.lag):
+            base[:, t] = np.where(copy[:, t], base[:, t - cfg.lag], base[:, t])
+        tokens = base[:, : s].astype(np.int32)
+        labels = base[:, 1: s + 1].astype(np.int32)
+        return {"tokens": tokens, "labels": labels}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class Prefetcher:
+    """Bounded background prefetch queue over any batch iterator."""
+
+    def __init__(self, it: Iterator[Any], depth: int = 2):
+        self._it = it
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._err: Optional[BaseException] = None
+        self._done = False
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _fill(self):
+        try:
+            for item in self._it:
+                self._q.put(item)
+                if self._done:
+                    return
+        except BaseException as e:
+            self._err = e
+        finally:
+            self._q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is None:
+            if self._err:
+                raise self._err
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._done = True
+
+
+def shard_batch(batch: Dict[str, np.ndarray], shardings: Dict[str, Any]):
+    """Place a host batch onto devices with the given shardings."""
+    return {
+        k: jax.device_put(v, shardings[k]) if k in shardings else v
+        for k, v in batch.items()
+    }

@@ -1,0 +1,3 @@
+from repro.graph.graph import (GraphState, add_edges, compact, empty,
+                               from_edges, inv_out_degree, recompute_degrees,
+                               remove_edges_by_slot)

@@ -1,0 +1,223 @@
+"""Device-resident streaming graph state.
+
+The TPU adaptation of VeilGraph's mutable Flink graph: a padded COO edge
+buffer with *static* capacities.  Streaming edge additions/removals are
+functional scatters into the preallocated buffers (the graph analogue of a
+KV cache), so every update and every query step is jit-compatible.
+
+Layout
+------
+- ``src``/``dst``: int32[edge_capacity] COO endpoints.  Slots at index >=
+  ``num_edges`` are padding; padding slots hold ``0`` and are excluded by
+  ``edge_mask()``.
+- ``edge_alive``: bool[edge_capacity] — False for removed edges (removals are
+  tombstones; the slot is not reused until ``compact`` is called host-side).
+- ``out_deg``/``in_deg``: int32[node_capacity], maintained incrementally.
+- ``node_active``: a node is active once it has appeared in any edge.
+
+All graph-level reductions mask with ``edge_mask`` so padding and tombstones
+never contribute.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class GraphState(NamedTuple):
+    """Padded COO graph; a JAX pytree (NamedTuple of arrays)."""
+
+    src: jax.Array          # int32[E_cap]
+    dst: jax.Array          # int32[E_cap]
+    edge_alive: jax.Array   # bool[E_cap]  (False => tombstoned removal)
+    num_edges: jax.Array    # int32 scalar: high-water mark of used slots
+    out_deg: jax.Array      # int32[N_cap]
+    in_deg: jax.Array       # int32[N_cap]
+    node_active: jax.Array  # bool[N_cap]
+
+    # ---- static-shape helpers -------------------------------------------
+    @property
+    def node_capacity(self) -> int:
+        return self.out_deg.shape[0]
+
+    @property
+    def edge_capacity(self) -> int:
+        return self.src.shape[0]
+
+    def edge_mask(self) -> jax.Array:
+        """bool[E_cap]: True for live (non-padding, non-tombstone) edges."""
+        in_use = jnp.arange(self.edge_capacity, dtype=jnp.int32) < self.num_edges
+        return in_use & self.edge_alive
+
+    def num_live_edges(self) -> jax.Array:
+        return jnp.sum(self.edge_mask().astype(jnp.int32))
+
+    def num_active_nodes(self) -> jax.Array:
+        return jnp.sum(self.node_active.astype(jnp.int32))
+
+    def total_deg(self) -> jax.Array:
+        return self.out_deg + self.in_deg
+
+
+def empty(node_capacity: int, edge_capacity: int) -> GraphState:
+    """An empty graph with the given static capacities."""
+    return GraphState(
+        src=jnp.zeros((edge_capacity,), jnp.int32),
+        dst=jnp.zeros((edge_capacity,), jnp.int32),
+        edge_alive=jnp.ones((edge_capacity,), bool),
+        num_edges=jnp.zeros((), jnp.int32),
+        out_deg=jnp.zeros((node_capacity,), jnp.int32),
+        in_deg=jnp.zeros((node_capacity,), jnp.int32),
+        node_active=jnp.zeros((node_capacity,), bool),
+    )
+
+
+def from_edges(
+    src: np.ndarray,
+    dst: np.ndarray,
+    node_capacity: int,
+    edge_capacity: int,
+) -> GraphState:
+    """Build a GraphState from host edge arrays (initial graph G)."""
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+    if src.shape != dst.shape or src.ndim != 1:
+        raise ValueError("src/dst must be 1-D arrays of equal length")
+    m = src.shape[0]
+    if m > edge_capacity:
+        raise ValueError(f"{m} edges exceed edge_capacity={edge_capacity}")
+    if m and (src.max() >= node_capacity or dst.max() >= node_capacity):
+        raise ValueError("node id exceeds node_capacity")
+
+    src_pad = np.zeros((edge_capacity,), np.int32)
+    dst_pad = np.zeros((edge_capacity,), np.int32)
+    src_pad[:m] = src
+    dst_pad[:m] = dst
+    out_deg = np.zeros((node_capacity,), np.int32)
+    in_deg = np.zeros((node_capacity,), np.int32)
+    np.add.at(out_deg, src, 1)
+    np.add.at(in_deg, dst, 1)
+    node_active = (out_deg + in_deg) > 0
+    return GraphState(
+        src=jnp.asarray(src_pad),
+        dst=jnp.asarray(dst_pad),
+        edge_alive=jnp.ones((edge_capacity,), bool),
+        num_edges=jnp.asarray(m, jnp.int32),
+        out_deg=jnp.asarray(out_deg),
+        in_deg=jnp.asarray(in_deg),
+        node_active=jnp.asarray(node_active),
+    )
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def add_edges(state: GraphState, new_src: jax.Array, new_dst: jax.Array) -> GraphState:
+    """Append a fixed-size chunk of edges.
+
+    ``new_src``/``new_dst`` have a *static* chunk length (the stream chunk
+    size), so this compiles once per chunk size.  Slots past
+    ``edge_capacity`` are silently dropped (callers check ``has_capacity``
+    first; the engine's BeforeUpdates stage enforces it).
+    """
+    k = new_src.shape[0]
+    e_cap = state.edge_capacity
+    base = state.num_edges
+    slots = base + jnp.arange(k, dtype=jnp.int32)
+    ok = slots < e_cap
+    slots_c = jnp.minimum(slots, e_cap - 1)
+
+    # Scatter endpoints; where !ok keep the previous value.
+    src = state.src.at[slots_c].set(jnp.where(ok, new_src, state.src[slots_c]))
+    dst = state.dst.at[slots_c].set(jnp.where(ok, new_dst, state.dst[slots_c]))
+    alive = state.edge_alive.at[slots_c].set(
+        jnp.where(ok, True, state.edge_alive[slots_c])
+    )
+
+    one = jnp.where(ok, 1, 0).astype(jnp.int32)
+    out_deg = state.out_deg.at[new_src].add(one)
+    in_deg = state.in_deg.at[new_dst].add(one)
+    node_active = state.node_active.at[new_src].set(
+        state.node_active[new_src] | (one > 0)
+    )
+    node_active = node_active.at[new_dst].set(node_active[new_dst] | (one > 0))
+
+    num_edges = jnp.minimum(base + k, e_cap).astype(jnp.int32)
+    return GraphState(src, dst, alive, num_edges, out_deg, in_deg, node_active)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def remove_edges_by_slot(state: GraphState, slots: jax.Array) -> GraphState:
+    """Tombstone the edges stored at ``slots`` (int32[k]); -1 entries are no-ops.
+
+    Beyond-paper: the paper restricts its evaluation to edge additions (e+)
+    and leaves removals to future work; the substrate supports them so the
+    engine's stream model is complete.
+    """
+    valid = (slots >= 0) & (slots < state.edge_capacity)
+    slots_c = jnp.clip(slots, 0, state.edge_capacity - 1)
+    was_alive = state.edge_alive[slots_c] & valid & (
+        slots_c < state.num_edges
+    )
+    alive = state.edge_alive.at[slots_c].set(
+        jnp.where(was_alive, False, state.edge_alive[slots_c])
+    )
+    dec = jnp.where(was_alive, 1, 0).astype(jnp.int32)
+    out_deg = state.out_deg.at[state.src[slots_c]].add(-dec)
+    in_deg = state.in_deg.at[state.dst[slots_c]].add(-dec)
+    return state._replace(edge_alive=alive, out_deg=out_deg, in_deg=in_deg)
+
+
+def find_edge_slots(state: GraphState, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+    """Host-side lookup of buffer slots holding the given edges (-1 if absent)."""
+    s = np.asarray(jax.device_get(state.src))
+    d = np.asarray(jax.device_get(state.dst))
+    alive = np.asarray(jax.device_get(state.edge_mask()))
+    key = s.astype(np.int64) * (2**32) + d.astype(np.int64)
+    lut = {}
+    for i in np.nonzero(alive)[0]:
+        lut.setdefault(key[i], i)
+    q = np.asarray(src, np.int64) * (2**32) + np.asarray(dst, np.int64)
+    return np.asarray([lut.get(k, -1) for k in q], np.int32)
+
+
+@jax.jit
+def recompute_degrees(state: GraphState) -> Tuple[jax.Array, jax.Array]:
+    """O(E) degree recomputation — the oracle for the incremental counters."""
+    m = state.edge_mask().astype(jnp.int32)
+    n = state.node_capacity
+    out_deg = jax.ops.segment_sum(m, state.src, num_segments=n)
+    in_deg = jax.ops.segment_sum(m, state.dst, num_segments=n)
+    return out_deg.astype(jnp.int32), in_deg.astype(jnp.int32)
+
+
+@jax.jit
+def inv_out_degree(state: GraphState) -> jax.Array:
+    """f32[N_cap]: 1/d_out(u) with 0 for dangling/inactive nodes."""
+    d = state.out_deg.astype(jnp.float32)
+    return jnp.where(d > 0, 1.0 / jnp.maximum(d, 1.0), 0.0)
+
+
+def compact(state: GraphState) -> GraphState:
+    """Host-side rebuild dropping tombstones (reclaims removed-edge slots)."""
+    mask = np.asarray(jax.device_get(state.edge_mask()))
+    s = np.asarray(jax.device_get(state.src))[mask]
+    d = np.asarray(jax.device_get(state.dst))[mask]
+    return from_edges(s, d, state.node_capacity, state.edge_capacity)
+
+
+def to_networkx(state: GraphState):
+    """Debug/test helper: export live edges to a networkx DiGraph."""
+    import networkx as nx
+
+    mask = np.asarray(jax.device_get(state.edge_mask()))
+    s = np.asarray(jax.device_get(state.src))[mask]
+    d = np.asarray(jax.device_get(state.dst))[mask]
+    g = nx.DiGraph()
+    active = np.nonzero(np.asarray(jax.device_get(state.node_active)))[0]
+    g.add_nodes_from(active.tolist())
+    g.add_edges_from(zip(s.tolist(), d.tolist()))
+    return g

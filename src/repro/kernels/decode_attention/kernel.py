@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: GQA decode attention over a long KV cache.
+
+One new token per sequence attends to an S-deep cache (decode_32k /
+long_500k shapes).  Grid: (batch·kv_heads, kv_tiles), kv axis sequential —
+the (acc, m, l) state for the G grouped queries persists in VMEM scratch
+while KV tiles stream HBM -> VMEM.  This is the flash-decoding layout; the
+work per tile is a (G × hd) @ (hd × kvb) MXU product, so the kernel is
+bandwidth-bound by the cache stream, exactly matching the roofline table's
+memory-dominated decode rows.
+
+Slots at index >= cache_len are masked (linear caches); ring caches
+(sliding window) pass cache_len == cache size with every slot valid.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, out_ref,
+                   acc_ref, m_ref, l_ref, *, kv_block: int, scale: float):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+    cache_len = len_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (G, hd)
+    k = k_ref[0].astype(jnp.float32)                  # (kvb, hd)
+    v = v_ref[0].astype(jnp.float32)                  # (kvb, vd)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))   # (G, kvb)
+    k_pos = ki * kv_block + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    s = jnp.where(k_pos < cache_len, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(p, v)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        out = jnp.where(l > 0, acc_ref[...] / jnp.maximum(l, 1e-30), 0.0)
+        out_ref[0] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("kv_block", "interpret"))
+def decode_attention_kernel(
+    q: jax.Array,          # (B, 1, H, hd) — one new token
+    k_cache: jax.Array,    # (B, S, KV, hd)
+    v_cache: jax.Array,    # (B, S, KV, vd)
+    cache_len: jax.Array,  # () int32 — valid slots
+    *,
+    kv_block: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    b, _, h, hd = q.shape
+    s, kvh = k_cache.shape[1], k_cache.shape[2]
+    vd = v_cache.shape[-1]
+    groups = h // kvh
+    scale = hd ** -0.5
+
+    kv_block = min(kv_block, s)
+    s_p = ((s + kv_block - 1) // kv_block) * kv_block
+    if s_p != s:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, s_p - s), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, s_p - s), (0, 0), (0, 0)))
+    nk = s_p // kv_block
+
+    qg = q[:, 0].reshape(b, kvh, groups, hd).reshape(b * kvh, groups, hd)
+    kg = k_cache.transpose(0, 2, 1, 3).reshape(b * kvh, s_p, hd)
+    vg = v_cache.transpose(0, 2, 1, 3).reshape(b * kvh, s_p, vd)
+    clen = jnp.minimum(jnp.asarray(cache_len, jnp.int32),
+                       jnp.int32(s)).reshape(1)
+
+    kernel = functools.partial(_decode_kernel, kv_block=kv_block, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * kvh, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),             # cache_len
+            pl.BlockSpec((1, groups, hd), lambda g, j: (g, 0, 0)),
+            pl.BlockSpec((1, kv_block, hd), lambda g, j: (g, j, 0)),
+            pl.BlockSpec((1, kv_block, vd), lambda g, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, groups, vd), lambda g, j: (g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kvh, groups, vd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((groups, vd), jnp.float32),
+            pltpu.VMEM((groups, 1), jnp.float32),
+            pltpu.VMEM((groups, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(clen, qg, kg, vg)
+
+    return out.reshape(b, kvh, groups, vd).reshape(b, 1, h, vd)

@@ -1,0 +1,12 @@
+"""jit'd wrapper for the decode-attention kernel (dtype/shape plumbing)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention_kernel
+
+
+def decode_attention_op(q, k_cache, v_cache, cache_len, *, interpret=True):
+    return decode_attention_kernel(q, k_cache, v_cache, cache_len,
+                                   interpret=interpret)

@@ -1,0 +1,2 @@
+"""Pure-jnp oracle for the decode attention kernel."""
+from repro.models.layers import decode_attention as decode_attention_ref  # noqa: F401

@@ -1,0 +1,146 @@
+"""Pallas TPU kernel: blocked online-softmax attention (forward).
+
+Grid: (batch·kv_heads, q_tiles, kv_tiles) with the kv axis sequential
+("arbitrary") so the (acc, m, l) running state lives in VMEM scratch across
+kv steps — the canonical TPU flash-attention layout.  GQA is handled by
+giving each kv head its whole query group (G, q_block, hd) per tile, so the
+MXU sees (G·q_block × hd) @ (hd × kv_block) products with 128-aligned dims.
+
+Block shapes are BlockSpec'd so per-step VMEM is:
+  q tile (G·qb × hd) + k/v tiles (kvb × hd) + scores (G·qb × kvb) f32
+  ≈ (8·128×128 + 2·512×128 + 8·128×512)·4B ≈ 3.1 MB   « 16 MB VMEM.
+Causal/sliding-window masking is applied from tile coordinates; tiles are
+not skipped (correct but redundant for causal — tile skipping is a
+documented §Perf follow-up, the interpret-mode container cannot measure it).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, out_ref, acc_ref, m_ref, l_ref, *,
+                  q_block: int, kv_block: int, groups: int, scale: float,
+                  causal: bool, window, kv_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale        # (G*qb, hd)
+    k = k_ref[0].astype(jnp.float32)                # (kvb, hd)
+    v = v_ref[0].astype(jnp.float32)                # (kvb, vd)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G*qb, kvb)
+
+    # row index within the fused (G, qb) dim maps to qb position
+    row = jax.lax.broadcasted_iota(jnp.int32, (groups * q_block, kv_block), 0)
+    q_pos = qi * q_block + row % q_block
+    k_pos = ki * kv_block + jax.lax.broadcasted_iota(
+        jnp.int32, (groups * q_block, kv_block), 1)
+    mask = k_pos < kv_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(p, v)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        out = jnp.where(l > 0, acc_ref[...] / jnp.maximum(l, 1e-30), 0.0)
+        out_ref[0] = out.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_block", "kv_block", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,          # (B, Sq, H, hd)
+    k: jax.Array,          # (B, Skv, KV, hd)
+    v: jax.Array,          # (B, Skv, KV, vd)
+    *,
+    causal: bool = True,
+    window=None,
+    q_block: int = 128,
+    kv_block: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    vd = v.shape[-1]
+    assert h % kvh == 0
+    groups = h // kvh
+    scale = hd ** -0.5
+
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, skv)
+    sq_p = ((sq + q_block - 1) // q_block) * q_block
+    skv_p = ((skv + kv_block - 1) // kv_block) * kv_block
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    if skv_p != skv:
+        k = jnp.pad(k, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+
+    nq, nk = sq_p // q_block, skv_p // kv_block
+    # layout: (B·KV, nq, G·q_block, hd) queries; (B·KV, nk, kv_block, hd) keys
+    qg = q.reshape(b, sq_p, kvh, groups, hd).transpose(0, 2, 3, 1, 4)
+    qg = qg.reshape(b * kvh, groups, nq, q_block, hd).transpose(0, 2, 1, 3, 4)
+    qg = qg.reshape(b * kvh, nq, groups * q_block, hd)
+    kg = k.transpose(0, 2, 1, 3).reshape(b * kvh, skv_p, hd)
+    vg = v.transpose(0, 2, 1, 3).reshape(b * kvh, skv_p, vd)
+
+    kernel = functools.partial(
+        _flash_kernel, q_block=q_block, kv_block=kv_block, groups=groups,
+        scale=scale, causal=causal, window=window, kv_len=skv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * kvh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, None, groups * q_block, hd),
+                         lambda g, i, j: (g, i, 0, 0)),
+            pl.BlockSpec((1, kv_block, hd), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, kv_block, vd), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, None, groups * q_block, vd),
+                               lambda g, i, j: (g, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kvh, nq, groups * q_block, vd),
+                                       q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((groups * q_block, vd), jnp.float32),
+            pltpu.VMEM((groups * q_block, 1), jnp.float32),
+            pltpu.VMEM((groups * q_block, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qg, kg, vg)
+
+    # (B·KV, nq, G·qb, vd) -> (B, Sq, H, vd)
+    out = out.reshape(b, kvh, nq, groups, q_block, vd)
+    out = out.transpose(0, 2, 4, 1, 3, 5).reshape(b, sq_p, h, vd)
+    return out[:, :sq]

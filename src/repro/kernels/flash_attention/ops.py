@@ -1,0 +1,12 @@
+"""jit'd wrapper selecting the Pallas flash kernel (TPU) or the jnp path."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention
+
+
+def flash_attention_op(q, k, v, *, causal=True, window=None, interpret=True):
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           interpret=interpret)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the flash attention kernel: the blocked exact
+online-softmax reference in models/layers (itself validated against a naive
+full-softmax oracle in tests/test_models-era checks)."""
+from repro.models.layers import _blocked_attention_ref
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    hd = q.shape[-1]
+    return _blocked_attention_ref(
+        q, k, v, causal=causal, window=window, q_offset=0, kv_offset=0,
+        kv_valid_len=None, q_block=128, kv_block=256,
+        softmax_scale=hd ** -0.5)

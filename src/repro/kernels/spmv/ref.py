@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the SpMV push kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmv_push_ref(contrib: jax.Array, dst_sorted: jax.Array,
+                  num_nodes: int) -> jax.Array:
+    """out[v] = Σ contrib[e] over edges with dst_sorted[e] == v."""
+    return jax.ops.segment_sum(contrib, dst_sorted, num_segments=num_nodes,
+                               indices_are_sorted=True)

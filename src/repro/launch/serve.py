@@ -1,0 +1,55 @@
+"""Serving driver: batched requests against a smoke (or full, on TPU) model.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi_9b --smoke \\
+      --requests 8 --prompt-len 32 --new-tokens 16
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import ALIASES, get_config, get_smoke_config
+from repro.models.params import init_params
+from repro.serve.engine import Request, ServingEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi_9b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    arch = ALIASES.get(args.arch, args.arch)
+    cfg = get_smoke_config(arch) if args.smoke else get_config(arch)
+    print(f"serving {cfg.name} with {args.requests} requests × "
+          f"{args.new_tokens} new tokens, {args.slots} slots")
+
+    rng = np.random.default_rng(args.seed)
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    engine = ServingEngine(cfg, params, batch_slots=args.slots,
+                           max_len=args.max_len)
+    reqs = [
+        Request(prompt=rng.integers(0, cfg.vocab_size, args.prompt_len,
+                                    dtype=np.int32),
+                max_new_tokens=args.new_tokens, id=i)
+        for i in range(args.requests)
+    ]
+    stats = engine.run(reqs)
+    done = sum(r.done for r in reqs)
+    print(f"done: {done}/{len(reqs)} requests, {stats.tokens_out} tokens, "
+          f"prefill {stats.prefill_s:.2f}s decode {stats.decode_s:.2f}s "
+          f"({stats.tokens_per_s:.1f} tok/s)")
+    return stats
+
+
+if __name__ == "__main__":
+    main()

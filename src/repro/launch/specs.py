@@ -1,0 +1,198 @@
+"""Input specs + shardings per (architecture × shape × mesh) cell.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, no device allocation);
+``input_pspecs`` the matching PartitionSpec tree.  ``cell_spec`` bundles
+everything the dry-run needs to lower one cell: the step function, its
+abstract inputs and its in/out shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig, ShapeConfig, SHAPES
+from repro.models.params import (ParamDef, _tree_map_defs, abstract_params,
+                                 build_defs, init_params)
+from repro.models.transformer import init_cache
+from repro.sharding.rules import AxisRules, guarded_pspec
+from repro.train.optimizer import AdamWState, adamw_init
+from repro.train.step import make_prefill_step, make_serve_step, make_train_step
+
+
+def text_and_prefix_lens(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[int, int]:
+    """Split a cell's seq_len into (text tokens, frontend prefix/frames)."""
+    if cfg.frontend == "vision":
+        pref = min(cfg.frontend_len, shape.seq_len // 2)
+        return shape.seq_len - pref, pref
+    if cfg.encoder_layers > 0:
+        # half the budget to encoder frames, half to decoder tokens
+        return shape.seq_len // 2, shape.seq_len // 2
+    return shape.seq_len, 0
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    """None if the cell runs; otherwise why it is skipped (DESIGN.md table)."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return ("full quadratic attention at 524288 would need a "
+                "sub-quadratic mechanism this arch does not have")
+    return None
+
+
+def param_pspecs_guarded(cfg: ModelConfig, rules: AxisRules,
+                         sizes: Dict[str, int]):
+    return _tree_map_defs(
+        lambda path, pd: guarded_pspec(pd.shape, pd.logical, rules, sizes),
+        build_defs(cfg))
+
+
+def _cache_pspec(path: Tuple[str, ...], leaf, rules: AxisRules,
+                 sizes: Dict[str, int]) -> P:
+    """Sharding for one cache leaf, chosen by its owner key + rank.
+
+    KV caches (L,B,S,KV,hd): batch over data when divisible, else the
+    sequence dim context-parallel (guarded_pspec's used-set handles the
+    fall-through).  Mamba conv (L,B,K,C): channels over model; SSM state
+    (L,B,H,P,N): heads over model.  MLA latent (L,B,S,r): replicated rank.
+    """
+    name = path[0]
+    nd = len(leaf.shape)
+    if name in ("kv", "attn", "self", "cross"):
+        logical = ("layers", "batch", "ctx_shard", "kv_heads", None)[:nd]
+    elif name == "mla":
+        logical = ("layers", "batch", "ctx_shard", None)[:nd]
+    elif name == "ssm":
+        if nd == 4:      # conv (L,B,K,C)
+            logical = ("layers", "batch", None, "conv_dim")
+        else:            # state (L,B,H,P,N)
+            logical = ("layers", "batch", "ssm_heads", None, None)
+    else:
+        logical = (None,) * nd
+    return guarded_pspec(leaf.shape, logical, rules, sizes)
+
+
+def cache_pspecs(cache_sds, rules: AxisRules, sizes: Dict[str, int]):
+    def walk(tree, path=()):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        return _cache_pspec(path, tree, rules, sizes)
+    return walk(cache_sds)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract model inputs for one cell (ShapeDtypeStruct stand-ins)."""
+    b = shape.global_batch
+    text_len, prefix_len = text_and_prefix_lens(cfg, shape)
+    i32 = jnp.int32
+    f32 = jnp.float32
+
+    if shape.kind == "train":
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, text_len), i32),
+            "labels": jax.ShapeDtypeStruct((b, text_len), i32),
+        }
+        if cfg.frontend == "vision":
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, prefix_len, cfg.d_model), f32)
+        if cfg.encoder_layers > 0:
+            batch["frames"] = jax.ShapeDtypeStruct((b, prefix_len, cfg.d_model), f32)
+        return {"batch": batch}
+
+    if shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, text_len), i32)}
+        if cfg.frontend == "vision":
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, prefix_len, cfg.d_model), f32)
+        if cfg.encoder_layers > 0:
+            batch["frames"] = jax.ShapeDtypeStruct((b, prefix_len, cfg.d_model), f32)
+        return {"batch": batch}
+
+    # decode: one new token against a seq_len-deep cache
+    enc_len = prefix_len if cfg.encoder_layers > 0 else 0
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, b, shape.seq_len, enc_len=enc_len))
+    return {
+        "cache": cache,
+        "token": jax.ShapeDtypeStruct((b, 1), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def input_pspecs(cfg: ModelConfig, shape: ShapeConfig, specs: Dict[str, Any],
+                 rules: AxisRules, sizes: Dict[str, int]) -> Dict[str, Any]:
+    def batch_spec(sds):
+        nd = len(sds.shape)
+        logical = ("batch",) + (None,) * (nd - 1)
+        return guarded_pspec(sds.shape, logical, rules, sizes)
+
+    out: Dict[str, Any] = {}
+    if "batch" in specs:
+        out["batch"] = {k: batch_spec(v) for k, v in specs["batch"].items()}
+    if "cache" in specs:
+        out["cache"] = cache_pspecs(specs["cache"], rules, sizes)
+        out["token"] = guarded_pspec(specs["token"].shape, ("batch", None),
+                                     rules, sizes)
+        out["pos"] = P()
+    return out
+
+
+@dataclasses.dataclass
+class CellSpec:
+    """Everything needed to lower one (arch × shape) cell on a mesh."""
+    arch: str
+    shape: ShapeConfig
+    step_fn: Callable
+    args_sds: Tuple          # abstract positional args
+    in_pspecs: Tuple         # matching PartitionSpec tree
+    out_pspecs: Any          # or None to let XLA choose
+    donate: Tuple[int, ...]  # donated positional args
+
+
+def cell_spec(cfg: ModelConfig, arch: str, shape: ShapeConfig,
+              rules: AxisRules, sizes: Dict[str, int]) -> CellSpec:
+    p_sds = abstract_params(cfg)
+    p_ps = param_pspecs_guarded(cfg, rules, sizes)
+    specs = input_specs(cfg, shape)
+    in_ps = input_pspecs(cfg, shape, specs, rules, sizes)
+    text_len, prefix_len = text_and_prefix_lens(cfg, shape)
+
+    if shape.kind == "train":
+        o_sds = jax.eval_shape(adamw_init, p_sds)
+        o_ps = AdamWState(step=P(), mu=p_ps, nu=p_ps)
+        step = make_train_step(cfg, remat=True)
+        metrics_ps = {"loss": P(), "accuracy": P(), "grad_norm": P(), "lr": P()}
+        return CellSpec(arch, shape, step,
+                        (p_sds, o_sds, specs["batch"]),
+                        (p_ps, o_ps, in_ps["batch"]),
+                        (p_ps, o_ps, metrics_ps),
+                        donate=(0, 1))
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, cache_len=shape.seq_len)
+        enc_len = prefix_len if cfg.encoder_layers > 0 else 0
+        cache_sds = jax.eval_shape(
+            lambda: init_cache(cfg, shape.global_batch, shape.seq_len,
+                               enc_len=enc_len))
+        cache_ps = cache_pspecs(cache_sds, rules, sizes)
+        logits_ps = guarded_pspec((shape.global_batch, cfg.vocab_size),
+                                  ("batch", "vocab"), rules, sizes)
+        return CellSpec(arch, shape, step,
+                        (p_sds, specs["batch"]),
+                        (p_ps, in_ps["batch"]),
+                        (logits_ps, cache_ps),
+                        donate=())
+
+    # decode
+    step = make_serve_step(cfg)
+    logits_ps = guarded_pspec((shape.global_batch, cfg.vocab_size),
+                              ("batch", "vocab"), rules, sizes)
+    return CellSpec(arch, shape, step,
+                    (p_sds, specs["cache"], specs["token"], specs["pos"]),
+                    (p_ps, in_ps["cache"], in_ps["token"], in_ps["pos"]),
+                    (logits_ps, in_ps["cache"]),
+                    donate=(1,))

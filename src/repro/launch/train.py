@@ -1,0 +1,96 @@
+"""End-to-end training driver.
+
+CPU-runnable with smoke configs (``--smoke``); the same driver pjits over a
+real mesh on TPU.  Fault tolerance on by default: async checkpointing,
+resume-from-latest, straggler timing, preemption-save.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2_0_5b --smoke \\
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ALIASES, get_config, get_smoke_config
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLMData
+from repro.models.params import init_params
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault_tolerance import LoopConfig, RestartableLoop
+from repro.train.optimizer import adamw_init, cosine_schedule
+from repro.train.step import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2_0_5b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=5e-4)
+    ap.add_argument("--weight-decay", type=float, default=0.0)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    arch = ALIASES.get(args.arch, args.arch)
+    cfg = get_smoke_config(arch) if args.smoke else get_config(arch)
+    print(f"training {cfg.name}: L={cfg.num_layers} d={cfg.d_model} "
+          f"V={cfg.vocab_size}")
+
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(key, cfg)
+    opt = adamw_init(params)
+    sched = cosine_schedule(args.lr, args.warmup, args.steps)
+    step_fn = jax.jit(make_train_step(cfg, learning_rate=sched, remat=True,
+                                      weight_decay=args.weight_decay),
+                      donate_argnums=(0, 1))
+
+    # lag=1: the target mostly repeats the current input token — a strong
+    # learnable signal that shows loss decreasing within ~100 CPU steps
+    data = SyntheticLMData(DataConfig(cfg.vocab_size, args.seq, args.batch,
+                                      seed=args.seed, lag=1),
+                           host_batch=args.batch)
+    ckpt = CheckpointManager(args.ckpt_dir, keep_last_k=2)
+    loop = RestartableLoop(
+        ckpt, LoopConfig(total_steps=args.steps,
+                         checkpoint_every=args.ckpt_every,
+                         log_every=0))
+
+    restored = loop.restore({"params": params, "opt": opt})
+    if restored is not None:
+        params, opt = restored["params"], restored["opt"]
+
+    losses = []
+
+    def one_step(state, step):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
+        p, o, metrics = step_fn(state["params"], state["opt"], batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if args.log_every and step % args.log_every == 0:
+            print(f"step {step:4d} loss {loss:.4f} "
+                  f"acc {float(metrics['accuracy']):.3f} "
+                  f"gnorm {float(metrics['grad_norm']):.2f}")
+        return {"params": p, "opt": o}
+
+    state = loop.run({"params": params, "opt": opt}, one_step,
+                     start_step=loop.resume_step())
+    ckpt.wait()
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f}); "
+          f"timing {loop.timer.summary()}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

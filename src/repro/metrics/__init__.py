@@ -1,0 +1,1 @@
+from repro.metrics.rbo import rbo_extrapolated, rbo_from_scores

@@ -1,0 +1,188 @@
+"""Mamba2 mixer — SSD (state-space duality) chunked scan + recurrent decode.
+
+Follows the Mamba2 paper's minimal SSD formulation (Dao & Gu 2024, Listing 1),
+with the depthwise causal conv on (x, B, C), softplus-dt, scalar-per-head A,
+D skip and gated RMSNorm.  The chunked algorithm:
+
+  1. within-chunk (quadratic in chunk length Q): Y_diag via the masked decay
+     matrix L = exp(segsum(dt·A)),
+  2. chunk states: right-decayed outer products Bᵀ·(decay·x),
+  3. inter-chunk recurrence: lax.scan over chunks carrying (H, P, N) state,
+  4. state -> output correction Y_off.
+
+Decode is the O(1)/token recurrence:  h ← exp(dt·A)·h + dt·(B ⊗ x);
+y = C·h + D·x — this is what makes `long_500k` a constant-memory shape for
+SSM/hybrid architectures.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm
+from repro.sharding.rules import ws
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., Q) -> (..., Q, Q) with out[l, s] = sum_{s < j <= l} x_j,
+    -inf above the diagonal (decay mask exponent)."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def _split_proj(p, x, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    gn = s.n_groups * s.d_state
+    nh = s.num_heads(d)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"].astype(x.dtype))
+    z, xh, bc, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + 2 * gn], axis=-1)
+    return z, xh, bc, dt, di, gn, nh
+
+
+def _causal_conv_full(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along S. xbc: (B,S,C); w: (k,C); b: (C,)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(k):  # k = 4: unrolled shifts beat a conv op for clarity
+        out = out + pad[:, i: i + xbc.shape[1]] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def mamba2_full(p: Dict[str, jax.Array], x: jax.Array,
+                cfg: ModelConfig) -> jax.Array:
+    """Full-sequence SSD. x: (B, S, d) -> (B, S, d)."""
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    z, xh, bc, dt, di, gn, nh = _split_proj(p, x, cfg)
+    xbc = _causal_conv_full(jnp.concatenate([xh, bc], -1), p["conv_w"], p["conv_b"])
+    xh, bc = xbc[..., :di], xbc[..., di:]
+    bmat, cmat = jnp.split(bc, 2, axis=-1)
+
+    n = s_cfg.d_state
+    hp = s_cfg.head_dim
+    q = min(s_cfg.chunk_size, s)
+    s_orig = s
+    if s % q:  # pad tail to a chunk multiple; padded outputs are sliced off
+        pad = q - s % q
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        z = jnp.pad(z, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // q
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))            # (H,)
+    da = dt * a                                             # (B,S,H)
+
+    xh = ws(xh.reshape(b, nc, q, nh, hp), "batch", None, None, "ssm_heads", None)
+    # groups broadcast to heads (n_groups=1 in the pool configs)
+    bmat = bmat.reshape(b, nc, q, s_cfg.n_groups, n)
+    cmat = cmat.reshape(b, nc, q, s_cfg.n_groups, n)
+    heads_per_group = nh // s_cfg.n_groups
+    bmat = jnp.repeat(bmat, heads_per_group, axis=3)        # (B,nc,Q,H,N)
+    cmat = jnp.repeat(cmat, heads_per_group, axis=3)
+    da = da.reshape(b, nc, q, nh).transpose(0, 3, 1, 2)     # (B,H,nc,Q)
+    dt_c = dt.reshape(b, nc, q, nh)
+
+    x_dt = (xh.astype(jnp.float32) * dt_c[..., None])       # (B,nc,Q,H,P)
+
+    # 1. intra-chunk
+    ell = jnp.exp(_segsum(da))                              # (B,H,nc,Q,Q)
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp",
+                        cmat.astype(jnp.float32), bmat.astype(jnp.float32),
+                        ell, x_dt)
+
+    # 2. per-chunk end states
+    da_cum = jnp.cumsum(da, axis=-1)                        # (B,H,nc,Q)
+    decay_to_end = jnp.exp(da_cum[..., -1:] - da_cum)       # (B,H,nc,Q)
+    states = jnp.einsum("bcshn,bhcs,bcshp->bchpn",
+                        bmat.astype(jnp.float32), decay_to_end, x_dt)
+
+    # 3. inter-chunk recurrence
+    chunk_decay = jnp.exp(da_cum[..., -1])                  # (B,H,nc)
+
+    def chunk_step(h_prev, inp):
+        st, dec = inp                                       # (B,H,P,N), (B,H)
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev                                # emit state BEFORE chunk
+
+    h0 = jnp.zeros((b, nh, hp, n), jnp.float32)
+    h_last, h_prevs = jax.lax.scan(
+        chunk_step, h0,
+        (states.transpose(1, 0, 2, 3, 4),                   # (nc,B,H,P,N)
+         chunk_decay.transpose(2, 0, 1)))                   # (nc,B,H)
+
+    # 4. state -> output
+    in_decay = jnp.exp(da_cum)                              # (B,H,nc,Q)
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)              # (B,nc,H,P,N)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp",
+                       cmat.astype(jnp.float32), h_prevs, in_decay)
+
+    y = (y_diag + y_off).reshape(b, s, nh, hp)
+    y = y + xh.reshape(b, s, nh, hp).astype(jnp.float32) * p["d_skip"].astype(
+        jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)  # gated norm
+    y = y[:, :s_orig]
+    return jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(x.dtype))
+
+
+def mamba2_init_cache(cfg: ModelConfig, batch: int,
+                      dtype=jnp.float32) -> Dict[str, Any]:
+    s = cfg.ssm
+    d = cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, s.conv_dim(d)), dtype),
+        "ssm": jnp.zeros((batch, s.num_heads(d), s.head_dim, s.d_state), dtype),
+    }
+
+
+def mamba2_decode(p: Dict[str, jax.Array], x: jax.Array,
+                  cache: Dict[str, Any], cfg: ModelConfig
+                  ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One-token recurrent step. x: (B, 1, d)."""
+    s_cfg = cfg.ssm
+    b = x.shape[0]
+    z, xh, bc, dt, di, gn, nh = _split_proj(p, x, cfg)
+    n, hp = s_cfg.d_state, s_cfg.head_dim
+
+    # conv ring: append new column, apply kernel over the last k positions
+    xbc_new = jnp.concatenate([xh, bc], -1)[:, 0]           # (B, conv_dim)
+    hist = jnp.concatenate([cache["conv"],
+                            xbc_new[:, None].astype(cache["conv"].dtype)], axis=1)
+    w = p["conv_w"].astype(jnp.float32)                     # (k, C)
+    conv_out = jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32), w)
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))
+    new_conv = hist[:, 1:]
+
+    xh_c, bc_c = conv_out[..., :di], conv_out[..., di:]
+    bvec, cvec = jnp.split(bc_c, 2, axis=-1)                # (B, G*N)
+    heads_per_group = nh // s_cfg.n_groups
+    bvec = jnp.repeat(bvec.reshape(b, s_cfg.n_groups, n), heads_per_group, 1)
+    cvec = jnp.repeat(cvec.reshape(b, s_cfg.n_groups, n), heads_per_group, 1)
+
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))   # (B,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt1 * a)                                # (B,H)
+    xh_h = xh_c.reshape(b, nh, hp).astype(jnp.float32)
+    dbx = jnp.einsum("bh,bhn,bhp->bhpn", dt1, bvec.astype(jnp.float32), xh_h)
+    h_new = cache["ssm"] * decay[..., None, None] + dbx
+    y = jnp.einsum("bhn,bhpn->bhp", cvec.astype(jnp.float32), h_new)
+    y = y + xh_h * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, {"conv": new_conv, "ssm": h_new}

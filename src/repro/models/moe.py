@@ -1,0 +1,96 @@
+"""Mixture-of-Experts MLP: top-k routing with capacity-bounded dispatch.
+
+TPU-native design notes
+-----------------------
+The dispatch uses the *same pattern as VeilGraph's hot-edge compaction*
+(core/pagerank.compact_indices): assignments are compacted into bounded
+per-expert buffers via a prefix-sum over a one-hot expert matrix, and
+assignments beyond an expert's capacity are dropped (token passes through
+the residual — the standard "token dropping" MoE trade, and the direct MoE
+analogue of the paper's accuracy-for-compute knob).
+
+All dispatch indices are computed *per batch row*, so under pjit the whole
+block is local to each data shard: no collectives besides the usual TP
+reductions inside the expert matmuls.  Experts are evaluated with a
+lax.scan over the (stacked) expert weights: peak activation memory is one
+expert's (B, C, ·) tile instead of an (B, E·C, ·) dispatch tensor, which is
+what makes dbrx-132b (16 experts) fit at 32k prefill.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.sharding.rules import ws
+
+
+def moe_mlp(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d).  p holds router + stacked expert weights."""
+    moe = cfg.moe
+    b, s, d = x.shape
+    e, k = moe.num_experts, moe.top_k
+    cap = int(s * k * moe.capacity_factor / e) + 1  # per-row per-expert slots
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)                 # (B, S, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # ---- assignment -> per-expert slot (compact-into-capacity) ----------
+    flat_e = top_i.reshape(b, s * k)                        # expert per assignment
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)     # (B, S*k, E)
+    pos = jnp.cumsum(onehot, axis=1) - onehot               # rank within expert
+    pos = jnp.take_along_axis(pos, flat_e[..., None], axis=-1)[..., 0]  # (B,S*k)
+    ok = pos < cap
+    slot = jnp.where(ok, flat_e * cap + pos, e * cap)       # OOB => dropped
+    tok = jnp.arange(s * k, dtype=jnp.int32) // k           # source token
+
+    # ---- dispatch: (B, E*cap, d) buffers, scatter per batch row ---------
+    def scatter_row(xb, slotb):
+        buf = jnp.zeros((e * cap, d), xb.dtype)
+        return buf.at[slotb].set(xb[tok], mode="drop")
+
+    buf = jax.vmap(scatter_row)(x, slot)                    # (B, E*cap, d)
+    buf = buf.reshape(b, e, cap, d)
+    buf = ws(buf, "batch", "experts", None, None)
+
+    # ---- experts: scan over E, one (B, cap, ·) tile live at a time ------
+    def expert_step(_, wz):
+        wg, wu, wd, xe = wz                                 # xe: (B, cap, d)
+        h = jax.nn.silu(jnp.einsum("bcd,df->bcf", xe, wg.astype(xe.dtype)))
+        h = h * jnp.einsum("bcd,df->bcf", xe, wu.astype(xe.dtype))
+        h = ws(h, "batch", None, "ff")
+        return None, jnp.einsum("bcf,fd->bcd", h, wd.astype(xe.dtype))
+
+    _, y = jax.lax.scan(
+        expert_step, None,
+        (p["w_gate"], p["w_up"], p["w_down"], buf.transpose(1, 0, 2, 3)),
+    )                                                       # (E, B, cap, d)
+    y = y.transpose(1, 0, 2, 3).reshape(b, e * cap, d)
+
+    # ---- combine: gather per assignment, weight, sum over k -------------
+    def gather_row(yb, slotb):
+        padded = jnp.concatenate([yb, jnp.zeros((1, d), yb.dtype)], axis=0)
+        return padded[jnp.minimum(slotb, e * cap)]          # dropped -> zeros
+
+    gathered = jax.vmap(gather_row)(y, slot)                # (B, S*k, d)
+    w = (top_w.reshape(b, s * k) * ok.astype(jnp.float32)).astype(x.dtype)
+    out = (gathered * w[..., None]).reshape(b, s, k, d).sum(axis=2)
+    return ws(out, "batch", "ctx", "embed")
+
+
+def moe_load_balance_loss(p: Dict[str, jax.Array], x: jax.Array,
+                          cfg: ModelConfig) -> jax.Array:
+    """Aux loss (Switch-style): E · Σ_e f_e · P_e over the batch."""
+    moe = cfg.moe
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top1 = jnp.argmax(probs, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top1, moe.num_experts, dtype=jnp.float32),
+                    axis=(0, 1))
+    prob = jnp.mean(probs, axis=(0, 1))
+    return moe.num_experts * jnp.sum(frac * prob)

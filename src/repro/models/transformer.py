@@ -1,0 +1,510 @@
+"""Model assembly for the architecture pool.
+
+Entry points (all pure functions of (params, cfg, inputs)):
+
+- ``lm_forward``      : full-sequence logits (training / eval)
+- ``lm_prefill``      : prompt -> (last-position logits, KV/state caches)
+- ``lm_decode_step``  : one token against the caches (serving)
+
+Families: dense/moe/mla decoder-only (+ VLM/audio prefix embeddings),
+ssm (mamba2), hybrid (zamba2: mamba backbone + one shared attention block
+applied every ``hybrid_period`` layers), encdec (seamless backbone: frame
+embeddings -> encoder; tokens -> causal decoder with cross attention).
+
+Per-layer weights are stacked on a leading L axis and consumed by lax.scan;
+caches are stacked the same way.  ``remat=True`` wraps each block in
+jax.checkpoint (used by train_step).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba2 as m2
+from repro.models.config import ModelConfig
+from repro.models.layers import mlp_apply_dense, rms_norm
+from repro.models.moe import moe_mlp
+from repro.sharding.rules import ws
+
+
+# ---------------------------------------------------------------------------
+# block bodies (one layer each)
+# ---------------------------------------------------------------------------
+
+
+def _mlp_apply(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.moe is not None and "router" in p:
+        return moe_mlp(p, x, cfg)
+    return mlp_apply_dense(p, x, cfg.mlp_gated)
+
+
+def _attn_apply_full(p, x, cfg, *, causal=True):
+    if cfg.mla is not None:
+        return attn.mla_full(p, x, cfg, causal=causal)
+    return attn.gqa_full(p, x, cfg, causal=causal)
+
+
+def _dense_block_full(lp: Dict[str, Any], x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = _attn_apply_full(lp["attn"], rms_norm(x, lp["norm0"], cfg.norm_eps), cfg)
+    x = x + h
+    h = _mlp_apply(lp["mlp"], rms_norm(x, lp["norm1"], cfg.norm_eps), cfg)
+    x = x + h
+    return ws(x, "batch", "ctx_res", "embed")
+
+
+def _ssm_block_full(lp: Dict[str, Any], x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = m2.mamba2_full(lp["ssm"], rms_norm(x, lp["norm0"], cfg.norm_eps), cfg)
+    return ws(x + h, "batch", "ctx_res", "embed")
+
+
+def _shared_block_full(sp: Dict[str, Any], x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = attn.gqa_full(sp["attn"], rms_norm(x, sp["norm0"], cfg.norm_eps), cfg)
+    x = x + h
+    h = mlp_apply_dense(sp["mlp"], rms_norm(x, sp["norm1"], cfg.norm_eps), cfg.mlp_gated)
+    return x + h
+
+
+def _maybe_remat(fn, remat: bool):
+    if not remat:
+        return fn
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, cfg: ModelConfig, tokens: jax.Array,
+           prefix_embeds: Optional[jax.Array]) -> jax.Array:
+    x = params["embed"]["tok"].astype(jnp.dtype(cfg.activation_dtype))[tokens]
+    if prefix_embeds is not None:
+        # modality frontend stub: precomputed frame/patch embeddings are
+        # prepended to the token embeddings (audio/vision backbones)
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    return ws(x, "batch", "ctx_res", "embed")
+
+
+def _head(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        w = params["embed"]["tok"].astype(x.dtype).T
+    else:
+        w = params["lm_head"].astype(x.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    return ws(logits, "batch", "ctx", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / eval)
+# ---------------------------------------------------------------------------
+
+
+def lm_forward(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    tokens: jax.Array,                       # (B, S_text)
+    *,
+    prefix_embeds: Optional[jax.Array] = None,  # (B, S_prefix, d) frontend stub
+    encoder_embeds: Optional[jax.Array] = None,  # (B, S_enc, d) for enc-dec
+    remat: bool = False,
+) -> jax.Array:
+    """Returns logits (B, S_total, V)."""
+    x = _embed(params, cfg, tokens, prefix_embeds)
+
+    if cfg.encoder_layers > 0:
+        memory = encode(params, cfg, encoder_embeds, remat=remat)
+        return _decode_stack_full(params, cfg, x, memory, remat=remat)
+
+    if cfg.family == "ssm":
+        body = _maybe_remat(
+            lambda xx, lp: (_ssm_block_full(lp, xx, cfg), None), remat)
+        x, _ = jax.lax.scan(lambda xx, lp: body(xx, lp), x, params["blocks"])
+    elif cfg.family == "hybrid":
+        x = _hybrid_full(params, cfg, x, remat=remat)
+    else:
+        body = _maybe_remat(
+            lambda xx, lp: (_dense_block_full(lp, xx, cfg), None), remat)
+        x, _ = jax.lax.scan(lambda xx, lp: body(xx, lp), x, params["blocks"])
+    return _head(params, cfg, x)
+
+
+def _hybrid_full(params, cfg: ModelConfig, x, *, remat: bool):
+    period = cfg.hybrid_period
+    L = cfg.num_layers
+    n_groups, rem = divmod(L, period)
+    blocks = params["blocks"]
+    grouped = jax.tree_util.tree_map(
+        lambda a: a[: n_groups * period].reshape(
+            (n_groups, period) + a.shape[1:]), blocks)
+    tail = jax.tree_util.tree_map(lambda a: a[n_groups * period:], blocks)
+    ssm_body = _maybe_remat(
+        lambda xx, lp: (_ssm_block_full(lp, xx, cfg), None), remat)
+    shared_body = _maybe_remat(
+        lambda xx, sp: (_shared_block_full(sp, xx, cfg), None), remat)
+
+    for g in range(n_groups):
+        lp_g = jax.tree_util.tree_map(lambda a: a[g], grouped)
+        x, _ = jax.lax.scan(lambda xx, lp: ssm_body(xx, lp), x, lp_g)
+        x, _ = shared_body(x, params["shared"])
+    if rem:
+        x, _ = jax.lax.scan(lambda xx, lp: ssm_body(xx, lp), x, tail)
+    return x
+
+
+def encode(params, cfg: ModelConfig, frames: jax.Array, *, remat=False) -> jax.Array:
+    """Bidirectional encoder over precomputed frame embeddings (stub frontend)."""
+    x = ws(frames.astype(jnp.dtype(cfg.activation_dtype)), "batch", "ctx", "embed")
+
+    def block(xx, lp):
+        h = attn.gqa_full(lp["attn"], rms_norm(xx, lp["norm0"], cfg.norm_eps),
+                          cfg, causal=False)
+        xx = xx + h
+        h = mlp_apply_dense(lp["mlp"], rms_norm(xx, lp["norm1"], cfg.norm_eps), cfg.mlp_gated)
+        return xx + h, None
+
+    body = _maybe_remat(block, remat)
+    x, _ = jax.lax.scan(lambda xx, lp: body(xx, lp), x, params["encoder"])
+    return rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _cross_attend(lp, x, memory, cfg: ModelConfig):
+    """Cross attention: queries from decoder, keys/values from encoder memory."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dk->bsk", x, lp["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,dk->bsk", memory.astype(x.dtype),
+                   lp["wk"].astype(x.dtype)).reshape(b, -1, kv, hd)
+    v = jnp.einsum("bsd,dk->bsk", memory.astype(x.dtype),
+                   lp["wv"].astype(x.dtype)).reshape(b, -1, kv, hd)
+    from repro.models.layers import blocked_attention
+    out = blocked_attention(q, k, v, causal=False,
+                            q_block=cfg.q_block, kv_block=cfg.kv_block)
+    return jnp.einsum("bsk,kd->bsd", out.reshape(b, s, -1),
+                      lp["wo"].astype(x.dtype))
+
+
+def _decode_stack_full(params, cfg: ModelConfig, x, memory, *, remat: bool):
+    def block(xx, lp):
+        h = attn.gqa_full(lp["attn"], rms_norm(xx, lp["norm0"], cfg.norm_eps),
+                          cfg, causal=True)
+        xx = xx + h
+        h = _cross_attend(lp["cross"], rms_norm(xx, lp["norm1"], cfg.norm_eps),
+                          memory, cfg)
+        xx = xx + h
+        h = mlp_apply_dense(lp["mlp"], rms_norm(xx, lp["norm2"], cfg.norm_eps), cfg.mlp_gated)
+        return xx + h, None
+
+    body = _maybe_remat(block, remat)
+    x, _ = jax.lax.scan(lambda xx, lp: body(xx, lp), x, params["blocks"])
+    return _head(params, cfg, x)
+
+
+# ---------------------------------------------------------------------------
+# caches: init / prefill / decode-step
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               *, enc_len: int = 0, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Abstract-shape-stable cache pytree for serving."""
+    L = cfg.num_layers
+
+    def stack(make_one):
+        one = make_one()
+        return jax.tree_util.tree_map(
+            lambda a: jnp.zeros((L,) + a.shape, a.dtype), one)
+
+    if cfg.family == "ssm":
+        return {"ssm": stack(lambda: m2.mamba2_init_cache(cfg, batch))}
+    if cfg.family == "hybrid":
+        n_apps = cfg.num_layers // cfg.hybrid_period
+        one_attn = attn.gqa_init_cache(cfg, batch, max_len, dtype)
+        attn_stack = jax.tree_util.tree_map(
+            lambda a: jnp.zeros((n_apps,) + a.shape, a.dtype), one_attn)
+        return {"ssm": stack(lambda: m2.mamba2_init_cache(cfg, batch)),
+                "attn": attn_stack}
+    if cfg.encoder_layers > 0:
+        self_c = stack(lambda: attn.gqa_init_cache(cfg, batch, max_len, dtype))
+        # cross K/V computed once from encoder memory at prefill
+        kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        cross = {"k": jnp.zeros((L, batch, enc_len, kv, hd), dtype),
+                 "v": jnp.zeros((L, batch, enc_len, kv, hd), dtype)}
+        return {"self": self_c, "cross": cross}
+    if cfg.mla is not None:
+        return {"mla": stack(lambda: attn.mla_init_cache(cfg, batch, max_len, dtype))}
+    return {"kv": stack(lambda: attn.gqa_init_cache(cfg, batch, max_len, dtype))}
+
+
+def lm_prefill(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    *,
+    cache_len: int,
+    prefix_embeds: Optional[jax.Array] = None,
+    encoder_embeds: Optional[jax.Array] = None,
+    remat: bool = False,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Run the prompt, return (full logits, populated caches)."""
+    x = _embed(params, cfg, tokens, prefix_embeds)
+    b = x.shape[0]
+
+    if cfg.encoder_layers > 0:
+        memory = encode(params, cfg, encoder_embeds, remat=remat)
+
+        # decoder prefill with self-KV + cross-KV cache capture
+        def blockc(xx, lp):
+            h, kvc = attn.gqa_prefill(
+                lp["attn"], rms_norm(xx, lp["norm0"], cfg.norm_eps), cfg, cache_len)
+            xx = xx + h
+            h = _cross_attend(lp["cross"], rms_norm(xx, lp["norm1"], cfg.norm_eps),
+                              memory, cfg)
+            xx = xx + h
+            h = mlp_apply_dense(lp["mlp"], rms_norm(xx, lp["norm2"], cfg.norm_eps), cfg.mlp_gated)
+            xx = xx + h
+            # cross K/V cache (constant during decode)
+            kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+            ck = jnp.einsum("bsd,dk->bsk", memory.astype(xx.dtype),
+                            lp["cross"]["wk"].astype(xx.dtype)).reshape(
+                                b, -1, kv, hd).astype(jnp.bfloat16)
+            cv = jnp.einsum("bsd,dk->bsk", memory.astype(xx.dtype),
+                            lp["cross"]["wv"].astype(xx.dtype)).reshape(
+                                b, -1, kv, hd).astype(jnp.bfloat16)
+            return xx, (kvc, {"k": ck, "v": cv})
+
+        body = _maybe_remat(blockc, remat)
+        x, caches = jax.lax.scan(lambda xx, lp: body(xx, lp), x, params["blocks"])
+        self_c, cross_c = caches
+        return _head(params, cfg, x), {"self": self_c, "cross": cross_c}
+
+    if cfg.family == "ssm":
+        # run full SSD then recompute final state via a cheap decode replay of
+        # the last conv window is incorrect; instead we capture states by
+        # running the chunked scan with state capture (mamba2_prefill).
+        def block(xx, lp):
+            h, st = _mamba_prefill_block(lp, xx, cfg)
+            return xx + h, st
+        body = _maybe_remat(block, remat)
+        x, states = jax.lax.scan(lambda xx, lp: body(xx, lp), x, params["blocks"])
+        return _head(params, cfg, x), {"ssm": states}
+
+    if cfg.family == "hybrid":
+        return _hybrid_prefill(params, cfg, x, cache_len, remat=remat)
+
+    # dense / mla / moe decoder-only
+    def block(xx, lp):
+        if cfg.mla is not None:
+            h, c = attn.mla_prefill(
+                lp["attn"], rms_norm(xx, lp["norm0"], cfg.norm_eps), cfg, cache_len)
+        else:
+            h, c = attn.gqa_prefill(
+                lp["attn"], rms_norm(xx, lp["norm0"], cfg.norm_eps), cfg, cache_len)
+        xx = xx + h
+        h = _mlp_apply(lp["mlp"], rms_norm(xx, lp["norm1"], cfg.norm_eps), cfg)
+        return xx + h, c
+
+    body = _maybe_remat(block, remat)
+    x, caches = jax.lax.scan(lambda xx, lp: body(xx, lp), x, params["blocks"])
+    key = "mla" if cfg.mla is not None else "kv"
+    return _head(params, cfg, x), {key: caches}
+
+
+def _mamba_prefill_block(lp, x, cfg: ModelConfig):
+    """Full SSD + capture (conv tail, final ssm state) for decode continuation."""
+    h = m2.mamba2_full(lp["ssm"], rms_norm(x, lp["norm0"], cfg.norm_eps), cfg)
+    # final states: replay the projection on the last conv_kernel-1 positions
+    # for the conv cache; final SSD state via a short recurrent pass over the
+    # last chunk is equivalent but costly — we recompute it from the full
+    # sequence with a dedicated scan inside mamba2_full would complicate the
+    # fast path, so the state capture here runs the recurrence on the last
+    # chunk only (exact: chunk boundaries carry the running state).
+    st = _mamba_final_state(lp["ssm"], rms_norm(x, lp["norm0"], cfg.norm_eps), cfg)
+    return h, st
+
+
+def _mamba_final_state(p, x, cfg: ModelConfig):
+    """Exact final (conv, ssm) state after processing sequence x."""
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    z, xh, bc, dt, di, gn, nh = m2._split_proj(p, x, cfg)
+    xbc = jnp.concatenate([xh, bc], -1)
+    k = s_cfg.conv_kernel
+    conv_state = xbc[:, s - (k - 1):, :].astype(jnp.float32)
+    conv_out = m2._causal_conv_full(xbc, p["conv_w"], p["conv_b"])
+    xh_c, bc_c = conv_out[..., :di], conv_out[..., di:]
+    bmat, _ = jnp.split(bc_c, 2, axis=-1)
+    n, hp = s_cfg.d_state, s_cfg.head_dim
+    dt_f = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = dt_f * a                                           # (B,S,H)
+    da_cum = jnp.cumsum(da, axis=1)
+    decay_to_end = jnp.exp(da_cum[:, -1:, :] - da_cum)      # (B,S,H)
+    heads_per_group = nh // s_cfg.n_groups
+    bmat = jnp.repeat(bmat.reshape(b, s, s_cfg.n_groups, n), heads_per_group, 2)
+    xh_h = xh_c.reshape(b, s, nh, hp).astype(jnp.float32)
+    state = jnp.einsum("bshn,bsh,bsh,bshp->bhpn",
+                       bmat.astype(jnp.float32), decay_to_end, dt_f, xh_h)
+    return {"conv": conv_state, "ssm": state}
+
+
+def _hybrid_prefill(params, cfg: ModelConfig, x, cache_len, *, remat):
+    period = cfg.hybrid_period
+    L = cfg.num_layers
+    n_groups, rem = divmod(L, period)
+    blocks = params["blocks"]
+    grouped = jax.tree_util.tree_map(
+        lambda a: a[: n_groups * period].reshape((n_groups, period) + a.shape[1:]),
+        blocks)
+    tail = jax.tree_util.tree_map(lambda a: a[n_groups * period:], blocks)
+
+    def ssm_block(xx, lp):
+        h, st = _mamba_prefill_block(lp, xx, cfg)
+        return xx + h, st
+    body = _maybe_remat(ssm_block, remat)
+
+    ssm_states = []
+    attn_caches = []
+    for g in range(n_groups):
+        lp_g = jax.tree_util.tree_map(lambda a: a[g], grouped)
+        x, st = jax.lax.scan(lambda xx, lp: body(xx, lp), x, lp_g)
+        ssm_states.append(st)
+        sp = params["shared"]
+        h, kvc = attn.gqa_prefill(
+            sp["attn"], rms_norm(x, sp["norm0"], cfg.norm_eps), cfg, cache_len)
+        x = x + h
+        h = mlp_apply_dense(sp["mlp"], rms_norm(x, sp["norm1"], cfg.norm_eps), cfg.mlp_gated)
+        x = x + h
+        attn_caches.append(kvc)
+    if rem:
+        x, st = jax.lax.scan(lambda xx, lp: body(xx, lp), x, tail)
+        ssm_states.append(st)
+
+    ssm_stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *ssm_states)
+    attn_stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs, axis=0), *attn_caches)
+    return _head(params, cfg, x), {"ssm": ssm_stacked, "attn": attn_stacked}
+
+
+# ---------------------------------------------------------------------------
+# decode step
+# ---------------------------------------------------------------------------
+
+
+def lm_decode_step(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    cache: Dict[str, Any],
+    token: jax.Array,                     # (B, 1) int32
+    pos: jax.Array,                       # () int32 — absolute position
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One serving step: next-token logits + updated caches."""
+    x = _embed(params, cfg, token, None)
+
+    if cfg.family == "ssm":
+        def body(xx, inp):
+            lp, lc = inp
+            h, nc = m2.mamba2_decode(
+                lp["ssm"], rms_norm(xx, lp["norm0"], cfg.norm_eps), lc, cfg)
+            return xx + h, nc
+        x, new_ssm = jax.lax.scan(body, x, (params["blocks"], cache["ssm"]))
+        return _head(params, cfg, x), {"ssm": new_ssm}
+
+    if cfg.family == "hybrid":
+        return _hybrid_decode(params, cfg, cache, x, pos)
+
+    if cfg.encoder_layers > 0:
+        def body(xx, inp):
+            lp, (sc, cc) = inp
+            h, nsc = attn.gqa_decode(
+                lp["attn"], rms_norm(xx, lp["norm0"], cfg.norm_eps), sc, pos, cfg)
+            xx = xx + h
+            # cross attention against the precomputed cross cache
+            from repro.models.layers import decode_attention
+            b = xx.shape[0]
+            h_, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+            xq = jnp.einsum("bsd,dk->bsk", rms_norm(xx, lp["norm1"], cfg.norm_eps),
+                            lp["cross"]["wq"].astype(xx.dtype)).reshape(b, 1, h_, hd)
+            out = decode_attention(xq, cc["k"].astype(xx.dtype),
+                                   cc["v"].astype(xx.dtype),
+                                   cache_len=cc["k"].shape[1])
+            h2 = jnp.einsum("bsk,kd->bsd", out.reshape(b, 1, -1),
+                            lp["cross"]["wo"].astype(xx.dtype))
+            xx = xx + h2
+            h3 = mlp_apply_dense(lp["mlp"], rms_norm(xx, lp["norm2"], cfg.norm_eps), cfg.mlp_gated)
+            return xx + h3, nsc
+        x, new_self = jax.lax.scan(
+            body, x, (params["blocks"], (cache["self"], cache["cross"])))
+        return _head(params, cfg, x), {"self": new_self, "cross": cache["cross"]}
+
+    # dense / mla / moe
+    key = "mla" if cfg.mla is not None else "kv"
+
+    def body(xx, inp):
+        lp, lc = inp
+        if cfg.mla is not None:
+            h, nc = attn.mla_decode(
+                lp["attn"], rms_norm(xx, lp["norm0"], cfg.norm_eps), lc, pos, cfg)
+        else:
+            h, nc = attn.gqa_decode(
+                lp["attn"], rms_norm(xx, lp["norm0"], cfg.norm_eps), lc, pos, cfg)
+        xx = xx + h
+        h = _mlp_apply(lp["mlp"], rms_norm(xx, lp["norm1"], cfg.norm_eps), cfg)
+        return xx + h, nc
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache[key]))
+    return _head(params, cfg, x), {key: new_cache}
+
+
+def _hybrid_decode(params, cfg: ModelConfig, cache, x, pos):
+    period = cfg.hybrid_period
+    L = cfg.num_layers
+    n_groups, rem = divmod(L, period)
+    blocks = params["blocks"]
+    grouped = jax.tree_util.tree_map(
+        lambda a: a[: n_groups * period].reshape((n_groups, period) + a.shape[1:]),
+        blocks)
+    tail_p = jax.tree_util.tree_map(lambda a: a[n_groups * period:], blocks)
+    ssm_c = cache["ssm"]
+    g_ssm = jax.tree_util.tree_map(
+        lambda a: a[: n_groups * period].reshape((n_groups, period) + a.shape[1:]),
+        ssm_c)
+    tail_c = jax.tree_util.tree_map(lambda a: a[n_groups * period:], ssm_c)
+
+    def body(xx, inp):
+        lp, lc = inp
+        h, nc = m2.mamba2_decode(
+            lp["ssm"], rms_norm(xx, lp["norm0"], cfg.norm_eps), lc, cfg)
+        return xx + h, nc
+
+    new_ssm_groups = []
+    new_attn = []
+    for g in range(n_groups):
+        lp_g = jax.tree_util.tree_map(lambda a: a[g], grouped)
+        lc_g = jax.tree_util.tree_map(lambda a: a[g], g_ssm)
+        x, nc = jax.lax.scan(body, x, (lp_g, lc_g))
+        new_ssm_groups.append(nc)
+        sp = params["shared"]
+        ac = jax.tree_util.tree_map(lambda a: a[g], cache["attn"])
+        h, nac = attn.gqa_decode(
+            sp["attn"], rms_norm(x, sp["norm0"], cfg.norm_eps), ac, pos, cfg)
+        x = x + h
+        h = mlp_apply_dense(sp["mlp"], rms_norm(x, sp["norm1"], cfg.norm_eps), cfg.mlp_gated)
+        x = x + h
+        new_attn.append(nac)
+    if rem:
+        x, nc = jax.lax.scan(body, x, (tail_p, tail_c))
+        new_ssm_groups.append(nc)
+
+    # each group's states are already (period, B, ...); concat along layers
+    new_ssm = jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *new_ssm_groups)
+    attn_stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs, axis=0), *new_attn)
+    return _head(params, cfg, x), {"ssm": new_ssm, "attn": attn_stacked}

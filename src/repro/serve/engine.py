@@ -1,0 +1,110 @@
+"""Batched serving engine: prefill + decode loop with a static-slot batch.
+
+Continuous-batching-lite: a fixed number of slots decode in lockstep; a
+finished sequence's slot is refilled at the next prefill boundary.  This is
+the CPU-runnable serving driver for the examples; at pod scale the same
+``serve_step`` is what the dry-run lowers (decode_32k / long_500k cells).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import lm_decode_step, lm_prefill
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray           # int32[prompt_len]
+    max_new_tokens: int = 16
+    id: int = 0
+    # filled by the engine
+    output: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class ServeStats:
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    steps: int = 0
+    tokens_out: int = 0
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens_out / self.decode_s if self.decode_s else 0.0
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, *, batch_slots: int = 4,
+                 max_len: int = 256, greedy: bool = True, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.greedy = greedy
+        self.key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(
+            lambda p, c, t, pos: lm_decode_step(p, cfg, c, t, pos))
+
+    def run(self, requests: List[Request]) -> ServeStats:
+        """Serve requests in waves of `batch_slots` (lockstep decode)."""
+        stats = ServeStats()
+        queue = list(requests)
+        while queue:
+            wave = queue[: self.slots]
+            queue = queue[self.slots:]
+            self._run_wave(wave, stats)
+        return stats
+
+    def _run_wave(self, wave: List[Request], stats: ServeStats):
+        cfg = self.cfg
+        b = len(wave)
+        plen = max(len(r.prompt) for r in wave)
+        toks = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(wave):
+            toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
+        t0 = time.perf_counter()
+        logits, cache = lm_prefill(self.params, cfg, jnp.asarray(toks),
+                                   cache_len=self.max_len)
+        last = logits[:, -1]
+        jax.block_until_ready(last)
+        stats.prefill_s += time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        max_new = max(r.max_new_tokens for r in wave)
+        pos = plen
+        cur = self._select(last)
+        for step in range(max_new):
+            for i, r in enumerate(wave):
+                if not r.done and len(r.output) < r.max_new_tokens:
+                    r.output.append(int(cur[i]))
+                    stats.tokens_out += 1
+                elif not r.done:
+                    r.done = True
+            if all(len(r.output) >= r.max_new_tokens for r in wave):
+                break
+            if pos >= self.max_len - 1:
+                break
+            logits, cache = self._decode(self.params, cache,
+                                         cur[:, None], jnp.int32(pos))
+            cur = self._select(logits)
+            pos += 1
+            stats.steps += 1
+        jax.block_until_ready(cur)
+        stats.decode_s += time.perf_counter() - t0
+        for r in wave:
+            r.done = True
+
+    def _select(self, logits: jax.Array) -> jax.Array:
+        if self.greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits).astype(jnp.int32)

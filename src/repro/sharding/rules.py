@@ -1,0 +1,173 @@
+"""Logical→physical sharding rules (MaxText-style logical axis names).
+
+Every parameter and activation in the model stack is annotated with *logical*
+axis names; a rule table maps those to mesh axes.  The same model code then
+runs on the single-pod ``(data, model)`` mesh, the multi-pod
+``(pod, data, model)`` mesh, or a single device (rules empty -> no
+constraints).
+
+Rules are intentionally data: hillclimbing §Perf iterations swap rule tables
+instead of editing model code.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisRules = Dict[str, Tuple[str, ...]]
+
+# ---- rule tables -----------------------------------------------------------
+
+# single-pod (16, 16) mesh: axes ("data", "model")
+RULES_SINGLE_POD: AxisRules = {
+    "batch": ("data",),
+    "ctx": (),                # sequence dim of activations (replicated)
+    "ctx_res": ("model",),    # residual-stream seq dim (Megatron-style SP):
+                              # layer boundaries keep activations S-sharded so
+                              # the per-layer scan carries saved for backward
+                              # are 1/16th size; GSPMD all-gathers S around
+                              # attention/MLP and reduce-scatters back
+    "ctx_shard": ("data",),   # sequence dim when context-parallel (B=1 decode)
+    "embed": (),              # d_model dim (activations)
+    "embed_p": ("data",),     # d_model dim of PARAMETERS: ZeRO-3/FSDP-style
+                              # 2D sharding (data × model) so 132B MoE params
+                              # + AdamW state fit 256 chips
+    "heads": ("model",),      # attention heads / head*hd fused dims
+    "kv_heads": ("model",),   # kv heads (sharded only if divisible)
+    "ff": ("model",),         # MLP hidden
+    "vocab": ("model",),
+    "experts": (),            # MoE expert dim (EP is a hillclimb variant)
+    "ssm_heads": ("model",),  # mamba2 heads
+    "conv_dim": ("model",),   # mamba2 conv channels
+    "layers": (),             # stacked-layer leading dim
+    "edges": ("data", "model"),  # veilgraph edge buffers: flattened mesh
+    "nodes": (),              # veilgraph node vectors (replicated)
+}
+
+# multi-pod (2, 16, 16) mesh: axes ("pod", "data", "model"); pod acts as an
+# outer data-parallel axis.
+RULES_MULTI_POD: AxisRules = {
+    **RULES_SINGLE_POD,
+    "batch": ("pod", "data"),
+    "ctx_shard": ("data",),
+    "edges": ("pod", "data", "model"),
+}
+
+# ZeRO-1 style variant: optimizer/parameter ff dims also sharded over data.
+RULES_SINGLE_POD_ZERO1: AxisRules = {
+    **RULES_SINGLE_POD,
+    "ff_zero": ("model", "data"),
+}
+
+
+_state = threading.local()
+
+
+def set_rules(rules: Optional[AxisRules]) -> None:
+    _state.rules = rules
+
+
+def get_rules() -> Optional[AxisRules]:
+    return getattr(_state, "rules", None)
+
+
+@contextmanager
+def axis_rules(rules: Optional[AxisRules]):
+    prev = get_rules()
+    set_rules(rules)
+    try:
+        yield
+    finally:
+        set_rules(prev)
+
+
+def rules_for_mesh(mesh: Optional[Mesh]) -> AxisRules:
+    if mesh is None:
+        return {}
+    if "pod" in mesh.axis_names:
+        return RULES_MULTI_POD
+    return RULES_SINGLE_POD
+
+
+def logical_to_pspec(
+    logical: Sequence[Optional[str]], rules: Optional[AxisRules] = None
+) -> P:
+    """Map logical axis names (None = replicated) to a PartitionSpec."""
+    rules = rules if rules is not None else (get_rules() or {})
+    out = []
+    used: set = set()
+    for name in logical:
+        if name is None:
+            out.append(None)
+            continue
+        axes = tuple(a for a in rules.get(name, ()) if a not in used)
+        used.update(axes)
+        if len(axes) == 0:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(axes)
+    # trim trailing Nones (canonical form)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def ws(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axis names; no-op without rules."""
+    rules = get_rules()
+    if not rules:
+        return x
+    return jax.lax.with_sharding_constraint(x, logical_to_pspec(logical, rules))
+
+
+def named_sharding(mesh: Mesh, *logical: Optional[str]) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_pspec(logical, rules_for_mesh(mesh)))
+
+
+def guarded_pspec(
+    shape: Sequence[int],
+    logical: Sequence[Optional[str]],
+    rules: AxisRules,
+    axis_sizes: Dict[str, int],
+) -> P:
+    """logical_to_pspec with divisibility guards.
+
+    A mesh axis is applied to a dim only if the dim is divisible by the
+    product of the axes selected so far times that axis (e.g. qwen2's
+    2 kv-heads are NOT sharded over a 16-way model axis — replicated
+    instead), and an axis is never used twice in one spec (so a decode
+    cache with batch=1 automatically falls through to context-parallel
+    sharding of the sequence dim when the rules list both).
+    """
+    out = []
+    used: set = set()
+    for dim, name in zip(shape, logical):
+        if name is None:
+            out.append(None)
+            continue
+        sel = []
+        prod = 1
+        for a in rules.get(name, ()):
+            if a in used:
+                continue
+            nxt = prod * axis_sizes.get(a, 1)
+            if nxt > 0 and dim % nxt == 0 and dim >= nxt:
+                sel.append(a)
+                prod = nxt
+        used.update(sel)
+        if not sel:
+            out.append(None)
+        elif len(sel) == 1:
+            out.append(sel[0])
+        else:
+            out.append(tuple(sel))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)

@@ -1,0 +1,1 @@
+from repro.stream.stream import EdgeStream, StreamConfig, build_stream

@@ -1,0 +1,174 @@
+"""Fault tolerance for pod-scale training.
+
+Pieces (each independently testable on CPU):
+
+- ``StepTimer``       — per-step EMA timing + straggler/outlier detection.
+  At fleet scale the slowest participant sets the step time; surfacing
+  p99/outlier steps early is the first mitigation (paired with bounded
+  data prefetch, async checkpointing and — operationally — hot-spare
+  replacement of the slow host).
+- ``RestartableLoop`` — wraps a step function with checkpoint/restart:
+  periodic async saves, save-on-signal (SIGTERM preemption), automatic
+  resume-from-latest, bounded step retry on transient failure.
+- ``elastic_reshard`` — loads a checkpoint saved on mesh A into shardings
+  for mesh B (scale up/down between runs); relies on CheckpointManager
+  storing global shapes + indices, not device layouts.
+- gradient compression (see train/compression.py) — opt-in int8 DP
+  all-reduce with error feedback.
+"""
+
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.train.checkpoint import CheckpointManager
+
+
+@dataclass
+class StepTimer:
+    ema_alpha: float = 0.1
+    outlier_factor: float = 2.0
+    ema_s: Optional[float] = None
+    history: List[float] = field(default_factory=list)
+    outliers: List[int] = field(default_factory=list)
+
+    def record(self, step: int, dt: float) -> bool:
+        """Returns True if this step is a straggler outlier."""
+        self.history.append(dt)
+        is_outlier = (self.ema_s is not None
+                      and dt > self.outlier_factor * self.ema_s)
+        if is_outlier:
+            self.outliers.append(step)
+        # outliers do not poison the EMA
+        if not is_outlier:
+            self.ema_s = (dt if self.ema_s is None
+                          else (1 - self.ema_alpha) * self.ema_s
+                          + self.ema_alpha * dt)
+        return is_outlier
+
+    def summary(self) -> Dict[str, float]:
+        h = np.asarray(self.history) if self.history else np.zeros(1)
+        return {
+            "mean_s": float(h.mean()),
+            "p50_s": float(np.percentile(h, 50)),
+            "p99_s": float(np.percentile(h, 99)),
+            "ema_s": float(self.ema_s or 0.0),
+            "outliers": len(self.outliers),
+        }
+
+
+class PreemptionGuard:
+    """Sets a flag on SIGTERM/SIGINT so the loop checkpoints and exits
+    cleanly (cloud preemption notice)."""
+
+    def __init__(self, signals=(signal.SIGTERM,)):
+        self.requested = False
+        self._prev = {}
+        for sig in signals:
+            try:
+                self._prev[sig] = signal.signal(sig, self._handler)
+            except (ValueError, OSError):  # non-main thread / unsupported
+                pass
+
+    def _handler(self, signum, frame):
+        self.requested = True
+
+    def restore(self):
+        for sig, prev in self._prev.items():
+            signal.signal(sig, prev)
+
+
+@dataclass
+class LoopConfig:
+    total_steps: int
+    checkpoint_every: int = 100
+    max_step_retries: int = 2
+    log_every: int = 10
+
+
+class RestartableLoop:
+    """Checkpoint/restart training driver.
+
+    ``state`` is any pytree (params, opt state, data step, ...).  On start,
+    resumes from the latest committed checkpoint if one exists.  Transient
+    step failures are retried from the last good in-memory state; repeated
+    failure restores from the last checkpoint before re-raising.
+    """
+
+    def __init__(self, ckpt: CheckpointManager, cfg: LoopConfig,
+                 *, log: Callable[[str], None] = print):
+        self.ckpt = ckpt
+        self.cfg = cfg
+        self.log = log
+        self.timer = StepTimer()
+
+    def resume_step(self) -> int:
+        latest = self.ckpt.latest_step()
+        return 0 if latest is None else latest + 1
+
+    def restore(self, state_template: Any, shardings: Any = None) -> Any:
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return None
+        self.log(f"[restore] resuming from step {latest}")
+        return self.ckpt.restore(latest, state_template, shardings)
+
+    def run(self, state: Any, step_fn: Callable[[Any, int], Any],
+            start_step: Optional[int] = None) -> Any:
+        cfg = self.cfg
+        guard = PreemptionGuard()
+        step = self.resume_step() if start_step is None else start_step
+        try:
+            while step < cfg.total_steps:
+                t0 = time.perf_counter()
+                retries = 0
+                while True:
+                    try:
+                        state = step_fn(state, step)
+                        break
+                    except Exception as e:  # noqa: BLE001 — retry transient
+                        retries += 1
+                        if retries > cfg.max_step_retries:
+                            self.log(f"[fatal] step {step} failed "
+                                     f"{retries - 1} retries: {e}")
+                            raise
+                        self.log(f"[retry] step {step} attempt {retries}: {e}")
+                dt = time.perf_counter() - t0
+                if self.timer.record(step, dt):
+                    self.log(f"[straggler] step {step} took {dt:.3f}s "
+                             f"(ema {self.timer.ema_s:.3f}s)")
+                if cfg.log_every and step % cfg.log_every == 0:
+                    self.log(f"[step {step}] {dt*1e3:.1f} ms")
+                if cfg.checkpoint_every and step % cfg.checkpoint_every == 0 \
+                        and step > 0:
+                    self.ckpt.save(step, state)
+                if guard.requested:
+                    self.log(f"[preempt] checkpointing at step {step} and "
+                             "exiting")
+                    self.ckpt.save(step, state)
+                    self.ckpt.wait()
+                    break
+                step += 1
+            else:
+                self.ckpt.save(cfg.total_steps - 1, state)
+                self.ckpt.wait()
+        finally:
+            guard.restore()
+        return state
+
+
+def elastic_reshard(ckpt: CheckpointManager, step: int, state_template: Any,
+                    new_shardings: Any) -> Any:
+    """Load a checkpoint onto a different mesh (elastic rescale).
+
+    The checkpoint stores global shapes + host shards; placement is entirely
+    determined by ``new_shardings`` (built against the new mesh), so 256-chip
+    state restores onto 512 chips (or 1 CPU device in tests) unchanged.
+    """
+    return ckpt.restore(step, state_template, new_shardings)

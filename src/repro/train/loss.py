@@ -1,0 +1,34 @@
+"""Cross-entropy with sharded-vocab-safe log-softmax and optional z-loss."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(
+    logits: jax.Array,            # (B, S, V) — V may be sharded over `model`
+    labels: jax.Array,            # (B, S) int32
+    mask: Optional[jax.Array] = None,   # (B, S) — 0 to ignore a position
+    z_loss: float = 0.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (mean loss, accuracy).  All reductions in f32; GSPMD inserts
+    the model-axis all-reduces for the max/sumexp over a sharded vocab."""
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - jax.lax.stop_gradient(m)
+    sumexp = jnp.sum(jnp.exp(shifted), axis=-1)
+    log_z = jnp.log(sumexp) + m[..., 0]
+    label_logit = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = log_z - label_logit
+    if z_loss > 0.0:
+        nll = nll + z_loss * jnp.square(log_z)
+    pred = jnp.argmax(logits, axis=-1)
+    correct = (pred == labels).astype(jnp.float32)
+    if mask is not None:
+        w = mask.astype(jnp.float32)
+        denom = jnp.maximum(w.sum(), 1.0)
+        return (nll * w).sum() / denom, (correct * w).sum() / denom
+    return nll.mean(), correct.mean()

@@ -1,0 +1,99 @@
+"""Train / prefill / serve step factories — the functions the launcher jits.
+
+``make_train_step(cfg)`` returns ``step(params, opt_state, batch)``;
+``make_prefill_step`` / ``make_serve_step`` return the serving entry points.
+These are what the multi-pod dry-run lowers for every (arch × shape) cell,
+and what the examples run for real on CPU smoke configs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import (init_cache, lm_decode_step, lm_forward,
+                                      lm_prefill)
+from repro.train.loss import cross_entropy
+from repro.train.optimizer import (AdamWState, adamw_update,
+                                   clip_by_global_norm)
+
+
+def _model_inputs(cfg: ModelConfig, batch: Dict[str, jax.Array]) -> Dict[str, Any]:
+    kw: Dict[str, Any] = {}
+    if cfg.frontend == "vision":
+        kw["prefix_embeds"] = batch["patch_embeds"]
+    if cfg.encoder_layers > 0:
+        kw["encoder_embeds"] = batch["frames"]
+    return kw
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    *,
+    learning_rate: Callable[[jax.Array], jax.Array] | float = 3e-4,
+    grad_clip: float = 1.0,
+    remat: bool = True,
+    z_loss: float = 0.0,
+    weight_decay: float = 0.1,
+) -> Callable:
+    """AdamW train step. batch: tokens (B,S), labels (B,S) [+ frontend inputs]."""
+
+    def step(params, opt_state: AdamWState, batch):
+        kw = _model_inputs(cfg, batch)
+
+        def loss_fn(p):
+            logits = lm_forward(p, cfg, batch["tokens"], remat=remat, **kw)
+            if cfg.frontend == "vision":
+                # loss only over text positions (prefix embeds are inputs)
+                logits = logits[:, batch["patch_embeds"].shape[1]:]
+            loss, acc = cross_entropy(logits, batch["labels"],
+                                      batch.get("loss_mask"), z_loss=z_loss)
+            return loss, acc
+
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        lr = (learning_rate(opt_state.step) if callable(learning_rate)
+              else jnp.asarray(learning_rate, jnp.float32))
+        new_params, new_state = adamw_update(grads, opt_state, params, lr,
+                                              weight_decay=weight_decay)
+        metrics = {"loss": loss, "accuracy": acc, "grad_norm": gnorm, "lr": lr}
+        return new_params, new_state, metrics
+
+    return step
+
+
+def make_eval_step(cfg: ModelConfig) -> Callable:
+    def step(params, batch):
+        kw = _model_inputs(cfg, batch)
+        logits = lm_forward(params, cfg, batch["tokens"], **kw)
+        if cfg.frontend == "vision":
+            logits = logits[:, batch["patch_embeds"].shape[1]:]
+        loss, acc = cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+        return {"loss": loss, "accuracy": acc}
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig, *, cache_len: int) -> Callable:
+    """Prompt processing: returns (next-token logits, caches)."""
+
+    def step(params, batch):
+        kw = _model_inputs(cfg, batch)
+        logits, cache = lm_prefill(params, cfg, batch["tokens"],
+                                   cache_len=cache_len, **kw)
+        return logits[:, -1], cache
+
+    return step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """One decode step: (params, cache, token (B,1), pos ()) -> (logits, cache)."""
+
+    def step(params, cache, token, pos):
+        logits, new_cache = lm_decode_step(params, cfg, cache, token, pos)
+        return logits[:, 0], new_cache
+
+    return step

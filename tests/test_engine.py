@@ -1,0 +1,164 @@
+"""End-to-end engine behaviour: Alg. 1 workflow, policies, accuracy."""
+
+import numpy as np
+import pytest
+
+from repro.core import Action, EngineConfig, VeilGraphEngine
+from repro.core.policies import (always, exact_above_entropy, periodic_exact,
+                                 repeat_below_threshold)
+from repro.graph.generators import barabasi_albert_edges
+from repro.metrics import rbo_from_scores
+from repro.stream import StreamConfig, build_stream
+
+
+def _cfg(fused=True, **kw):
+    base = dict(node_capacity=1200, edge_capacity=8192,
+                hot_node_capacity=1024, hot_edge_capacity=8192,
+                r=0.2, n=1, delta=0.1, num_iters=30, tol=1e-6, fused=fused)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def stream():
+    src, dst = barabasi_albert_edges(1000, 3, seed=0)
+    sc = StreamConfig(stream_size=600, num_queries=6, shuffle=True, seed=2)
+    return build_stream(src, dst, sc)
+
+
+@pytest.mark.parametrize("fused", [True, False])
+def test_engine_accuracy_vs_exact(stream, fused):
+    eng = VeilGraphEngine(_cfg(fused=fused))
+    eng.start(stream.init_src, stream.init_dst)
+    ex = VeilGraphEngine(_cfg(fused=fused), on_query=always(Action.EXACT))
+    ex.start(stream.init_src, stream.init_dst)
+    for s, d in stream:
+        eng.register_add_edges(s, d)
+        ex.register_add_edges(s, d)
+        ra, sa = eng.query()
+        re_, se = ex.query()
+        rbo = rbo_from_scores(ra, re_, depth=200,
+                              active=np.asarray(eng.state.node_active))
+        assert rbo > 0.9
+        assert sa.action in ("compute-approximate",)
+        assert se.action == "compute-exact"
+    # stats sanity
+    assert sa.num_hot >= sa.num_kr
+    assert 0.0 <= sa.vertex_ratio <= 1.0
+    assert 0.0 <= sa.edge_ratio <= 1.0
+
+
+def test_fused_and_unfused_agree(stream):
+    res = {}
+    for fused in (True, False):
+        eng = VeilGraphEngine(_cfg(fused=fused))
+        eng.start(stream.init_src, stream.init_dst)
+        for s, d in stream:
+            eng.register_add_edges(s, d)
+            ranks, st = eng.query()
+        res[fused] = (ranks, st)
+    # fused/unfused differ only by f32 summation order; vertices exactly at
+    # the Δ-expansion boundary may flip, so require agreement up to rounding.
+    np.testing.assert_allclose(res[True][0], res[False][0], rtol=1e-3, atol=1e-4)
+    assert abs(res[True][1].num_hot - res[False][1].num_hot) <= max(5, res[False][1].num_hot // 100)
+    assert abs(res[True][1].num_ek - res[False][1].num_ek) <= max(20, res[False][1].num_ek // 50)
+
+
+def test_repeat_last_policy(stream):
+    eng = VeilGraphEngine(_cfg(), on_query=repeat_below_threshold(10**9))
+    eng.start(stream.init_src, stream.init_dst)
+    r0 = np.asarray(eng.ranks)
+    s, d = stream.chunks[0]
+    eng.register_add_edges(s, d)
+    ranks, st = eng.query()
+    assert st.action == "repeat-last-answer"
+    np.testing.assert_array_equal(ranks, r0)
+
+
+def test_entropy_policy_switches_to_exact(stream):
+    eng = VeilGraphEngine(_cfg(), on_query=exact_above_entropy(1e-9))
+    eng.start(stream.init_src, stream.init_dst)
+    s, d = stream.chunks[0]
+    eng.register_add_edges(s, d)
+    _, st = eng.query()
+    assert st.action == "compute-exact"
+
+
+def test_periodic_exact_policy(stream):
+    eng = VeilGraphEngine(_cfg(), on_query=periodic_exact(2))
+    eng.start(stream.init_src, stream.init_dst)
+    actions = []
+    for s, d in stream:
+        eng.register_add_edges(s, d)
+        _, st = eng.query()
+        actions.append(st.action)
+    assert actions[0] == "compute-approximate"
+    assert actions[2] == "compute-exact"
+    assert actions[4] == "compute-exact"
+
+
+def test_overflow_falls_back_to_exact(stream):
+    cfg = _cfg(hot_node_capacity=2, hot_edge_capacity=4, r=0.0, delta=1e-6)
+    eng = VeilGraphEngine(cfg)
+    eng.start(stream.init_src, stream.init_dst)
+    ex = VeilGraphEngine(_cfg(), on_query=always(Action.EXACT))
+    ex.start(stream.init_src, stream.init_dst)
+    s, d = stream.chunks[0]
+    eng.register_add_edges(s, d)
+    ex.register_add_edges(s, d)
+    ra, st = eng.query()
+    re_, _ = ex.query()
+    assert st.overflow_fallback
+    # fallback result must equal the exact recomputation
+    np.testing.assert_allclose(ra, re_, rtol=1e-5, atol=1e-6)
+
+
+def test_udf_callbacks_fire(stream):
+    calls = []
+    eng = VeilGraphEngine(
+        _cfg(),
+        on_start=lambda e: calls.append("start"),
+        on_query_result=lambda qid, msg, action, ranks, st: calls.append(("result", qid)),
+        on_stop=lambda e: calls.append("stop"),
+    )
+    eng.start(stream.init_src, stream.init_dst)
+    s, d = stream.chunks[0]
+    eng.register_add_edges(s, d)
+    eng.query()
+    eng.stop()
+    assert calls == ["start", ("result", 0), "stop"]
+
+
+def test_before_updates_can_defer(stream):
+    eng = VeilGraphEngine(_cfg(), before_updates=lambda pending, view: False)
+    eng.start(stream.init_src, stream.init_dst)
+    e0 = int(eng.state.num_live_edges())
+    s, d = stream.chunks[0]
+    eng.register_add_edges(s, d)
+    _, st = eng.query()
+    assert int(eng.state.num_live_edges()) == e0  # updates deferred
+    assert eng.pending_updates == len(s)
+    assert st.pending_applied == 0
+
+
+def test_edge_removal_stream(stream):
+    """Beyond-paper (the paper's §7 future work): e- removals through the
+    engine; removed edges stop contributing and the approximate result
+    tracks an exact engine fed the same removal stream."""
+    eng = VeilGraphEngine(_cfg())
+    eng.start(stream.init_src, stream.init_dst)
+    ex = VeilGraphEngine(_cfg(), on_query=always(Action.EXACT))
+    ex.start(stream.init_src, stream.init_dst)
+    # remove a slice of initial edges + add a chunk
+    rm_s, rm_d = stream.init_src[:40], stream.init_dst[:40]
+    add_s, add_d = stream.chunks[0]
+    for e in (eng, ex):
+        e.register_remove_edges(rm_s, rm_d)
+        e.register_add_edges(add_s, add_d)
+    ra, sa = eng.query()
+    re_, se = ex.query()
+    assert int(eng.state.num_live_edges()) == int(ex.state.num_live_edges())
+    rbo = rbo_from_scores(ra, re_, depth=200,
+                          active=np.asarray(eng.state.node_active))
+    assert rbo > 0.9
+    assert sa.pending_applied == 40 + len(add_s)

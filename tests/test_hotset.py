@@ -1,0 +1,115 @@
+"""Hot-set selection: Eqs. 2-5 semantics and monotonicity properties."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import graph as G
+from repro.graph.generators import barabasi_albert_edges, gnm_edges
+from repro.core.hotset import select_hot_set
+from repro.core.pagerank import pagerank
+
+
+def _setup(seed=0, n=150, m=3):
+    src, dst = barabasi_albert_edges(n, m, seed=seed)
+    g = G.from_edges(src, dst, n + 50, 4096)
+    r0, _ = pagerank(g, num_iters=10)
+    return g, r0, src, dst
+
+
+def test_kr_ratio_threshold_semantics():
+    """K_r contains exactly the vertices whose degree ratio exceeds r."""
+    g, r0, src, dst = _setup()
+    deg_prev = jnp.copy(g.out_deg)
+    # add edges so some sources change out-degree
+    new_src = jnp.array([0, 0, 0, 5, 5], jnp.int32)
+    new_dst = jnp.array([10, 11, 12, 13, 14], jnp.int32)
+    g2 = G.add_edges(g, new_src, new_dst)
+    r = 0.25
+    hot, stats = select_hot_set(
+        g2, deg_prev, r0, jnp.float32(r), jnp.float32(1e9), n=0, delta_hop_cap=0
+    )
+    # with n=0 and delta never matching, hot == K_r
+    dp = np.asarray(deg_prev)
+    dn = np.asarray(g2.out_deg)
+    active = np.asarray(g2.node_active)
+    expect = active & (
+        ((dp == 0) & active) | ((dp > 0) & (np.abs(dn / np.maximum(dp, 1) - 1.0) > r))
+    )
+    np.testing.assert_array_equal(np.asarray(hot), expect)
+
+
+def test_new_vertices_always_in_kr():
+    g, r0, _, _ = _setup()
+    deg_prev = jnp.copy(g.out_deg)
+    fresh = g.node_capacity - 1  # id never used before
+    g2 = G.add_edges(g, jnp.array([fresh], jnp.int32), jnp.array([0], jnp.int32))
+    hot, _ = select_hot_set(
+        g2, deg_prev, r0, jnp.float32(1e9), jnp.float32(1e9), n=0, delta_hop_cap=0
+    )
+    assert bool(np.asarray(hot)[fresh])
+
+
+def test_kn_expansion_follows_out_edges():
+    # tiny chain: 0 -> 1 -> 2 -> 3
+    src = np.array([0, 1, 2], np.int32)
+    dst = np.array([1, 2, 3], np.int32)
+    g = G.from_edges(src, dst, 8, 16)
+    r0, _ = pagerank(g, num_iters=5)
+    # out-degree snapshot at t-1: vertex 3 is a sink (deg 0) but existed
+    deg_prev = jnp.asarray(np.array([1, 1, 1, 0, 0, 0, 0, 0], np.int32))
+    active_prev = jnp.asarray(np.array([1, 1, 1, 1, 0, 0, 0, 0], bool))
+    # grow vertex 0's out-degree 1 -> 2 (ratio 1.0 > r)
+    g2 = G.add_edges(g, jnp.array([0], jnp.int32), jnp.array([2], jnp.int32))
+    for n_hops, expect_hot in [(0, {0}), (1, {0, 1, 2}), (2, {0, 1, 2, 3})]:
+        hot, _ = select_hot_set(
+            g2, deg_prev, r0, jnp.float32(0.5), jnp.float32(1e9),
+            active_prev=active_prev, n=n_hops, delta_hop_cap=0,
+        )
+        got = set(np.nonzero(np.asarray(hot))[0].tolist())
+        assert got == expect_hot, (n_hops, got)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**10))
+def test_monotonic_in_r(seed):
+    """Property: larger r (stricter threshold) never grows K_r."""
+    g, r0, src, dst = _setup(seed=seed % 4)
+    deg_prev = jnp.copy(g.out_deg)
+    rng = np.random.default_rng(seed)
+    ns = rng.integers(0, 150, 30).astype(np.int32)
+    nd = rng.integers(0, 150, 30).astype(np.int32)
+    g2 = G.add_edges(g, jnp.asarray(ns), jnp.asarray(nd))
+    sizes = []
+    for r in (0.05, 0.2, 0.5):
+        _, stats = select_hot_set(
+            g2, deg_prev, r0, jnp.float32(r), jnp.float32(1e9), n=0, delta_hop_cap=0
+        )
+        sizes.append(int(stats.num_kr))
+    assert sizes[0] >= sizes[1] >= sizes[2]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**10))
+def test_monotonic_in_n_and_delta(seed):
+    """Larger n grows K; smaller Δ (more conservative) never shrinks K."""
+    g, r0, src, dst = _setup(seed=seed % 4)
+    deg_prev = jnp.copy(g.out_deg)
+    rng = np.random.default_rng(seed)
+    ns = rng.integers(0, 150, 20).astype(np.int32)
+    nd = rng.integers(0, 150, 20).astype(np.int32)
+    g2 = G.add_edges(g, jnp.asarray(ns), jnp.asarray(nd))
+    h0, s0 = select_hot_set(g2, deg_prev, r0, jnp.float32(0.2), jnp.float32(1e9), n=0)
+    h1, s1 = select_hot_set(g2, deg_prev, r0, jnp.float32(0.2), jnp.float32(1e9), n=1)
+    assert int(s1.num_hot) >= int(s0.num_hot)
+    assert bool(np.all(~np.asarray(h0) | np.asarray(h1)))  # h0 ⊆ h1
+    _, sd_small = select_hot_set(g2, deg_prev, r0, jnp.float32(0.2), jnp.float32(0.01), n=1)
+    _, sd_big = select_hot_set(g2, deg_prev, r0, jnp.float32(0.2), jnp.float32(0.9), n=1)
+    assert int(sd_small.num_hot) >= int(sd_big.num_hot)
+
+
+def test_hot_subset_of_active():
+    g, r0, _, _ = _setup(seed=1)
+    deg_prev = jnp.zeros(g.node_capacity, jnp.int32)  # everything "new"
+    hot, _ = select_hot_set(g, deg_prev, r0, jnp.float32(0.1), jnp.float32(0.1), n=1)
+    assert bool(np.all(~np.asarray(hot) | np.asarray(g.node_active)))

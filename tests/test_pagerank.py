@@ -1,0 +1,179 @@
+"""PageRank: exact power method vs numpy oracle; summarized vs exact."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import graph as G
+from repro.graph.generators import barabasi_albert_edges, gnm_edges
+from repro.core.pagerank import (build_summary, compact_indices, pagerank,
+                                 summarized_pagerank)
+from repro.core.hotset import select_hot_set
+
+
+def _np_pagerank(src, dst, n, beta=0.85, iters=30):
+    """Host oracle for the paper's Gelly-style formulation."""
+    out_deg = np.zeros(n, np.int64)
+    np.add.at(out_deg, src, 1)
+    in_deg = np.zeros(n, np.int64)
+    np.add.at(in_deg, dst, 1)
+    active = (out_deg + in_deg) > 0
+    r = np.where(active, 1.0, 0.0)
+    for _ in range(iters):
+        contrib = np.where(out_deg[src] > 0, r[src] / np.maximum(out_deg[src], 1), 0.0)
+        acc = np.zeros(n)
+        np.add.at(acc, dst, contrib)
+        r = np.where(active, 0.15 + beta * acc, 0.0)
+    return r, active
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_pagerank_matches_numpy_oracle(seed):
+    src, dst = barabasi_albert_edges(300, 3, seed=seed)
+    g = G.from_edges(src, dst, 320, 4096)
+    r, it = pagerank(g, num_iters=30)
+    ref, active = _np_pagerank(src, dst, 320)
+    assert int(it) == 30
+    np.testing.assert_allclose(np.asarray(r), ref, rtol=2e-3, atol=2e-4)
+
+
+def test_pagerank_tol_early_exit():
+    src, dst = gnm_edges(100, 400, seed=0)
+    g = G.from_edges(src, dst, 128, 512)
+    _, it_loose = pagerank(g, num_iters=100, tol=1e-1)
+    _, it_tight = pagerank(g, num_iters=100, tol=0.0)
+    # tol=0 may still exit once the f32 iterate reaches an exact fixpoint
+    assert int(it_loose) < int(it_tight) <= 100
+
+
+def test_pagerank_inactive_nodes_zero():
+    src = np.array([0, 1], np.int32)
+    dst = np.array([1, 0], np.int32)
+    g = G.from_edges(src, dst, 10, 16)
+    r, _ = pagerank(g, num_iters=10)
+    assert np.all(np.asarray(r)[2:] == 0.0)
+
+
+def test_pagerank_teleport_by_n_mass_conserves():
+    """With /N teleport + dangling redistribution, ranks sum to ~1."""
+    src, dst = barabasi_albert_edges(200, 3, seed=2)
+    g = G.from_edges(src, dst, 210, 2048)
+    r, _ = pagerank(g, num_iters=60, teleport_by_n=True, dangling=True)
+    assert abs(float(np.asarray(r).sum()) - 1.0) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# summarized PageRank
+# ---------------------------------------------------------------------------
+
+
+def test_summarized_equals_exact_when_all_hot():
+    """Oracle: K = all active vertices => summary iteration == full iteration."""
+    src, dst = barabasi_albert_edges(200, 3, seed=3)
+    g = G.from_edges(src, dst, 210, 2048)
+    r0, _ = pagerank(g, num_iters=5)
+    hot = jnp.asarray(np.asarray(g.node_active))
+    summary = build_summary(g, r0, hot, hot_node_capacity=256,
+                            hot_edge_capacity=2048)
+    assert not bool(summary.overflow)
+    assert int(summary.num_eb) == 0
+    r_sum, _ = summarized_pagerank(summary, r0, num_iters=25)
+    r_exact, _ = pagerank(g, r0, num_iters=25)
+    np.testing.assert_allclose(np.asarray(r_sum), np.asarray(r_exact),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_summarized_cold_ranks_frozen():
+    src, dst = barabasi_albert_edges(200, 3, seed=4)
+    g = G.from_edges(src, dst, 210, 2048)
+    r0, _ = pagerank(g, num_iters=10)
+    deg_prev = jnp.copy(g.out_deg)
+    # tag a handful of vertices hot by hand
+    hot = np.zeros(210, bool)
+    hot[:20] = np.asarray(g.node_active)[:20]
+    summary = build_summary(g, r0, jnp.asarray(hot), hot_node_capacity=64,
+                            hot_edge_capacity=1024)
+    r1, _ = summarized_pagerank(summary, r0, num_iters=10)
+    cold = ~hot & np.asarray(g.node_active)
+    np.testing.assert_array_equal(np.asarray(r1)[cold], np.asarray(r0)[cold])
+
+
+def test_b_in_matches_bruteforce():
+    """Conservation: b_in equals the brute-force sum over E_B per target."""
+    rng = np.random.default_rng(5)
+    src, dst = gnm_edges(60, 400, seed=5)
+    g = G.from_edges(src, dst, 64, 512)
+    r0, _ = pagerank(g, num_iters=10)
+    hot = np.zeros(64, bool)
+    hot[rng.choice(60, 20, replace=False)] = True
+    hot &= np.asarray(g.node_active)
+    summary = build_summary(g, r0, jnp.asarray(hot), hot_node_capacity=32,
+                            hot_edge_capacity=512)
+    out_deg = np.asarray(g.out_deg)
+    r = np.asarray(r0)
+    hot_ids = np.asarray(summary.hot_ids)[: int(summary.num_hot)]
+    for i, z in enumerate(hot_ids):
+        ref = sum(
+            r[u] / out_deg[u]
+            for u, v in zip(src, dst)
+            if v == z and not hot[u] and out_deg[u] > 0
+        )
+        np.testing.assert_allclose(float(np.asarray(summary.b_in)[i]), ref,
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_summary_overflow_flag():
+    src, dst = gnm_edges(60, 400, seed=6)
+    g = G.from_edges(src, dst, 64, 512)
+    r0, _ = pagerank(g, num_iters=5)
+    hot = jnp.asarray(np.asarray(g.node_active))
+    summary = build_summary(g, r0, hot, hot_node_capacity=8,
+                            hot_edge_capacity=512)
+    assert bool(summary.overflow)
+
+
+def test_summary_edge_counts_match_bruteforce():
+    rng = np.random.default_rng(7)
+    src, dst = gnm_edges(60, 300, seed=7)
+    g = G.from_edges(src, dst, 64, 512)
+    r0, _ = pagerank(g, num_iters=5)
+    hot = np.zeros(64, bool)
+    hot[rng.choice(60, 25, replace=False)] = True
+    hot &= np.asarray(g.node_active)
+    s = build_summary(g, r0, jnp.asarray(hot), hot_node_capacity=64,
+                      hot_edge_capacity=512)
+    ek_ref = sum(1 for u, v in zip(src, dst) if hot[u] and hot[v])
+    eb_ref = sum(1 for u, v in zip(src, dst) if (not hot[u]) and hot[v])
+    assert int(s.num_ek) == ek_ref
+    assert int(s.num_eb) == eb_ref
+
+
+# ---------------------------------------------------------------------------
+# compaction helper
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    e=st.integers(1, 3000),
+    density=st.floats(0.0, 1.0),
+    size=st.sampled_from([16, 128, 1024]),
+    seed=st.integers(0, 2**16),
+)
+def test_compact_indices_property(e, density, size, seed):
+    rng = np.random.default_rng(seed)
+    mask = rng.random(e) < density
+    idx = np.asarray(compact_indices(jnp.asarray(mask), size))
+    n_set = int(mask.sum())
+    got = idx[idx < e]
+    expect = np.nonzero(mask)[0]
+    if n_set <= size:
+        # exact set recovery, count filled = n_set, rest sentinel
+        assert sorted(got.tolist()) == expect.tolist()
+        assert (idx >= e).sum() == size - n_set
+    else:
+        # overflow: buffer holds `size` distinct true indices
+        assert len(got) == size
+        assert len(set(got.tolist())) == size
+        assert set(got.tolist()) <= set(expect.tolist())

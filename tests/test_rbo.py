@@ -1,0 +1,68 @@
+"""RBO metric: known values + hypothesis properties."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.metrics.rbo import rbo_extrapolated, rbo_from_scores
+
+
+def test_identity_is_one():
+    assert rbo_extrapolated([1, 2, 3, 4], [1, 2, 3, 4]) == 1.0
+
+
+def test_disjoint_is_zero():
+    assert rbo_extrapolated([1, 2, 3], [4, 5, 6]) == 0.0
+
+
+def test_empty_lists():
+    assert rbo_extrapolated([], []) == 1.0
+    assert rbo_extrapolated([1], []) == 0.0
+
+
+def test_same_set_different_order_below_one():
+    v = rbo_extrapolated([1, 2, 3, 4], [4, 3, 2, 1], p=0.9)
+    assert 0.0 < v < 1.0
+
+
+def test_top_weightedness():
+    """Disagreement at the top hurts more than at the bottom."""
+    base = list(range(20))
+    swap_top = [1, 0] + base[2:]
+    swap_bottom = base[:-2] + [base[-1], base[-2]]
+    v_top = rbo_extrapolated(base, swap_top, p=0.9)
+    v_bottom = rbo_extrapolated(base, swap_bottom, p=0.9)
+    assert v_bottom > v_top
+
+
+def test_known_value_two_lists():
+    # S=[a,b], T=[b,a], p=0.5: A_1=0, A_2=1 -> (1-p)*A_1*p^0 + A_2*p^1 = 0.5
+    assert abs(rbo_extrapolated(["a", "b"], ["b", "a"], p=0.5) - 0.5) < 1e-12
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    perm_seed=st.integers(0, 2**16),
+    n=st.integers(1, 60),
+    p=st.floats(0.1, 0.99),
+)
+def test_bounds_and_symmetry(perm_seed, n, p):
+    rng = np.random.default_rng(perm_seed)
+    a = rng.permutation(n).tolist()
+    b = rng.permutation(n).tolist()
+    v1 = rbo_extrapolated(a, b, p=p)
+    v2 = rbo_extrapolated(b, a, p=p)
+    assert 0.0 <= v1 <= 1.0 + 1e-12
+    assert abs(v1 - v2) < 1e-12  # symmetric
+
+
+def test_rbo_from_scores_ranks_by_value():
+    a = np.array([0.1, 0.9, 0.5, 0.7])
+    b = np.array([0.2, 0.8, 0.4, 0.6])  # same induced ranking
+    assert rbo_from_scores(a, b, depth=4) == 1.0
+
+
+def test_rbo_from_scores_active_mask():
+    a = np.array([9.0, 0.1, 0.2, 0.3])
+    b = np.array([0.0, 0.1, 0.2, 0.3])  # vertex 0 differs wildly but inactive
+    active = np.array([False, True, True, True])
+    assert rbo_from_scores(a, b, depth=3, active=active) == 1.0

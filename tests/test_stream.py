@@ -1,0 +1,66 @@
+"""Stream building: conservation, chunking, shuffle determinism."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.graph.generators import gnm_edges
+from repro.stream import StreamConfig, build_stream
+
+
+def test_stream_conserves_edges():
+    src, dst = gnm_edges(100, 2000, seed=0)
+    cfg = StreamConfig(stream_size=500, num_queries=10, shuffle=True, seed=3)
+    es = build_stream(src, dst, cfg)
+    total = es.init_src.shape[0] + sum(s.shape[0] for s, _ in es.chunks)
+    assert total == src.shape[0] - (500 % 10)  # only whole chunks are kept
+    # every stream edge is from the dataset
+    ds = {(int(a), int(b)) for a, b in zip(src, dst)}
+    for s, d in es.chunks:
+        for a, b in zip(s, d):
+            assert (int(a), int(b)) in ds
+
+
+def test_stream_deterministic_given_seed():
+    src, dst = gnm_edges(50, 400, seed=1)
+    cfg = StreamConfig(stream_size=100, num_queries=5, shuffle=True, seed=9)
+    e1 = build_stream(src, dst, cfg)
+    e2 = build_stream(src, dst, cfg)
+    np.testing.assert_array_equal(e1.init_src, e2.init_src)
+    for (a1, b1), (a2, b2) in zip(e1.chunks, e2.chunks):
+        np.testing.assert_array_equal(a1, a2)
+        np.testing.assert_array_equal(b1, b2)
+
+
+def test_unshuffled_preserves_dataset_order():
+    src, dst = gnm_edges(50, 400, seed=2)
+    # dedupe: duplicate edges make dataset positions ambiguous
+    key = src.astype(np.int64) * 2**32 + dst.astype(np.int64)
+    _, idx = np.unique(key, return_index=True)
+    idx.sort()
+    src, dst = src[idx], dst[idx]
+    cfg = StreamConfig(stream_size=100, num_queries=5, shuffle=False, seed=9)
+    es = build_stream(src, dst, cfg)
+    flat_s = np.concatenate([s for s, _ in es.chunks])
+    # order of sampled edges matches their relative order in the dataset
+    ds = {(int(a), int(b)): i for i, (a, b) in enumerate(zip(src, dst))}
+    flat_d = np.concatenate([d for _, d in es.chunks])
+    positions = [ds[(int(a), int(b))] for a, b in zip(flat_s, flat_d)]
+    assert positions == sorted(positions)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(50, 500),
+    q=st.integers(1, 20),
+    ssize=st.integers(10, 200),
+    seed=st.integers(0, 2**16),
+)
+def test_chunks_uniform_size(m, q, ssize, seed):
+    src, dst = gnm_edges(40, m, seed=seed % 7)
+    m = src.shape[0]
+    cfg = StreamConfig(stream_size=ssize, num_queries=q, shuffle=True, seed=seed)
+    es = build_stream(src, dst, cfg)
+    assert len(es.chunks) == q
+    sizes = {s.shape[0] for s, _ in es.chunks}
+    assert len(sizes) == 1  # all chunks equal size
+    assert sizes.pop() == min(ssize, m // 2) // q
