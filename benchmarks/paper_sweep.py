@@ -9,6 +9,10 @@ and speedup (Figs 6/10/14/18/22/26/30) — into artifacts/paper_sweep/.
 
   PYTHONPATH=src python -m benchmarks.paper_sweep --datasets synth-citation
   PYTHONPATH=src python -m benchmarks.paper_sweep --full
+  PYTHONPATH=src python -m benchmarks.paper_sweep --algorithm hits
+
+Runs through the session front door (`repro.api.session`), so `--algorithm`
+sweeps any registered StreamingAlgorithm with the same protocol.
 """
 
 from __future__ import annotations
@@ -21,7 +25,8 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core import Action, EngineConfig, VeilGraphEngine
+import repro as veilgraph
+from repro.core import Action
 from repro.core.policies import always
 from repro.graph.generators import DATASETS, generate
 from repro.metrics import rbo_from_scores
@@ -42,11 +47,11 @@ def _pow2(x: int) -> int:
     return n
 
 
-def _engine_cfg(spec, stream, r, n, delta, hot_nodes=None,
-                hot_edges=None) -> EngineConfig:
+def _session_knobs(spec, stream, r, n, delta, hot_nodes=None,
+                   hot_edges=None) -> dict:
     n_cap = spec.nodes
     e_cap = int(stream.total_edges * 1.1) + 1024
-    return EngineConfig(
+    return dict(
         node_capacity=n_cap, edge_capacity=e_cap,
         hot_node_capacity=min(hot_nodes or n_cap, n_cap),
         hot_edge_capacity=min(hot_edges or e_cap, e_cap),
@@ -54,51 +59,47 @@ def _engine_cfg(spec, stream, r, n, delta, hot_nodes=None,
     )
 
 
-def calibrate_capacities(spec, stream, r, n, delta, probe_queries=5):
+def calibrate_capacities(spec, stream, algorithm, r, n, delta,
+                         probe_queries=5):
     """Capacity planning: probe the first queries with generous buffers and
     size the hot buffers to ~1.5x the observed peak (pow2-bucketed so combos
     share compilations).  This is the deployment-realistic counterpart of the
     paper's dynamically-sized Flink summary; overflow at runtime falls back
     to exact recomputation and is recorded."""
-    cfg = _engine_cfg(spec, stream, r, n, delta)
-    eng = VeilGraphEngine(cfg)
-    eng.start(stream.init_src, stream.init_dst)
+    sess = veilgraph.session(stream, algorithm,
+                             **_session_knobs(spec, stream, r, n, delta))
     max_hot, max_ek = 1, 1
-    for q, (s, d) in enumerate(stream):
+    for q, res in enumerate(sess.play()):
         if q >= probe_queries:
             break
-        eng.register_add_edges(s, d)
-        _, st = eng.query()
-        max_hot = max(max_hot, st.num_hot)
-        max_ek = max(max_ek, st.num_ek + 1)
+        max_hot = max(max_hot, res.stats.num_hot)
+        max_ek = max(max_ek, res.stats.num_ek + 1)
     return (max(2048, _pow2(int(1.5 * max_hot))),
             max(8192, _pow2(int(1.5 * max_ek))))
 
 
-def ground_truth(spec, stream, queries):
-    cfg = _engine_cfg(spec, stream, 0.2, 1, 0.1)
-    eng = VeilGraphEngine(cfg, on_query=always(Action.EXACT))
-    eng.start(stream.init_src, stream.init_dst)
+def ground_truth(spec, stream, algorithm, queries):
+    sess = veilgraph.session(stream, algorithm,
+                             on_query=always(Action.EXACT),
+                             **_session_knobs(spec, stream, 0.2, 1, 0.1))
     ranks, times = [], []
-    for s, d in stream:
-        eng.register_add_edges(s, d)
-        rk, st = eng.query()
-        ranks.append(rk)
-        times.append(st.wall_time_s)
+    for res in sess.play():
+        ranks.append(res.scores)
+        times.append(res.stats.wall_time_s)
     return ranks, times
 
 
-def run_combo(spec, stream, r, n, delta, gt_ranks, gt_times, depth):
-    hot_nodes, hot_edges = calibrate_capacities(spec, stream, r, n, delta)
-    cfg = _engine_cfg(spec, stream, r, n, delta, hot_nodes, hot_edges)
-    eng = VeilGraphEngine(cfg)
-    eng.start(stream.init_src, stream.init_dst)
+def run_combo(spec, stream, algorithm, r, n, delta, gt_ranks, gt_times,
+              depth):
+    hot_nodes, hot_edges = calibrate_capacities(
+        spec, stream, algorithm, r, n, delta)
+    knobs = _session_knobs(spec, stream, r, n, delta, hot_nodes, hot_edges)
+    sess = veilgraph.session(stream, algorithm, **knobs)
     rows = []
-    for q, (s, d) in enumerate(stream):
-        eng.register_add_edges(s, d)
-        rk, st = eng.query()
-        rbo = rbo_from_scores(rk, gt_ranks[q], depth=depth,
-                              active=np.asarray(eng.state.node_active))
+    for q, res in enumerate(sess.play()):
+        st = res.stats
+        rbo = rbo_from_scores(res.scores, gt_ranks[q], depth=depth,
+                              active=np.asarray(sess.engine.state.node_active))
         rows.append({
             "q": q,
             "vertex_ratio": st.vertex_ratio,
@@ -109,11 +110,14 @@ def run_combo(spec, stream, r, n, delta, gt_ranks, gt_times, depth):
             "fallback": bool(st.overflow_fallback),
             "iterations": st.iterations,
         })
-    return rows, (cfg.hot_node_capacity, cfg.hot_edge_capacity)
+    # record the capacities the engine actually ran with (the calibrated
+    # values are clamped to the graph capacities inside _session_knobs)
+    return rows, (knobs["hot_node_capacity"], knobs["hot_edge_capacity"])
 
 
 def sweep_dataset(name: str, queries: int = 50, shuffle: bool = True,
-                  seed: int = 7, combos=None, verbose=True):
+                  seed: int = 7, combos=None, verbose=True,
+                  algorithm: str = "pagerank"):
     ART.mkdir(parents=True, exist_ok=True)
     spec = DATASETS[name]
     src, dst = generate(spec, seed=0)
@@ -125,7 +129,7 @@ def sweep_dataset(name: str, queries: int = 50, shuffle: bool = True,
         print(f"[{name}] V~{stream.total_nodes} E={stream.total_edges} "
               f"chunk={sc.edges_per_query} rbo_depth={depth}")
     t0 = time.time()
-    gt_ranks, gt_times = ground_truth(spec, stream, queries)
+    gt_ranks, gt_times = ground_truth(spec, stream, algorithm, queries)
     if verbose:
         print(f"  ground truth: {time.time()-t0:.1f}s "
               f"(mean query {1e3*np.mean(gt_times[1:]):.1f} ms)")
@@ -134,8 +138,8 @@ def sweep_dataset(name: str, queries: int = 50, shuffle: bool = True,
     results = {}
     for r, n, delta in combos:
         t0 = time.time()
-        rows, cfg_used = run_combo(spec, stream, r, n, delta, gt_ranks,
-                                   gt_times, depth)
+        rows, cfg_used = run_combo(spec, stream, algorithm, r, n, delta,
+                                   gt_ranks, gt_times, depth)
         key = f"r{r}_n{n}_d{delta}"
         results[key] = rows
         w = rows[1:]
@@ -148,12 +152,14 @@ def sweep_dataset(name: str, queries: int = 50, shuffle: bool = True,
             "speedup_min": float(np.min([x["speedup"] for x in w])),
             "fallbacks": int(np.sum([x["fallback"] for x in w])),
         }
-        out = {"dataset": name, "r": r, "n": n, "delta": delta,
+        out = {"dataset": name, "algorithm": algorithm,
+               "r": r, "n": n, "delta": delta,
                "queries": queries, "shuffle": shuffle,
                "hot_node_capacity": cfg_used[0],
                "hot_edge_capacity": cfg_used[1],
                "summary": summary, "rows": rows}
-        (ART / f"{name}__{key}.json").write_text(json.dumps(out))
+        suffix = "" if algorithm == "pagerank" else f"__{algorithm}"
+        (ART / f"{name}{suffix}__{key}.json").write_text(json.dumps(out))
         if verbose:
             print(f"  r={r} n={n} Δ={delta}: vr={summary['vertex_ratio']:.3f} "
                   f"er={summary['edge_ratio']:.3f} rbo={summary['rbo']:.4f} "
@@ -170,11 +176,14 @@ def main(argv=None):
                     help="all datasets × all 18 combos")
     ap.add_argument("--queries", type=int, default=50)
     ap.add_argument("--no-shuffle", action="store_true")
+    ap.add_argument("--algorithm", default="pagerank",
+                    choices=sorted(veilgraph.available_algorithms()))
     args = ap.parse_args(argv)
     names = sorted(DATASETS) if args.full else args.datasets
     for name in names:
         sweep_dataset(name, queries=args.queries,
-                      shuffle=not args.no_shuffle)
+                      shuffle=not args.no_shuffle,
+                      algorithm=args.algorithm)
 
 
 if __name__ == "__main__":

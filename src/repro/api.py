@@ -1,0 +1,266 @@
+"""The session-style front door to VeilGraph.
+
+One call builds a started engine around any registered
+:class:`~repro.core.algorithm.StreamingAlgorithm`:
+
+    import repro as veilgraph   # or: from repro.api import session
+
+    with veilgraph.session((src, dst), algorithm="pagerank") as s:
+        s.add_edges(new_src, new_dst)
+        result = s.query()
+        print(result.top(10), result.stats.vertex_ratio)
+
+``graph_source`` may be a ``(src, dst)`` edge-array pair, a named synthetic
+dataset (``repro.graph.generators.DATASETS``), or a prebuilt
+:class:`~repro.stream.EdgeStream` — in the stream case the session starts
+from the stream's initial graph and ``s.play()`` replays the update chunks,
+one query per chunk.
+
+Capacities are sized automatically from the source when no
+:class:`EngineConfig` is given (hot buffers default to full capacity, so a
+fresh session never overflow-falls-back; pass explicit ``hot_node_capacity``
+/ ``hot_edge_capacity`` to get the paper's bounded-summary behaviour).
+
+Migration from the pre-plugin API
+---------------------------------
+``VeilGraphEngine(cfg, on_query=...)`` keeps working — it runs PageRank
+configured from the config's ``beta``/``num_iters``/``tol`` knobs.  New code
+should prefer::
+
+    s = veilgraph.session(src_dst, algorithm="hits", num_iters=50)
+    s = veilgraph.session(src_dst, algorithm=PersonalizedPageRankAlgorithm(seeds=(3,)))
+
+with the ``r``/``n``/``delta`` model knobs and buffer capacities passed as
+keyword overrides.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, fields
+from typing import Callable, Dict, Iterator, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core.algorithm import (Action, StreamingAlgorithm,
+                                  available_algorithms, make_algorithm)
+from repro.core.engine import EngineConfig, QueryStats, VeilGraphEngine
+from repro.graph.generators import DATASETS, generate
+from repro.stream import EdgeStream
+
+GraphSource = Union[str, Tuple[np.ndarray, np.ndarray], EdgeStream]
+
+#: EngineConfig fields accepted as keyword overrides by :func:`session`.
+_CONFIG_KEYS = frozenset(f.name for f in fields(EngineConfig))
+
+
+def _top_ids(scores: np.ndarray, k: int) -> np.ndarray:
+    """Ids of the k highest-scored vertices (descending, stable ties)."""
+    return np.argsort(-scores, kind="stable")[:k]
+
+
+@dataclass
+class QueryResult:
+    """One served query: the score vector plus the engine's stats row."""
+
+    scores: np.ndarray
+    stats: QueryStats
+
+    @property
+    def action(self) -> str:
+        return self.stats.action
+
+    def top(self, k: int = 10) -> np.ndarray:
+        return _top_ids(self.scores, k)
+
+
+class VeilGraphSession:
+    """A started engine plus the streaming conveniences around it.
+
+    Construct via :func:`session`.  Usable as a context manager (``with`` …)
+    so OnStop fires on exit; the raw engine stays reachable at ``.engine``
+    for anything not surfaced here.
+    """
+
+    def __init__(self, engine: VeilGraphEngine,
+                 stream: Optional[EdgeStream] = None):
+        self.engine = engine
+        self.stream = stream
+
+    # ---- convenience views ----------------------------------------------
+    @property
+    def algorithm(self) -> StreamingAlgorithm:
+        return self.engine.algorithm
+
+    @property
+    def scores(self) -> np.ndarray:
+        """Current score vector (whatever the last query/start computed)."""
+        return np.asarray(self.engine.ranks)
+
+    @property
+    def stats_log(self):
+        return self.engine.stats_log
+
+    def top(self, k: int = 10) -> np.ndarray:
+        return _top_ids(self.scores, k)
+
+    # ---- streaming -------------------------------------------------------
+    def add_edges(self, src, dst) -> "VeilGraphSession":
+        self.engine.register_add_edges(np.asarray(src), np.asarray(dst))
+        return self
+
+    def remove_edges(self, src, dst) -> "VeilGraphSession":
+        self.engine.register_remove_edges(np.asarray(src), np.asarray(dst))
+        return self
+
+    def query(self, msg: Optional[Dict] = None) -> QueryResult:
+        scores, stats = self.engine.query(msg)
+        return QueryResult(scores=scores, stats=stats)
+
+    def play(self) -> Iterator[QueryResult]:
+        """Replay the attached stream: one update chunk + one query each."""
+        if self.stream is None:
+            raise ValueError(
+                "session was not built from an EdgeStream; feed updates "
+                "with add_edges()/query() instead")
+        for s, d in self.stream:
+            self.add_edges(s, d)
+            yield self.query()
+
+    # ---- lifecycle -------------------------------------------------------
+    def close(self):
+        self.engine.stop()
+
+    def __enter__(self) -> "VeilGraphSession":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+def _resolve_source(graph_source: GraphSource):
+    """-> (init_src, init_dst, stream_or_none, node_hint, edge_hint)."""
+    if isinstance(graph_source, str):
+        try:
+            spec = DATASETS[graph_source]
+        except KeyError:
+            raise KeyError(
+                f"unknown dataset {graph_source!r}; available: "
+                f"{', '.join(sorted(DATASETS))}") from None
+        src, dst = generate(spec)
+        return src, dst, None, spec.nodes, src.shape[0]
+    if isinstance(graph_source, EdgeStream):
+        es = graph_source
+        return (es.init_src, es.init_dst, es, es.total_nodes, es.total_edges)
+    src, dst = graph_source
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+    nodes = 0
+    if src.size:
+        # raw edge lists carry no node-count bound, so leave headroom for
+        # later add_edges with unseen ids (the engine rejects ids beyond
+        # node_capacity rather than corrupting silently)
+        nodes = int((int(max(src.max(), dst.max())) + 1) * 1.1) + 16
+    return src, dst, None, nodes, src.shape[0]
+
+
+def session(
+    graph_source: GraphSource,
+    algorithm: Union[StreamingAlgorithm, str] = "pagerank",
+    config: Optional[EngineConfig] = None,
+    *,
+    on_start: Optional[Callable] = None,
+    before_updates: Optional[Callable] = None,
+    on_query: Optional[Callable] = None,
+    on_query_result: Optional[Callable] = None,
+    on_stop: Optional[Callable] = None,
+    **overrides,
+) -> VeilGraphSession:
+    """Build and start a :class:`VeilGraphSession`.
+
+    ``algorithm`` is a registry name (see
+    :func:`repro.core.algorithm.available_algorithms`) or an instance.
+    Keyword ``overrides`` split two ways: names matching
+    :class:`EngineConfig` fields override the (auto-sized) config, the rest
+    are forwarded to the algorithm factory::
+
+        veilgraph.session("synth-citation", "personalized-pagerank",
+                          r=0.3, delta=0.5, seeds=(0, 7), num_iters=50)
+
+    The five UDFs pass straight through to the engine.
+    """
+    init_src, init_dst, stream, node_hint, edge_hint = _resolve_source(
+        graph_source)
+
+    cfg_over = {k: v for k, v in overrides.items() if k in _CONFIG_KEYS}
+    algo_params = {k: v for k, v in overrides.items() if k not in _CONFIG_KEYS}
+    # beta/num_iters/tol are EngineConfig fields only for the legacy
+    # no-algorithm constructor; with an explicit algorithm they belong to
+    # the algorithm itself, so forward them to the factory — and refuse to
+    # drop them silently when they cannot reach it (instance passed, or the
+    # factory doesn't take the knob).
+    _legacy_knobs = [k for k in ("beta", "num_iters", "tol") if k in cfg_over]
+    if isinstance(algorithm, StreamingAlgorithm):
+        if _legacy_knobs:
+            raise ValueError(
+                f"{sorted(_legacy_knobs)} cannot be applied to an already-"
+                f"constructed algorithm — pass them to "
+                f"{type(algorithm).__name__}(...) instead")
+    elif _legacy_knobs:
+        from repro.core.algorithm import _ALIASES, _REGISTRY
+        import inspect
+
+        canonical = _ALIASES.get(algorithm, algorithm)
+        accepted = inspect.signature(_REGISTRY[canonical]).parameters \
+            if canonical in _REGISTRY else {}
+        rejected = [k for k in _legacy_knobs if k not in accepted]
+        if rejected:
+            raise ValueError(
+                f"algorithm {algorithm!r} does not accept {sorted(rejected)}")
+        for k in _legacy_knobs:
+            # the knob belongs to the algorithm once forwarded — leaving it
+            # in cfg_over would double-apply it to EngineConfig and falsely
+            # conflict with an explicitly passed config
+            algo_params[k] = cfg_over.pop(k)
+    algo = make_algorithm(algorithm, **algo_params)
+
+    if config is None:
+        node_cap = cfg_over.pop("node_capacity", max(node_hint, 2))
+        edge_cap = cfg_over.pop(
+            "edge_capacity", int(edge_hint * 1.15) + 1024)
+        config = EngineConfig(
+            node_capacity=node_cap,
+            edge_capacity=edge_cap,
+            hot_node_capacity=cfg_over.pop("hot_node_capacity", node_cap),
+            hot_edge_capacity=cfg_over.pop("hot_edge_capacity", edge_cap),
+            **cfg_over,
+        )
+    elif cfg_over:
+        raise ValueError(
+            f"pass either an explicit config or field overrides, not both: "
+            f"{sorted(cfg_over)}")
+
+    udfs = {}
+    if on_start is not None:
+        udfs["on_start"] = on_start
+    if before_updates is not None:
+        udfs["before_updates"] = before_updates
+    if on_query is not None:
+        udfs["on_query"] = on_query
+    if on_query_result is not None:
+        udfs["on_query_result"] = on_query_result
+    if on_stop is not None:
+        udfs["on_stop"] = on_stop
+
+    engine = VeilGraphEngine(config, algo, **udfs)
+    engine.start(init_src, init_dst)
+    return VeilGraphSession(engine, stream)
+
+
+__all__ = [
+    "Action",
+    "QueryResult",
+    "VeilGraphSession",
+    "available_algorithms",
+    "session",
+]

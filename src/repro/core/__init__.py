@@ -1,6 +1,14 @@
 """VeilGraph core: the paper's contribution — approximate streaming graph
-processing via hot-vertex selection + big-vertex summarization."""
-from repro.core.engine import Action, EngineConfig, QueryStats, VeilGraphEngine
+processing via hot-vertex selection + big-vertex summarization — behind a
+pluggable :class:`StreamingAlgorithm` interface (PageRank is the paper's
+case study; personalized PageRank and HITS ship alongside it)."""
+from repro.core.algorithm import (Action, AlgoState, HITSAlgorithm,
+                                  PageRankAlgorithm,
+                                  PersonalizedPageRankAlgorithm,
+                                  StreamingAlgorithm, available_algorithms,
+                                  make_algorithm, register_algorithm)
+from repro.core.engine import (EngineConfig, QueryStats, VeilGraphEngine)
+from repro.core.hits import hits, summarized_hits
 from repro.core.hotset import HotSetStats, select_hot_set
 from repro.core.pagerank import (SummaryBuffers, build_summary, pagerank,
                                  summarized_pagerank)

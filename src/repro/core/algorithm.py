@@ -1,0 +1,405 @@
+"""The pluggable algorithm layer: ``StreamingAlgorithm`` + registry.
+
+The paper presents VeilGraph as a *general* model for approximate graph
+processing — the five-UDF structure (Alg. 1) and the hot-vertex/big-vertex
+summarization (§3) are algorithm-agnostic, with PageRank only the case
+study.  This module makes that separation concrete: the engine owns stream
+ingestion, update buffering, hot-set selection and the action policy, while
+everything rank-computation-specific lives behind :class:`StreamingAlgorithm`:
+
+    init_state(graph)            -> state pytree (dict of arrays)
+    exact(state, graph)          -> (state', iterations)        # ground truth
+    build_summaries(state, graph, hot, caps) -> (SummaryBuffers, ...)
+    summarized(state, graph, summaries)      -> (state', iterations)
+    score_view(state)            -> f32[N_cap]  # drives hot-set Δ + ranking
+
+Algorithms are **frozen dataclasses** so instances are hashable and can ride
+through ``jax.jit`` as static arguments — the generic fused query step in
+:mod:`repro.core.fused` traces ``build_summaries`` + ``summarized`` inline
+into one XLA program per (algorithm, capacities) pair.
+
+Three algorithms ship in the registry:
+
+- ``pagerank``  — the paper's case study (Gelly-style normalization);
+- ``personalized-pagerank`` — seeded teleport vector, same summarized path;
+- ``hits``      — hubs & authorities via a forward + reverse summary pair.
+
+Register your own with :func:`register_algorithm` and run it through
+``veilgraph``'s session front door (:func:`repro.api.session`).
+"""
+
+from __future__ import annotations
+
+import abc
+import enum
+from dataclasses import dataclass
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hits import hits as _hits
+from repro.core.hits import summarized_hits as _summarized_hits
+from repro.core.pagerank import SummaryBuffers
+from repro.core.pagerank import build_summary as _build_summary
+from repro.core.pagerank import pagerank as _pagerank
+from repro.core.pagerank import summarized_pagerank as _summarized_pagerank
+from repro.graph.graph import GraphState
+
+#: Algorithm state is a flat dict of device arrays — a JAX pytree, so the
+#: whole engine step stays jit-compatible and donation-friendly.
+AlgoState = Dict[str, jax.Array]
+
+
+class Action(enum.Enum):
+    """The paper's three OnQuery action indicators (Alg. 1 lines 9-19)."""
+
+    REPEAT_LAST = "repeat-last-answer"
+    APPROXIMATE = "compute-approximate"
+    EXACT = "compute-exact"
+
+
+class StreamingAlgorithm(abc.ABC):
+    """Interface every engine-pluggable algorithm implements.
+
+    Subclasses must be immutable/hashable (use ``@dataclass(frozen=True)``)
+    — instances are jit static arguments.  Numeric knobs (β, iteration
+    budget, seeds) are dataclass fields; per-vertex state (score vectors,
+    personalization vectors) lives in the state dict returned by
+    :meth:`init_state`.
+    """
+
+    #: registry key; subclasses override.
+    name: str = "abstract"
+    #: False opts an algorithm out of the single-XLA-program fused query
+    #: path (the engine then runs select/summarize/iterate as separate jits).
+    supports_fused: bool = True
+    #: True rescales score_view to mean 1 over active vertices inside the
+    #: hot-set Δ-dilution bound (Eqs. 4-5 are calibrated against
+    #: PageRank-scale scores; L1-normalized algorithms opt in).
+    normalize_selection_scores: bool = False
+
+    @abc.abstractmethod
+    def init_state(self, graph: GraphState) -> AlgoState:
+        """Fresh per-vertex state sized to ``graph.node_capacity``."""
+
+    @abc.abstractmethod
+    def exact(
+        self, state: AlgoState, graph: GraphState
+    ) -> Tuple[AlgoState, jax.Array]:
+        """Full recomputation over the live graph (the exact reference).
+
+        Implementations may warm-start from ``state`` — every algorithm
+        here converges to a unique fixed point, so warm starts only save
+        iterations.
+        """
+
+    def build_summaries(
+        self,
+        state: AlgoState,
+        graph: GraphState,
+        hot_mask: jax.Array,
+        *,
+        hot_node_capacity: int,
+        hot_edge_capacity: int,
+    ) -> Tuple[SummaryBuffers, ...]:
+        """Compacted summary graph(s) the summarized step consumes.
+
+        The default is the paper's single forward big-vertex summary with
+        PageRank edge weights, frozen from :meth:`score_view`.  Algorithms
+        needing different weights or both orientations (HITS) override.
+        """
+        return (
+            _build_summary(
+                graph,
+                self.score_view(state),
+                hot_mask,
+                hot_node_capacity=hot_node_capacity,
+                hot_edge_capacity=hot_edge_capacity,
+            ),
+        )
+
+    @abc.abstractmethod
+    def summarized(
+        self,
+        state: AlgoState,
+        graph: GraphState,
+        summaries: Tuple[SummaryBuffers, ...],
+    ) -> Tuple[AlgoState, jax.Array]:
+        """Approximate update restricted to the hot set (§3.1)."""
+
+    @abc.abstractmethod
+    def score_view(self, state: AlgoState) -> jax.Array:
+        """f32[N_cap] score vector: the query answer, and the v_s term in
+        the hot-set Δ-expansion (Eqs. 4-5)."""
+
+
+def summaries_overflow(summaries: Tuple[SummaryBuffers, ...]) -> jax.Array:
+    """True if any summary exceeded its capacities (caller must fall back)."""
+    flag = summaries[0].overflow
+    for s in summaries[1:]:
+        flag = flag | s.overflow
+    return flag
+
+
+# ---------------------------------------------------------------------------
+# PageRank — the paper's case study
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PageRankAlgorithm(StreamingAlgorithm):
+    """Gelly-style PageRank (§2) on the five-UDF engine.
+
+    ``warm_start=False`` (default) keeps the paper protocol: every EXACT
+    action recomputes from the uniform start, so ground-truth wall times are
+    comparable across queries and to prior sweep artifacts.  Set True to
+    seed the power iteration from the previous ranks (fewer iterations, same
+    fixed point — PageRank is a contraction).
+    """
+
+    beta: float = 0.85
+    num_iters: int = 30
+    tol: float = 0.0
+    teleport_by_n: bool = False
+    dangling: bool = False
+    warm_start: bool = False
+
+    name = "pagerank"
+
+    def init_state(self, graph: GraphState) -> AlgoState:
+        init = 1.0 / jnp.maximum(
+            graph.num_active_nodes().astype(jnp.float32), 1.0
+        ) if self.teleport_by_n else 1.0
+        return {"ranks": jnp.where(graph.node_active, init, 0.0).astype(jnp.float32)}
+
+    def exact(self, state, graph):
+        ranks, iters = _pagerank(
+            graph,
+            state["ranks"] if self.warm_start else None,
+            beta=self.beta,
+            num_iters=self.num_iters,
+            tol=self.tol,
+            teleport_by_n=self.teleport_by_n,
+            dangling=self.dangling,
+        )
+        return {"ranks": ranks}, iters
+
+    def summarized(self, state, graph, summaries):
+        (summary,) = summaries
+        ranks, iters = _summarized_pagerank(
+            summary,
+            state["ranks"],
+            beta=self.beta,
+            num_iters=self.num_iters,
+            tol=self.tol,
+        )
+        return {"ranks": ranks}, iters
+
+    def score_view(self, state):
+        return state["ranks"]
+
+
+# ---------------------------------------------------------------------------
+# Personalized PageRank — seeded teleport vector
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PersonalizedPageRankAlgorithm(StreamingAlgorithm):
+    """PageRank with teleport mass restricted to a seed set.
+
+    ``seeds`` is a (hashable) tuple of vertex ids; the teleport vector is
+    uniform over the seeds and lives in the state dict (it is data, not a
+    static knob).  Rankings are localized around the seeds — the streaming
+    scenario is e.g. per-user recommendation feeds over a shared engine.
+    """
+
+    seeds: Tuple[int, ...] = (0,)
+    beta: float = 0.85
+    num_iters: int = 30
+    tol: float = 0.0
+    # False = EXACT recomputes from the teleport vector (protocol-faithful
+    # baseline); True = seed from previous ranks (same fixed point, faster)
+    warm_start: bool = False
+
+    name = "personalized-pagerank"
+    normalize_selection_scores = True
+
+    def __post_init__(self):
+        if not self.seeds:
+            raise ValueError("personalized-pagerank needs >= 1 seed vertex")
+
+    def _teleport(self, n_cap: int) -> jax.Array:
+        seeds = jnp.asarray(self.seeds, jnp.int32)
+        if int(seeds.min()) < 0:  # negative ids would wrap via jax indexing
+            raise ValueError(f"seed {int(seeds.min())} is negative")
+        if int(seeds.max()) >= n_cap:
+            raise ValueError(
+                f"seed {int(seeds.max())} >= node_capacity {n_cap}")
+        t = jnp.zeros((n_cap,), jnp.float32)
+        return t.at[seeds].add(1.0 / len(self.seeds))
+
+    def init_state(self, graph: GraphState) -> AlgoState:
+        t = self._teleport(graph.node_capacity)
+        return {"ranks": t, "teleport": t}
+
+    def exact(self, state, graph):
+        ranks, iters = _pagerank(
+            graph,
+            state["ranks"] if self.warm_start else None,
+            beta=self.beta,
+            num_iters=self.num_iters,
+            tol=self.tol,
+            teleport_v=state["teleport"],
+        )
+        return {"ranks": ranks, "teleport": state["teleport"]}, iters
+
+    def summarized(self, state, graph, summaries):
+        (summary,) = summaries
+        ranks, iters = _summarized_pagerank(
+            summary,
+            state["ranks"],
+            beta=self.beta,
+            num_iters=self.num_iters,
+            tol=self.tol,
+            teleport_v=state["teleport"],
+        )
+        return {"ranks": ranks, "teleport": state["teleport"]}, iters
+
+    def score_view(self, state):
+        return state["ranks"]
+
+
+# ---------------------------------------------------------------------------
+# HITS — hubs & authorities through a forward + reverse summary pair
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HITSAlgorithm(StreamingAlgorithm):
+    """Kleinberg's HITS with per-iteration L1 normalization.
+
+    State carries both vectors; :meth:`score_view` exposes authorities (the
+    usual query answer — swap for hubs with ``rank_by="hub"``).  The
+    summarized path freezes cold contributions in *both* directions, which
+    needs the forward and the reverse (transposed) big-vertex summary.
+
+    EXACT actions warm-start from the previous vectors: HITS converges to
+    the principal singular pair from any positive start, so unlike
+    PageRank's protocol there is no canonical cold baseline to preserve and
+    the warm start only saves iterations.
+    """
+
+    num_iters: int = 30
+    tol: float = 0.0
+    rank_by: str = "auth"
+
+    name = "hits"
+    normalize_selection_scores = True
+
+    def __post_init__(self):
+        if self.rank_by not in ("auth", "hub"):
+            raise ValueError(
+                f"rank_by must be 'auth' or 'hub', got {self.rank_by!r}")
+
+    def init_state(self, graph: GraphState) -> AlgoState:
+        n = jnp.maximum(graph.num_active_nodes().astype(jnp.float32), 1.0)
+        uniform = jnp.where(graph.node_active, 1.0 / n, 0.0).astype(jnp.float32)
+        return {"auth": uniform, "hub": uniform}
+
+    def exact(self, state, graph):
+        auth, hub, iters = _hits(
+            graph,
+            state["auth"],
+            state["hub"],
+            num_iters=self.num_iters,
+            tol=self.tol,
+        )
+        return {"auth": auth, "hub": hub}, iters
+
+    def build_summaries(
+        self, state, graph, hot_mask, *, hot_node_capacity, hot_edge_capacity
+    ):
+        fwd = _build_summary(
+            graph, state["hub"], hot_mask,
+            hot_node_capacity=hot_node_capacity,
+            hot_edge_capacity=hot_edge_capacity,
+            weight="unit",
+        )
+        rev = _build_summary(
+            graph, state["auth"], hot_mask,
+            hot_node_capacity=hot_node_capacity,
+            hot_edge_capacity=hot_edge_capacity,
+            weight="unit", reverse=True,
+        )
+        return (fwd, rev)
+
+    def summarized(self, state, graph, summaries):
+        fwd, rev = summaries
+        auth, hub, iters = _summarized_hits(
+            fwd, rev, state["auth"], state["hub"],
+            num_iters=self.num_iters, tol=self.tol,
+        )
+        return {"auth": auth, "hub": hub}, iters
+
+    def score_view(self, state):
+        return state["auth"] if self.rank_by == "auth" else state["hub"]
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[..., StreamingAlgorithm]] = {}
+#: alias -> canonical name.  Aliases resolve in :func:`make_algorithm` but
+#: never show up in :func:`available_algorithms` (and thus in CLI choices
+#: or benchmark artifact names), so one algorithm has one canonical spelling.
+_ALIASES: Dict[str, str] = {}
+
+
+def register_algorithm(
+    name: str,
+    factory: Callable[..., StreamingAlgorithm],
+    *,
+    aliases: Tuple[str, ...] = (),
+) -> None:
+    """Register an algorithm factory under ``name`` (overwrites allowed —
+    latest registration wins, so users can shadow the built-ins)."""
+    _REGISTRY[name] = factory
+    for alias in aliases:
+        _ALIASES[alias] = name
+
+
+def available_algorithms() -> Tuple[str, ...]:
+    """Canonical registered names (aliases resolve but are not listed)."""
+    return tuple(sorted(_REGISTRY))
+
+
+def make_algorithm(spec, **params) -> StreamingAlgorithm:
+    """Resolve ``spec`` into a :class:`StreamingAlgorithm` instance.
+
+    ``spec`` may be an instance (returned as-is; ``params`` must be empty),
+    or a registry name/alias with factory kwargs, e.g.
+    ``make_algorithm("personalized-pagerank", seeds=(3, 14))``.
+    """
+    if isinstance(spec, StreamingAlgorithm):
+        if params:
+            raise ValueError(
+                "algorithm instance given — pass parameters to its "
+                "constructor instead")
+        return spec
+    name = _ALIASES.get(spec, spec)
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown algorithm {spec!r}; registered: "
+            f"{', '.join(available_algorithms())}") from None
+    return factory(**params)
+
+
+register_algorithm("pagerank", PageRankAlgorithm)
+register_algorithm("personalized-pagerank", PersonalizedPageRankAlgorithm,
+                   aliases=("ppr",))
+register_algorithm("hits", HITSAlgorithm)

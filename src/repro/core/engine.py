@@ -7,34 +7,41 @@ arrives, and serves each query through the five-UDF structure:
     OnStart -> [BeforeUpdates -> ApplyUpdates -> OnQuery ->
                 {repeat-last | approximate | exact} -> OnQueryResult]* -> OnStop
 
+The engine is **algorithm-generic**: everything rank-computation-specific
+lives behind the :class:`~repro.core.algorithm.StreamingAlgorithm` plugin
+(PageRank is just the default).  The engine owns the graph state, the update
+buffers, the hot-set selection snapshots (previous degrees/activity) and the
+UDF policy loop; the algorithm owns its per-vertex state pytree (ranks,
+hub/authority vectors, teleport vectors, …) and its exact / summarized
+kernels.
+
 Heavy computation (update application, hot-set selection, summary
 construction, power iterations) is jitted with static capacities; the UDFs
 are host callbacks so users can express arbitrary policies, exactly as the
 paper's API intends.
+
+Prefer the session front door :func:`repro.api.session` for new code; the
+``VeilGraphEngine(cfg, on_query=...)`` constructor (algorithm omitted)
+remains supported as the legacy PageRank-only signature — the PageRank knobs
+on :class:`EngineConfig` (``beta``/``num_iters``/``tol``) configure the
+default algorithm in that case.
 """
 
 from __future__ import annotations
 
-import enum
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.pagerank import pagerank as _pagerank
-from repro.core.pagerank import build_summary as _build_summary
-from repro.core.pagerank import summarized_pagerank as _summarized_pagerank
-from repro.graph import graph as G
+from repro.core.algorithm import (Action, AlgoState, PageRankAlgorithm,
+                                  StreamingAlgorithm, make_algorithm,
+                                  summaries_overflow)
 from repro.core.hotset import select_hot_set
-
-
-class Action(enum.Enum):
-    REPEAT_LAST = "repeat-last-answer"
-    APPROXIMATE = "compute-approximate"
-    EXACT = "compute-exact"
+from repro.graph import graph as G
 
 
 @dataclass
@@ -43,7 +50,9 @@ class EngineConfig:
     edge_capacity: int
     hot_node_capacity: int
     hot_edge_capacity: int
-    # PageRank
+    # legacy PageRank knobs — configure the default algorithm when none is
+    # passed to the engine (kept for the old constructor signature; plugin
+    # algorithms carry their own numeric knobs)
     beta: float = 0.85
     num_iters: int = 30
     tol: float = 0.0
@@ -57,7 +66,7 @@ class EngineConfig:
     # update chunks are padded to a multiple of this to bound recompiles
     update_pad: int = 1024
     # fused=True runs selection+summary+iteration as a single XLA program
-    # (overflow fallback handled on-device via lax.cond)
+    # (overflow fallback handled on host after a one-flag device read)
     fused: bool = True
 
 
@@ -76,7 +85,13 @@ class QueryStats:
     num_eb: int = 0
     iterations: int = 0
     overflow_fallback: bool = False
+    # updates integrated by this query: pending_applied = edge additions +
+    # *resolved* removals (a buffered removal that matches no live edge slot
+    # is counted in removals_requested but not here)
     pending_applied: int = 0
+    removals_requested: int = 0
+    removals_resolved: int = 0
+    algorithm: str = "pagerank"
 
     @property
     def vertex_ratio(self) -> float:
@@ -100,11 +115,18 @@ def default_on_query(query_id: int, view: Dict) -> Action:
 
 
 class VeilGraphEngine:
-    """Streaming approximate graph-processing engine (PageRank case study)."""
+    """Streaming approximate graph-processing engine.
+
+    ``algorithm`` is a :class:`StreamingAlgorithm` instance or registry name
+    (``"pagerank"``, ``"personalized-pagerank"``, ``"hits"``, …).  Omitted,
+    the engine runs PageRank configured from the legacy ``EngineConfig``
+    knobs — the paper's case study and the pre-plugin constructor signature.
+    """
 
     def __init__(
         self,
         config: EngineConfig,
+        algorithm: Union[StreamingAlgorithm, str, None] = None,
         *,
         on_start: Optional[Callable] = None,
         before_updates: Callable[[int, Dict], bool] = default_before_updates,
@@ -113,6 +135,12 @@ class VeilGraphEngine:
         on_stop: Optional[Callable] = None,
     ):
         self.config = config
+        if algorithm is None:
+            # legacy shim: PageRank from the config's scalar knobs
+            algorithm = PageRankAlgorithm(
+                beta=config.beta, num_iters=config.num_iters, tol=config.tol
+            )
+        self.algorithm = make_algorithm(algorithm)
         self._on_start = on_start
         self._before_updates = before_updates
         self._on_query = on_query
@@ -120,33 +148,38 @@ class VeilGraphEngine:
         self._on_stop = on_stop
 
         self.state = G.empty(config.node_capacity, config.edge_capacity)
-        self.ranks = jnp.zeros((config.node_capacity,), jnp.float32)
+        self.algo_state: AlgoState = self.algorithm.init_state(self.state)
         self.deg_prev = jnp.zeros((config.node_capacity,), jnp.int32)
         self.active_prev = jnp.zeros((config.node_capacity,), bool)
         self._pending_src: List[np.ndarray] = []
         self._pending_dst: List[np.ndarray] = []
         self._pending_removals: List = []
         self._pending_count = 0
+        self._pending_removal_count = 0
+        # updates integrated while serving repeat-last answers — lets
+        # policies threshold on staleness, not just the current batch
+        self._stale_updates = 0
         self.stats_log: List[QueryStats] = []
         self._query_id = 0
         self._started = False
 
+    @property
+    def ranks(self) -> jax.Array:
+        """The algorithm's score vector (legacy alias: PageRank's ranks)."""
+        return self.algorithm.score_view(self.algo_state)
+
     # ---- lifecycle -------------------------------------------------------
     def start(self, init_src: np.ndarray, init_dst: np.ndarray) -> QueryStats:
         """OnStart + load the initial graph G and compute the initial exact
-        PageRank (the paper's protocol: results already exist for G)."""
+        result (the paper's protocol: results already exist for G)."""
         if self._on_start:
             self._on_start(self)
         self.state = G.from_edges(
             init_src, init_dst, self.config.node_capacity, self.config.edge_capacity
         )
+        self.algo_state = self.algorithm.init_state(self.state)
         t0 = time.perf_counter()
-        self.ranks, iters = _pagerank(
-            self.state,
-            beta=self.config.beta,
-            num_iters=self.config.num_iters,
-            tol=self.config.tol,
-        )
+        self.algo_state, iters = self.algorithm.exact(self.algo_state, self.state)
         self.ranks.block_until_ready()
         wall = time.perf_counter() - t0
         self.deg_prev = self._degree_snapshot()
@@ -159,6 +192,7 @@ class VeilGraphEngine:
             num_nodes=int(self.state.num_active_nodes()),
             num_edges=int(self.state.num_live_edges()),
             iterations=int(iters),
+            algorithm=self.algorithm.name,
         )
         self.stats_log.append(st)
         return st
@@ -168,9 +202,23 @@ class VeilGraphEngine:
             self._on_stop(self)
 
     # ---- stream ingestion --------------------------------------------------
+    def _check_ids(self, src: np.ndarray, dst: np.ndarray):
+        # out-of-range ids would silently clamp/drop inside the jitted
+        # scatters and corrupt neighbouring vertices' results — fail loudly
+        # at ingestion instead
+        if src.size == 0:
+            return
+        lo = min(int(src.min()), int(dst.min()))
+        hi = max(int(src.max()), int(dst.max()))
+        if lo < 0 or hi >= self.config.node_capacity:
+            raise ValueError(
+                f"edge endpoint id {lo if lo < 0 else hi} outside "
+                f"[0, node_capacity={self.config.node_capacity})")
+
     def register_add_edges(self, src: np.ndarray, dst: np.ndarray):
         src = np.asarray(src, np.int32)
         dst = np.asarray(dst, np.int32)
+        self._check_ids(src, dst)
         self._pending_src.append(src)
         self._pending_dst.append(dst)
         self._pending_count += src.shape[0]
@@ -178,10 +226,13 @@ class VeilGraphEngine:
     def register_remove_edges(self, src: np.ndarray, dst: np.ndarray):
         """Alg. 1 RegisterRemoveEdge (the paper evaluates e+ only and leaves
         removals to future work; the engine supports them end-to-end).
-        Removals are buffered and resolved to buffer slots at apply time."""
+        Removals are buffered and resolved to buffer slots at apply time; a
+        removal that matches no live slot counts as *requested* but never as
+        *resolved* in the query stats."""
         self._pending_removals.append(
             (np.asarray(src, np.int32), np.asarray(dst, np.int32)))
         self._pending_count += len(src)
+        self._pending_removal_count += len(src)
 
     @property
     def pending_updates(self) -> int:
@@ -197,31 +248,33 @@ class VeilGraphEngine:
             return jnp.copy(self.state.in_deg)
         return self.state.out_deg + self.state.in_deg
 
-    def _apply_pending(self) -> int:
+    def _apply_pending(self) -> Tuple[int, int, int]:
+        """Apply buffered updates.  Returns
+        ``(applied, removals_requested, removals_resolved)`` where
+        ``applied`` counts additions + resolved removals."""
         if not self._pending_count:
-            return 0
-        applied_removals = 0
+            return 0, 0, 0
+        removals_requested = self._pending_removal_count
+        removals_resolved = 0
         if self._pending_removals:
             r_src = np.concatenate([a for a, _ in self._pending_removals])
             r_dst = np.concatenate([b for _, b in self._pending_removals])
             slots = G.find_edge_slots(self.state, r_src, r_dst)
             self.state = G.remove_edges_by_slot(self.state, jnp.asarray(slots))
-            applied_removals = int((slots >= 0).sum())
+            removals_resolved = int((slots >= 0).sum())
             self._pending_removals.clear()
+            self._pending_removal_count = 0
+        applied = removals_resolved
         if not self._pending_src:
             self._pending_count = 0
-            return applied_removals
+            return applied, removals_requested, removals_resolved
         src = np.concatenate(self._pending_src)
         dst = np.concatenate(self._pending_dst)
         pad = self.config.update_pad
         k = src.shape[0]
-        padded = ((k + pad - 1) // pad) * pad
-        # pad with a self-referencing no-op edge on node 0? No — pad slots
-        # must not change degrees; we pad by *repeating* the last edge and
-        # masking via a length argument is not possible in add_edges, so we
-        # simply split into pad-sized exact chunks plus one remainder chunk
-        # whose shape recompiles at most `update_pad` distinct sizes.
-        applied = applied_removals
+        # pad slots must not change degrees, so updates are split into
+        # pad-sized exact chunks plus one remainder chunk whose shape
+        # recompiles at most `update_pad` distinct sizes.
         for lo in range(0, k, pad):
             hi = min(lo + pad, k)
             self.state = G.add_edges(
@@ -231,73 +284,87 @@ class VeilGraphEngine:
         self._pending_src.clear()
         self._pending_dst.clear()
         self._pending_count = 0
-        return applied
+        return applied, removals_requested, removals_resolved
+
+    def _stats_view(self, pending: int, applied: int) -> Dict:
+        return {
+            "pending": pending,
+            "applied": applied,
+            # everything not reflected in the current scores: updates
+            # integrated under earlier repeat-last answers + this query's
+            "since_compute": self._stale_updates + applied + pending,
+            "num_nodes": int(self.state.num_active_nodes()),
+            "num_edges": int(self.state.num_live_edges()),
+            "algorithm": self.algorithm.name,
+        }
+
+    def _run_exact(self, st: QueryStats):
+        self.algo_state, iters = self.algorithm.exact(self.algo_state, self.state)
+        st.iterations = int(iters)
 
     # ---- query serving ---------------------------------------------------
     def query(self, msg: Optional[Dict] = None) -> Tuple[np.ndarray, QueryStats]:
-        """Serve one query (Alg. 1 lines 6-21). Returns (ranks, stats)."""
+        """Serve one query (Alg. 1 lines 6-21). Returns (scores, stats)."""
         assert self._started, "call start() first"
         qid = self._query_id
         self._query_id += 1
         cfg = self.config
 
-        stats_view = {
-            "pending": self._pending_count,
-            "num_nodes": int(self.state.num_active_nodes()),
-            "num_edges": int(self.state.num_live_edges()),
-        }
-        applied = 0
-        if self._before_updates(self._pending_count, stats_view):
-            applied = self._apply_pending()
+        applied = removals_requested = removals_resolved = 0
+        view = self._stats_view(self._pending_count, 0)
+        if self._before_updates(self._pending_count, view):
+            applied, removals_requested, removals_resolved = self._apply_pending()
+            # the OnQuery policy must see the post-update graph: refresh the
+            # node/edge counts snapshotted before _apply_pending
+            view = self._stats_view(self._pending_count, applied)
 
-        action = self._on_query(qid, stats_view)
+        action = self._on_query(qid, view)
         t0 = time.perf_counter()
         st = QueryStats(
             query_id=qid,
             action=action.value,
             wall_time_s=0.0,
-            num_nodes=int(self.state.num_active_nodes()),
-            num_edges=int(self.state.num_live_edges()),
+            num_nodes=view["num_nodes"],
+            num_edges=view["num_edges"],
             pending_applied=applied,
+            removals_requested=removals_requested,
+            removals_resolved=removals_resolved,
+            algorithm=self.algorithm.name,
         )
 
         if action == Action.REPEAT_LAST:
-            pass  # previous ranks returned as-is
+            self._stale_updates += applied  # previous scores returned as-is
         elif action == Action.EXACT:
-            self.ranks, iters = _pagerank(
-                self.state, beta=cfg.beta, num_iters=cfg.num_iters, tol=cfg.tol
-            )
+            self._run_exact(st)
             self.ranks.block_until_ready()
-            st.iterations = int(iters)
             self.deg_prev = self._degree_snapshot()
-        elif cfg.fused:  # APPROXIMATE, single fused XLA program
-            from repro.core.fused import approximate_query_step
+            self.active_prev = jnp.copy(self.state.node_active)
+        elif cfg.fused and self.algorithm.supports_fused:
+            # APPROXIMATE, single fused XLA program for any algorithm
+            from repro.core.fused import fused_query_step
 
-            self.ranks, qs = approximate_query_step(
+            new_state, qs = fused_query_step(
                 self.state,
-                self.ranks,
+                self.algo_state,
                 self.deg_prev,
                 self.active_prev,
                 jnp.float32(cfg.r),
                 jnp.float32(cfg.delta),
+                algo=self.algorithm,
                 hot_node_capacity=cfg.hot_node_capacity,
                 hot_edge_capacity=cfg.hot_edge_capacity,
-                beta=cfg.beta,
-                num_iters=cfg.num_iters,
-                tol=cfg.tol,
                 n=cfg.n,
                 delta_hop_cap=cfg.delta_hop_cap,
                 degree_mode=cfg.degree_mode,
                 expand_both=cfg.expand_both,
             )
             if bool(qs.used_fallback):
-                # capacities exceeded: the summarized result is invalid;
-                # recompute exactly (graceful degradation, recorded below)
-                self.ranks, iters_fb = _pagerank(
-                    self.state, beta=cfg.beta, num_iters=cfg.num_iters,
-                    tol=cfg.tol,
-                )
-                qs = qs._replace(iterations=iters_fb)
+                # capacities exceeded: the summarized state is invalid;
+                # discard it and recompute exactly (graceful degradation)
+                self._run_exact(st)
+                qs = qs._replace(iterations=st.iterations)
+            else:
+                self.algo_state = new_state
             self.ranks.block_until_ready()
             qs = jax.device_get(qs)  # one host transfer for all stats
             st.num_hot = int(qs.num_hot)
@@ -314,7 +381,7 @@ class VeilGraphEngine:
             hot, hstats = select_hot_set(
                 self.state,
                 self.deg_prev,
-                self.ranks,
+                self.algorithm.score_view(self.algo_state),
                 jnp.float32(cfg.r),
                 jnp.float32(cfg.delta),
                 active_prev=self.active_prev,
@@ -322,10 +389,11 @@ class VeilGraphEngine:
                 delta_hop_cap=cfg.delta_hop_cap,
                 degree_mode=cfg.degree_mode,
                 expand_both=cfg.expand_both,
+                normalize_scores=self.algorithm.normalize_selection_scores,
             )
-            summary = _build_summary(
+            summaries = self.algorithm.build_summaries(
+                self.algo_state,
                 self.state,
-                self.ranks,
                 hot,
                 hot_node_capacity=cfg.hot_node_capacity,
                 hot_edge_capacity=cfg.hot_edge_capacity,
@@ -334,29 +402,26 @@ class VeilGraphEngine:
             st.num_kr = int(hstats.num_kr)
             st.num_kn = int(hstats.num_kn)
             st.num_kdelta = int(hstats.num_kdelta)
-            st.num_ek = int(summary.num_ek)
-            st.num_eb = int(summary.num_eb)
-            if bool(summary.overflow):
+            st.num_ek = int(summaries[0].num_ek)
+            st.num_eb = int(sum(int(s.num_eb) for s in summaries))
+            if bool(summaries_overflow(summaries)):
                 # graceful degradation: capacities exceeded -> exact recompute
                 st.overflow_fallback = True
-                self.ranks, iters = _pagerank(
-                    self.state, beta=cfg.beta, num_iters=cfg.num_iters, tol=cfg.tol
-                )
-                st.iterations = int(iters)
+                self._run_exact(st)
             else:
-                self.ranks, iters = _summarized_pagerank(
-                    summary,
-                    self.ranks,
-                    beta=cfg.beta,
-                    num_iters=cfg.num_iters,
-                    tol=cfg.tol,
+                self.algo_state, iters = self.algorithm.summarized(
+                    self.algo_state, self.state, summaries
                 )
                 st.iterations = int(iters)
             self.ranks.block_until_ready()
             self.deg_prev = self._degree_snapshot()
+            self.active_prev = jnp.copy(self.state.node_active)
 
+        if action != Action.REPEAT_LAST:
+            self._stale_updates = 0
         st.wall_time_s = time.perf_counter() - t0
         self.stats_log.append(st)
+        scores = self.ranks
         if self._on_query_result:
-            self._on_query_result(qid, msg, action, self.ranks, st)
-        return np.asarray(jax.device_get(self.ranks)), st
+            self._on_query_result(qid, msg, action, scores, st)
+        return np.asarray(jax.device_get(scores)), st

@@ -32,6 +32,7 @@ from repro.core.pagerank import (build_summary, pagerank,
 
 
 class QueryStepStats(NamedTuple):
+    """Device-side stats for one fused query step (one host transfer)."""
     num_hot: jax.Array
     num_kr: jax.Array
     num_kn: jax.Array
@@ -98,3 +99,78 @@ def approximate_query_step(
         used_fallback=summary.overflow,
     )
     return ranks, stats
+
+
+# ---------------------------------------------------------------------------
+# Algorithm-generic fused step
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "algo", "hot_node_capacity", "hot_edge_capacity",
+        "n", "delta_hop_cap", "degree_mode", "expand_both",
+    ),
+)
+def fused_query_step(
+    state: GraphState,
+    algo_state,
+    deg_prev: jax.Array,
+    active_prev: jax.Array,
+    r: jax.Array,
+    delta: jax.Array,
+    *,
+    algo,
+    hot_node_capacity: int,
+    hot_edge_capacity: int,
+    n: int = 1,
+    delta_hop_cap: int = 4,
+    degree_mode: str = "out",
+    expand_both: bool = False,
+):
+    """One summarized query for *any* :class:`StreamingAlgorithm`.
+
+    ``algo`` is a frozen (hashable) algorithm instance riding through jit as
+    a static argument, so its ``score_view`` / ``build_summaries`` /
+    ``summarized`` trace inline: selection, summary construction and the
+    restricted power sweep compile to a single XLA program per
+    (algorithm, capacities) pair — the PageRank-specific
+    :func:`approximate_query_step` above is the ``algo=PageRankAlgorithm``
+    specialization of this (kept for the dry-run/bench harnesses that lower
+    it directly).
+
+    Returns ``(new_algo_state, QueryStepStats)``.  Like the specialized
+    path, overflow does not branch on device — the caller discards
+    ``new_algo_state`` and recomputes exactly when ``used_fallback`` is set.
+    """
+    from repro.core.algorithm import summaries_overflow
+
+    scores = algo.score_view(algo_state)
+    hot, hstats = select_hot_set(
+        state, deg_prev, scores, r, delta,
+        active_prev=active_prev, n=n, delta_hop_cap=delta_hop_cap,
+        degree_mode=degree_mode, expand_both=expand_both,
+        normalize_scores=algo.normalize_selection_scores,
+    )
+    summaries = algo.build_summaries(
+        algo_state, state, hot,
+        hot_node_capacity=hot_node_capacity,
+        hot_edge_capacity=hot_edge_capacity,
+    )
+    new_state, iters = algo.summarized(algo_state, state, summaries)
+
+    num_eb = summaries[0].num_eb
+    for s in summaries[1:]:
+        num_eb = num_eb + s.num_eb
+    stats = QueryStepStats(
+        num_hot=hstats.num_hot,
+        num_kr=hstats.num_kr,
+        num_kn=hstats.num_kn,
+        num_kdelta=hstats.num_kdelta,
+        num_ek=summaries[0].num_ek,
+        num_eb=num_eb,
+        iterations=iters,
+        used_fallback=summaries_overflow(summaries),
+    )
+    return new_state, stats

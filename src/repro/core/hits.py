@@ -1,0 +1,158 @@
+"""HITS (hubs & authorities) — exact and VeilGraph-summarized versions.
+
+HITS is the second propagation workload ported onto the engine's
+:class:`StreamingAlgorithm` interface (beyond-paper: the paper's five-UDF
+structure and hot-vertex summarization are algorithm-agnostic; PageRank is
+only its case study).  The update rules are the classic mutual recursion
+
+    auth(v) = Σ_{(u,v) ∈ E} hub(u)          (gather along in-edges)
+    hub(u)  = Σ_{(u,v) ∈ E} auth(v)         (gather along out-edges)
+
+with L1 normalization over the active vertex set each half-iteration, which
+keeps 30-iteration power sweeps inside f32 range.
+
+The summarized version runs both updates only for vertices in the hot set K,
+against *two* compacted summaries built by the generalized
+:func:`repro.core.pagerank.build_summary`:
+
+- a forward summary (``weight="unit"``) whose ``b_in`` freezes the hub mass
+  flowing from non-hot vertices into hot authorities, and
+- a reverse summary (``weight="unit", reverse=True``) whose ``b_in`` freezes
+  the authority mass that hot hubs collect from their non-hot out-neighbors.
+
+Cold scores are carried over unchanged; per-iteration normalization counts
+the frozen cold mass so that with K = V (r = 1.0) the summarized sweep is
+the exact sweep up to f32 reassociation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pagerank import SummaryBuffers
+from repro.graph.graph import GraphState
+
+_EPS = 1e-12
+
+
+def _l1_normalize(x: jax.Array) -> jax.Array:
+    return x / jnp.maximum(jnp.sum(jnp.abs(x)), _EPS)
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "tol"))
+def hits(
+    state: GraphState,
+    auth0: jax.Array | None = None,
+    hub0: jax.Array | None = None,
+    *,
+    num_iters: int = 30,
+    tol: float = 0.0,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Full HITS power iteration.  Returns ``(auth, hub, iterations_run)``.
+
+    With ``tol > 0`` the loop exits early once the L1 change of the
+    authority vector drops below ``tol``.  ``auth0``/``hub0`` warm-start the
+    iteration (both converge to the principal singular vectors from any
+    positive start, so warm starts only save iterations).
+    """
+    n_cap = state.node_capacity
+    active = state.node_active
+    mask = state.edge_mask()
+    n_active = jnp.maximum(state.num_active_nodes().astype(jnp.float32), 1.0)
+
+    uniform = jnp.where(active, 1.0 / n_active, 0.0)
+    a0 = uniform if auth0 is None else _l1_normalize(jnp.where(active, auth0, 0.0))
+    h0 = uniform if hub0 is None else _l1_normalize(jnp.where(active, hub0, 0.0))
+
+    def body(carry):
+        i, a, h, _ = carry
+        a_in = jax.ops.segment_sum(
+            jnp.where(mask, h[state.src], 0.0), state.dst, num_segments=n_cap
+        )
+        a_new = _l1_normalize(jnp.where(active, a_in, 0.0))
+        h_in = jax.ops.segment_sum(
+            jnp.where(mask, a_new[state.dst], 0.0), state.src, num_segments=n_cap
+        )
+        h_new = _l1_normalize(jnp.where(active, h_in, 0.0))
+        delta = jnp.sum(jnp.abs(a_new - a))
+        return i + 1, a_new, h_new, delta
+
+    def cond(carry):
+        i, _, _, delta = carry
+        return (i < num_iters) & (delta > tol)
+
+    i, a, h, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), a0, h0, jnp.float32(jnp.inf))
+    )
+    return a, h, i
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "tol"))
+def summarized_hits(
+    fwd: SummaryBuffers,
+    rev: SummaryBuffers,
+    auth_prev: jax.Array,
+    hub_prev: jax.Array,
+    *,
+    num_iters: int = 30,
+    tol: float = 0.0,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """HITS power iteration restricted to the hot set K.
+
+    ``fwd``/``rev`` are summaries over the same hot mask (so they share
+    ``hot_ids``); ``fwd.b_in`` holds the frozen cold→hot hub contribution to
+    authorities and ``rev.b_in`` the frozen hot→cold authority contribution
+    to hubs.
+
+    Unlike PageRank, HITS is an eigenvector problem: the exact sweep's
+    normalization divides by the global raw-update mass, which converges to
+    the principal singular value σ.  The restricted sweep treats cold scores
+    as a Dirichlet boundary (frozen, injected through ``b_in``) and
+    normalizes each half-update by a *local* σ estimate — the growth rate of
+    the hot block itself, ``σ̂ = Σ|raw| / Σ|prev|``.  With K = V the two
+    normalizations are identical (both make the update sum equal the
+    previous sum, and the previous sum is 1), so the r = 1.0 sweep is the
+    exact sweep up to f32 reassociation.  Returns the updated *global*
+    ``(auth, hub, iterations_run)``.
+    """
+    k_cap = fwd.hot_ids.shape[0]
+    local_valid = jnp.arange(k_cap, dtype=jnp.int32) < fwd.num_hot
+
+    a0 = jnp.where(local_valid, auth_prev[fwd.hot_ids], 0.0)
+    h0 = jnp.where(local_valid, hub_prev[fwd.hot_ids], 0.0)
+
+    def half_step(prev, raw):
+        """Normalize a raw half-update by the hot block's growth rate."""
+        growth = jnp.sum(jnp.abs(raw)) / jnp.maximum(jnp.sum(jnp.abs(prev)), _EPS)
+        # degenerate hot blocks (no internal edges, no boundary inflow)
+        # keep their previous scores instead of collapsing to zero
+        return jnp.where(growth > _EPS, raw / jnp.maximum(growth, _EPS), prev)
+
+    def body(carry):
+        i, a, h, _ = carry
+        a_in = jax.ops.segment_sum(
+            h[fwd.ek_src] * fwd.ek_w, fwd.ek_dst, num_segments=k_cap
+        )
+        a_new = half_step(a, jnp.where(local_valid, a_in + fwd.b_in, 0.0))
+        h_in = jax.ops.segment_sum(
+            a_new[rev.ek_src] * rev.ek_w, rev.ek_dst, num_segments=k_cap
+        )
+        h_new = half_step(h, jnp.where(local_valid, h_in + rev.b_in, 0.0))
+        delta = jnp.sum(jnp.abs(a_new - a))
+        return i + 1, a_new, h_new, delta
+
+    def cond(carry):
+        i, _, _, delta = carry
+        return (i < num_iters) & (delta > tol)
+
+    i, a_loc, h_loc, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), a0, h0, jnp.float32(jnp.inf))
+    )
+
+    auth = auth_prev.at[fwd.hot_ids].set(a_loc, mode="drop")
+    hub = hub_prev.at[fwd.hot_ids].set(h_loc, mode="drop")
+    return auth, hub, i

@@ -55,7 +55,8 @@ def _frontier_sweep(state: GraphState, mark: jax.Array, *, both: bool) -> jax.Ar
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n", "delta_hop_cap", "degree_mode", "expand_both"),
+    static_argnames=("n", "delta_hop_cap", "degree_mode", "expand_both",
+                     "normalize_scores"),
 )
 def select_hot_set(
     state: GraphState,
@@ -69,6 +70,7 @@ def select_hot_set(
     delta_hop_cap: int = 4,
     degree_mode: str = "out",
     expand_both: bool = False,
+    normalize_scores: bool = False,
 ) -> Tuple[jax.Array, HotSetStats]:
     """Compute the hot-vertex mask K over the current graph.
 
@@ -77,6 +79,14 @@ def select_hot_set(
     (a vertex first seen after t-1 has no previous rank and is always in K_r
     — paper footnote 2).  Without ``active_prev``, deg_prev>0 is the proxy
     (wrong for pre-existing sinks under degree_mode="out").
+
+    ``normalize_scores`` rescales v_s to mean 1 over the active set before
+    the Δ-dilution bound.  Eqs. 4-5 calibrate Δ against Gelly-style
+    PageRank, whose scores average ≈ 1 per vertex; algorithms with
+    L1-normalized score vectors (personalized PageRank, HITS) opt in so the
+    same Δ values keep the paper's semantics.  Off by default — the raw
+    paper formula.
+
     Returns (bool[N_cap] mask, stats).
     """
     if degree_mode == "out":
@@ -117,6 +127,9 @@ def select_hot_set(
     total_deg = jnp.sum(jnp.where(active, deg_now_f, 0.0))
     d_bar = jnp.maximum(total_deg / n_active, 1.0 + 1e-6)
     v_s = jnp.maximum(ranks_prev, 0.0)
+    if normalize_scores:
+        total_score = jnp.sum(jnp.where(active, v_s, 0.0))
+        v_s = v_s * (n_active / jnp.maximum(total_score, 1e-30))
     arg = n + d_bar * v_s / (jnp.maximum(delta, 1e-9) * jnp.maximum(deg_now_f, 1.0))
     f_delta = jnp.log(jnp.maximum(arg, 1e-9)) / jnp.log(d_bar)
     f_delta = jnp.clip(f_delta, 0.0, float(delta_hop_cap))

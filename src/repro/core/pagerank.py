@@ -46,21 +46,32 @@ def pagerank(
     tol: float = 0.0,
     teleport_by_n: bool = False,
     dangling: bool = False,
+    teleport_v: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Full power-method PageRank.
 
     Returns ``(ranks f32[N_cap], iterations_run)``.  With ``tol > 0`` the
     loop exits early once ``‖r_t − r_{t−1}‖₁ < tol`` (bounded by num_iters).
+
+    ``teleport_v`` (f32[N_cap], optional) replaces the uniform teleport with
+    a personalization vector: ``rank(v) = (1-β)·t(v) + β·Σ incoming`` —
+    seeded/personalized PageRank in the same Gelly-style normalization.
     """
     n_cap = state.node_capacity
     active = state.node_active
     n_active = jnp.maximum(state.num_active_nodes().astype(jnp.float32), 1.0)
     inv_deg = inv_out_degree(state)
     mask = state.edge_mask()
-    teleport = jnp.where(teleport_by_n, (1.0 - beta) / n_active, 1.0 - beta)
+    if teleport_v is not None:
+        teleport = (1.0 - beta) * teleport_v
+    else:
+        teleport = jnp.where(teleport_by_n, (1.0 - beta) / n_active, 1.0 - beta)
 
     if init_ranks is None:
-        r0 = jnp.where(active, jnp.where(teleport_by_n, 1.0 / n_active, 1.0), 0.0)
+        if teleport_v is not None:
+            r0 = jnp.where(active, teleport_v, 0.0)
+        else:
+            r0 = jnp.where(active, jnp.where(teleport_by_n, 1.0 / n_active, 1.0), 0.0)
     else:
         r0 = init_ranks
 
@@ -169,7 +180,9 @@ class SummaryBuffers(NamedTuple):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("hot_node_capacity", "hot_edge_capacity")
+    jax.jit,
+    static_argnames=("hot_node_capacity", "hot_edge_capacity", "weight",
+                     "reverse"),
 )
 def build_summary(
     state: GraphState,
@@ -178,16 +191,39 @@ def build_summary(
     *,
     hot_node_capacity: int,
     hot_edge_capacity: int,
+    weight: str = "inv_out",
+    reverse: bool = False,
 ) -> SummaryBuffers:
-    """Construct the big-vertex summary (§3.1) into bounded buffers."""
+    """Construct the big-vertex summary (§3.1) into bounded buffers.
+
+    Generalized beyond PageRank so other :class:`StreamingAlgorithm` plugins
+    can reuse the same compaction machinery:
+
+    - ``weight``: ``"inv_out"`` (PageRank-style ``val((u,v)) = 1/d_out(u)``)
+      or ``"unit"`` (unweighted propagation, e.g. HITS / Katz).
+    - ``reverse``: build the summary over the *transposed* edge set — the
+      emitting endpoint is the original ``dst``.  ``b_in[z]`` then freezes
+      the contribution of non-hot vertices reached by z's *out*-edges (the
+      hub-update direction in HITS).  ``weight="inv_out"`` is only
+      meaningful in the forward orientation.
+
+    ``ranks_prev`` is whatever score vector the frozen big-vertex
+    contribution should be computed from (previous PageRank ranks, previous
+    hub scores, …).
+    """
+    if reverse and weight == "inv_out":
+        raise ValueError(
+            "build_summary(reverse=True) requires weight='unit': inv_out "
+            "would normalize by the out-degree of the *receiving* endpoint")
     n_cap = state.node_capacity
     k_cap = hot_node_capacity
     h_cap = hot_edge_capacity
     mask = state.edge_mask()
     inv_deg = inv_out_degree(state)
 
-    src_hot = hot_mask[state.src]
-    dst_hot = hot_mask[state.dst]
+    e_src, e_dst = (state.dst, state.src) if reverse else (state.src, state.dst)
+    src_hot = hot_mask[e_src]
+    dst_hot = hot_mask[e_dst]
     ek_mask = mask & src_hot & dst_hot
     eb_mask = mask & (~src_hot) & dst_hot
 
@@ -208,21 +244,24 @@ def build_summary(
     )
 
     # ---- frozen big-vertex contribution (computed once per query) -------
-    # b_in_global[z] = Σ_{(w,z) ∈ E_B} rank_prev(w) / d_out(w)
+    # b_in_global[z] = Σ_{(w,z) ∈ E_B} rank_prev(w) · val(w)
     # node-side precompute keeps this to a single O(E) gather
-    emit = ranks_prev * inv_deg
-    eb_contrib = jnp.where(eb_mask, emit[state.src], 0.0)
-    b_in_global = jax.ops.segment_sum(eb_contrib, state.dst, num_segments=n_cap)
+    emit = ranks_prev * inv_deg if weight == "inv_out" else ranks_prev
+    eb_contrib = jnp.where(eb_mask, emit[e_src], 0.0)
+    b_in_global = jax.ops.segment_sum(eb_contrib, e_dst, num_segments=n_cap)
     b_in = jnp.where(local_valid, b_in_global[hot_ids], 0.0)
 
     # ---- compact E_K into the bounded buffer ----------------------------
     ek_idx = compact_indices(ek_mask, h_cap)
     ek_valid = jnp.arange(h_cap, dtype=jnp.int32) < jnp.minimum(num_ek, h_cap)
-    gsrc = state.src[ek_idx]
-    gdst = state.dst[ek_idx]
+    gsrc = e_src[ek_idx]
+    gdst = e_dst[ek_idx]
     # val((u,v)) = 1/d_out(u) *including* edges that leave K (paper §3.1:
     # discarded out-edges still count in the emitting degree).
-    ek_w = jnp.where(ek_valid, inv_deg[gsrc], 0.0)
+    if weight == "inv_out":
+        ek_w = jnp.where(ek_valid, inv_deg[gsrc], 0.0)
+    else:
+        ek_w = jnp.where(ek_valid, 1.0, 0.0)
     ek_src = jnp.where(ek_valid, local_of[gsrc], 0)
     ek_dst = jnp.where(ek_valid, local_of[gdst], 0)
 
@@ -249,17 +288,24 @@ def summarized_pagerank(
     beta: float = 0.85,
     num_iters: int = 30,
     tol: float = 0.0,
+    teleport_v: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Power iteration restricted to the summary graph (§3.1).
 
     Per iteration, for every hot vertex z (local id):
-        rank(z) = (1-β) + β·( Σ_{(u,z)∈E_K} rank(u)·val((u,z)) + b_in(z) )
-    Cold ranks are carried over unchanged.  Returns the *global* rank vector
-    and the number of iterations run.
+        rank(z) = (1-β)·t(z) + β·( Σ_{(u,z)∈E_K} rank(u)·val((u,z)) + b_in(z) )
+    with t ≡ 1 for classic PageRank or the global personalization vector
+    ``teleport_v`` for seeded PageRank.  Cold ranks are carried over
+    unchanged.  Returns the *global* rank vector and the number of
+    iterations run.
     """
     k_cap = summary.hot_ids.shape[0]
     local_valid = jnp.arange(k_cap, dtype=jnp.int32) < summary.num_hot
     r_local0 = jnp.where(local_valid, ranks_prev[summary.hot_ids], 0.0)
+    if teleport_v is not None:
+        t_local = jnp.where(local_valid, teleport_v[summary.hot_ids], 0.0)
+    else:
+        t_local = 1.0
 
     def body(carry):
         i, r, _ = carry
@@ -268,7 +314,9 @@ def summarized_pagerank(
             contrib, summary.ek_dst, num_segments=k_cap
         )
         new_r = jnp.where(
-            local_valid, (1.0 - beta) + beta * (incoming + summary.b_in), 0.0
+            local_valid,
+            (1.0 - beta) * t_local + beta * (incoming + summary.b_in),
+            0.0,
         )
         delta = jnp.sum(jnp.abs(new_r - r))
         return i + 1, new_r, delta

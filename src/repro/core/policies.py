@@ -10,7 +10,18 @@ from __future__ import annotations
 
 from typing import Callable, Dict
 
-from repro.core.engine import Action
+from repro.core.algorithm import Action
+
+
+def _updates_since_compute(view: Dict) -> int:
+    """Updates not yet reflected in the current scores: those integrated
+    under earlier repeat-last answers plus this query's batch (applied or
+    still buffered — BeforeUpdates may have deferred application).  The view
+    is refreshed after ApplyUpdates, so ``pending`` alone would read 0 once
+    the engine has integrated the batch."""
+    if "since_compute" in view:
+        return int(view["since_compute"])
+    return int(view.get("applied", 0)) + int(view.get("pending", 0))
 
 
 def always(action: Action) -> Callable[[int, Dict], Action]:
@@ -22,10 +33,11 @@ def always(action: Action) -> Callable[[int, Dict], Action]:
 
 def repeat_below_threshold(min_pending: int) -> Callable[[int, Dict], Action]:
     """Repeat the last answer when fewer than ``min_pending`` updates have
-    accumulated; otherwise approximate (paper §7: "repeating the last results
-    if the updates were not deemed significant")."""
+    arrived since the last computed answer; otherwise approximate (paper §7:
+    "repeating the last results if the updates were not deemed
+    significant")."""
     def policy(query_id: int, view: Dict) -> Action:
-        if view["pending"] < min_pending:
+        if _updates_since_compute(view) < min_pending:
             return Action.REPEAT_LAST
         return Action.APPROXIMATE
     return policy
@@ -36,7 +48,8 @@ def exact_above_entropy(max_update_ratio: float) -> Callable[[int, Dict], Action
     (paper §7: "performing an exact computation if too much entropy has
     accumulated"); otherwise approximate."""
     def policy(query_id: int, view: Dict) -> Action:
-        if view["num_edges"] > 0 and view["pending"] / view["num_edges"] > max_update_ratio:
+        if view["num_edges"] > 0 and \
+                _updates_since_compute(view) / view["num_edges"] > max_update_ratio:
             return Action.EXACT
         return Action.APPROXIMATE
     return policy

@@ -1,0 +1,111 @@
+"""Minimal stand-in for the optional ``hypothesis`` dependency.
+
+The tier-1 suite uses a small slice of hypothesis (``given`` / ``settings``
+/ ``strategies.integers|floats|sampled_from``).  When the real package is
+absent, ``conftest.py`` installs this module under ``sys.modules
+["hypothesis"]`` so the property-test modules still *collect and run* —
+each ``@given`` test executes a small, deterministic set of examples drawn
+from a PRNG seeded by the test name (no shrinking, no example database).
+
+Install the real thing for full property-based coverage::
+
+    pip install -r requirements-test.txt
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+#: examples per @given test. The real hypothesis defaults to 100 and the
+#: suite's @settings ask for 8-30; the shim caps lower — it is a collection
+#: unblocker, not a property-testing engine.
+MAX_EXAMPLES = 5
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(elements):
+    seq = list(elements)
+    return _Strategy(lambda rng: rng.choice(seq))
+
+
+def booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def settings(*args, **kwargs):
+    """Decorator shim: records max_examples (clamped to MAX_EXAMPLES)."""
+    max_examples = kwargs.get("max_examples")
+
+    def deco(fn):
+        if max_examples is not None:
+            fn._shim_max_examples = min(int(max_examples), MAX_EXAMPLES)
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    if arg_strategies:
+        raise NotImplementedError(
+            "hypothesis shim supports keyword strategies only")
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_max_examples", MAX_EXAMPLES)
+            # deterministic per-test seed, stable across runs/processes
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # pytest must not see the strategy-filled parameters (it would hunt
+        # for fixtures with those names): expose the residual signature and
+        # drop __wrapped__ so introspection stops at the wrapper.
+        params = [p for name, p in inspect.signature(fn).parameters.items()
+                  if name not in kw_strategies]
+        wrapper.__signature__ = inspect.Signature(params)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register this shim as ``hypothesis`` (+ ``hypothesis.strategies``)."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.__doc__ = __doc__
+    hyp.given = given
+    hyp.settings = settings
+    hyp.HealthCheck = types.SimpleNamespace(too_slow=None, data_too_large=None)
+
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.floats = floats
+    st.sampled_from = sampled_from
+    st.booleans = booleans
+    hyp.strategies = st
+
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st
