@@ -53,6 +53,67 @@ def bench_summarized_query():
     return [("veilgraph_query_500k_edges", us, "fused select+summary+iterate")]
 
 
+def _sweep_fixture(nodes=50_000, edges=500_000):
+    """The 500k-edge reference graph + everything a sweep bench needs."""
+    from repro.graph import from_edges
+    from repro.graph.generators import gnm_edges
+    from repro.core import backend as B
+    from repro.core.pagerank import build_summary, pagerank
+
+    src, dst = gnm_edges(nodes, edges, seed=0)
+    g = from_edges(src, dst, nodes, edges + 20_000)
+    layout = B.build_layout(g, weight="inv_out")
+    ranks, _ = pagerank(g, num_iters=5)
+    hot = jnp.asarray(
+        np.random.default_rng(0).random(nodes) < 0.15)
+    summary = build_summary(g, ranks, hot, hot_node_capacity=8192,
+                            hot_edge_capacity=65536)
+    return g, layout, ranks, summary
+
+
+def bench_sweep_backends(*, smoke: bool = False, nodes=50_000, edges=500_000):
+    """Backend-vs-backend rows: one push and one full summarized sweep per
+    backend on the 500k-edge reference graph.  The pallas rows run in
+    interpret mode off-TPU — they track kernel-logic cost trajectory, not
+    TPU wall time (the dry-run covers that).  Returns (rows, records); the
+    records feed BENCH_sweeps.json.
+    """
+    from repro.core import backend as B
+    from repro.core.pagerank import summarized_pagerank
+
+    g, layout, ranks, summary = _sweep_fixture(nodes, edges)
+    iters = 1 if smoke else 3
+    sweep_iters = 1 if smoke else 30
+    interpret = B.default_interpret()
+    live_edges = int(g.num_live_edges())
+
+    cases = []
+    for backend in ("segment_sum", "pallas"):
+        tag = f"{backend}{'_interp' if backend == 'pallas' and interpret else ''}"
+        push_fn = jax.jit(lambda r, lay, b=backend: B.push(
+            r, lay, backend=b, interpret=interpret))
+        us = _bench(push_fn, ranks, layout, iters=iters, warmup=1)
+        cases.append((f"push_exact_{tag}_{edges // 1000}k", us,
+                      f"{live_edges / (us / 1e6) / 1e9:.3f}Gedge/s"))
+        summ_fn = jax.jit(lambda s, r, b=backend: summarized_pagerank(
+            s, r, num_iters=sweep_iters, backend=b)[0])
+        us = _bench(summ_fn, summary, ranks, iters=iters, warmup=1)
+        cases.append((f"summarized_sweep_{sweep_iters}it_{tag}", us,
+                      f"|K|={int(summary.num_hot)},|E_K|={int(summary.num_ek)}"))
+    records = [
+        {"name": name, "us_per_call": round(us, 1), "derived": derived}
+        for name, us, derived in cases
+    ]
+    meta = {
+        "graph": {"nodes": nodes, "edges": edges, "live_edges": live_edges},
+        "interpret": interpret,
+        "device": jax.default_backend(),
+        "smoke": smoke,
+        "sweep_iters": sweep_iters,
+    }
+    return cases, {"meta": meta, "rows": records}
+
+
 def bench_attention():
     from repro.models.layers import blocked_attention
     rows = []
@@ -94,6 +155,8 @@ def bench_moe_dispatch():
     return [("moe_dispatch_4x128_e4top2", us, "scan-over-experts")]
 
 
+# bench_sweep_backends is invoked by benchmarks.run (it also feeds the
+# BENCH_sweeps.json artifact), not by the CSV-only main() below.
 ALL = [bench_pagerank_iteration, bench_summarized_query, bench_attention,
        bench_decode_step, bench_moe_dispatch]
 

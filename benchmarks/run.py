@@ -3,18 +3,49 @@
 Prints ``name,us_per_call,derived`` CSV rows (kernel/microbenches), the
 paper-protocol summary per (dataset × combo) from cached sweep artifacts
 (benchmarks.paper_sweep produces them; a small live sweep runs if absent),
-and the roofline tables from the dry-run artifacts.
+and the roofline tables from the dry-run artifacts.  Every run also emits a
+machine-readable ``BENCH_sweeps.json`` (backend-vs-backend push/sweep
+timings on the 500k-edge reference graph) so the propagation-backend perf
+trajectory is tracked per PR.
 
-  PYTHONPATH=src python -m benchmarks.run
+  PYTHONPATH=src python -m benchmarks.run                 # everything
+  PYTHONPATH=src python -m benchmarks.run --only sweeps   # backend rows only
+  PYTHONPATH=src python -m benchmarks.run --only sweeps --smoke   # CI: 1 it
 """
 
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 from pathlib import Path
 
-ART = Path(__file__).resolve().parent.parent / "artifacts"
+ROOT = Path(__file__).resolve().parent.parent
+ART = ROOT / "artifacts"
+
+SWEEPS_JSON = ROOT / "BENCH_sweeps.json"
+
+
+def sweeps_summary(*, smoke: bool = False, out_path: Path = None):
+    """Backend-vs-backend sweep rows + the BENCH_sweeps.json artifact.
+
+    Smoke runs (1 iteration — what CI executes) land in the gitignored
+    ``artifacts/`` dir so they never clobber the tracked perf-trajectory
+    file at the repo root.
+    """
+    from benchmarks.bench_kernels import bench_sweep_backends
+
+    if out_path is None:
+        out_path = ART / "BENCH_sweeps_smoke.json" if smoke else SWEEPS_JSON
+    print("\n# propagation backends (segment_sum vs sorted pallas push; "
+          "pallas is interpret-mode off-TPU)")
+    rows, record = bench_sweep_backends(smoke=smoke)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(record, indent=2) + "\n")
+    print(f"# wrote {out_path}")
+    return record
 
 
 def paper_summary():
@@ -55,10 +86,22 @@ def roofline_summary():
         print(f"# roofline artifacts unavailable: {e}")
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", choices=("all", "sweeps"), default="all",
+                    help="'sweeps' runs just the backend rows + JSON artifact")
+    ap.add_argument("--smoke", action="store_true",
+                    help="1 bench iter / 1 sweep iteration (CI regression "
+                    "smoke; still exercises both backends end-to-end)")
+    args = ap.parse_args(argv)
+
+    if args.only == "sweeps":
+        sweeps_summary(smoke=args.smoke)
+        return
     print("# microbenchmarks (CPU wall time of the jnp reference paths)")
     from benchmarks.bench_kernels import main as kernels_main
     kernels_main()
+    sweeps_summary(smoke=args.smoke)
     paper_summary()
     roofline_summary()
 

@@ -32,6 +32,12 @@ should prefer::
 
 with the ``r``/``n``/``delta`` model knobs and buffer capacities passed as
 keyword overrides.
+
+The propagation backend for every sweep is likewise a config override:
+``session(src_dst, backend="pallas")`` forces the destination-tiled Pallas
+MXU kernel, ``"segment_sum"`` the sorted-XLA fallback, and the default
+``"auto"`` resolves per device (TPU → pallas) with ``$VEILGRAPH_BACKEND``
+as the environment override — see :mod:`repro.core.backend`.
 """
 
 from __future__ import annotations
@@ -186,6 +192,7 @@ def session(
 
         veilgraph.session("synth-citation", "personalized-pagerank",
                           r=0.3, delta=0.5, seeds=(0, 7), num_iters=50)
+        veilgraph.session((src, dst), "hits", backend="pallas")
 
     The five UDFs pass straight through to the engine.
     """
@@ -213,7 +220,12 @@ def session(
         canonical = _ALIASES.get(algorithm, algorithm)
         accepted = inspect.signature(_REGISTRY[canonical]).parameters \
             if canonical in _REGISTRY else {}
-        rejected = [k for k in _legacy_knobs if k not in accepted]
+        # a **kwargs factory (the documented registration pattern) accepts
+        # any knob even though none is literally named in its signature
+        has_var_kw = any(p.kind is inspect.Parameter.VAR_KEYWORD
+                         for p in accepted.values())
+        rejected = [] if has_var_kw else \
+            [k for k in _legacy_knobs if k not in accepted]
         if rejected:
             raise ValueError(
                 f"algorithm {algorithm!r} does not accept {sorted(rejected)}")

@@ -12,6 +12,16 @@ everything rank-computation-specific lives behind :class:`StreamingAlgorithm`:
     build_summaries(state, graph, hot, caps) -> (SummaryBuffers, ...)
     summarized(state, graph, summaries)      -> (state', iterations)
     score_view(state)            -> f32[N_cap]  # drives hot-set Δ + ranking
+    layout_specs                 -> ((weight, reverse), ...)  # cached edge
+                                    layouts the sweeps consume
+
+Every sweep runs through the unified propagation primitive in
+:mod:`repro.core.backend`; ``layout_specs`` declares which full-graph
+:class:`~repro.core.backend.EdgeLayout` orientations an algorithm needs so
+the engine can build them once per applied update batch and pass them into
+``exact`` / ``build_summaries`` (the ``layouts`` tuple, same order).  The
+``backend`` keyword selects the implementation (``"pallas"`` MXU kernel vs
+``"segment_sum"`` XLA fallback); ``None`` resolves per device/env.
 
 Algorithms are **frozen dataclasses** so instances are hashable and can ride
 through ``jax.jit`` as static arguments — the generic fused query step in
@@ -33,7 +43,7 @@ from __future__ import annotations
 import abc
 import enum
 from dataclasses import dataclass
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -78,6 +88,10 @@ class StreamingAlgorithm(abc.ABC):
     #: hot-set Δ-dilution bound (Eqs. 4-5 are calibrated against
     #: PageRank-scale scores; L1-normalized algorithms opt in).
     normalize_selection_scores: bool = False
+    #: full-graph edge layouts the sweeps consume, as (weight, reverse)
+    #: pairs — the engine builds and caches one EdgeLayout per entry (once
+    #: per applied update batch) and passes them as the ``layouts`` tuple.
+    layout_specs: Tuple[Tuple[str, bool], ...] = (("inv_out", False),)
 
     @abc.abstractmethod
     def init_state(self, graph: GraphState) -> AlgoState:
@@ -85,13 +99,15 @@ class StreamingAlgorithm(abc.ABC):
 
     @abc.abstractmethod
     def exact(
-        self, state: AlgoState, graph: GraphState
+        self, state: AlgoState, graph: GraphState, *,
+        layouts=None, backend: Optional[str] = None,
     ) -> Tuple[AlgoState, jax.Array]:
         """Full recomputation over the live graph (the exact reference).
 
         Implementations may warm-start from ``state`` — every algorithm
         here converges to a unique fixed point, so warm starts only save
-        iterations.
+        iterations.  ``layouts`` is the cached tuple matching
+        :attr:`layout_specs` (or None to let the sweep build/fall back).
         """
 
     def build_summaries(
@@ -102,12 +118,16 @@ class StreamingAlgorithm(abc.ABC):
         *,
         hot_node_capacity: int,
         hot_edge_capacity: int,
+        layouts=None,
+        backend: Optional[str] = None,
     ) -> Tuple[SummaryBuffers, ...]:
         """Compacted summary graph(s) the summarized step consumes.
 
         The default is the paper's single forward big-vertex summary with
         PageRank edge weights, frozen from :meth:`score_view`.  Algorithms
         needing different weights or both orientations (HITS) override.
+        ``layouts`` matches :attr:`layout_specs` and accelerates the frozen
+        big-vertex pass.
         """
         return (
             _build_summary(
@@ -116,6 +136,8 @@ class StreamingAlgorithm(abc.ABC):
                 hot_mask,
                 hot_node_capacity=hot_node_capacity,
                 hot_edge_capacity=hot_edge_capacity,
+                layout=layouts[0] if layouts else None,
+                backend=backend,
             ),
         )
 
@@ -125,6 +147,8 @@ class StreamingAlgorithm(abc.ABC):
         state: AlgoState,
         graph: GraphState,
         summaries: Tuple[SummaryBuffers, ...],
+        *,
+        backend: Optional[str] = None,
     ) -> Tuple[AlgoState, jax.Array]:
         """Approximate update restricted to the hot set (§3.1)."""
 
@@ -173,7 +197,7 @@ class PageRankAlgorithm(StreamingAlgorithm):
         ) if self.teleport_by_n else 1.0
         return {"ranks": jnp.where(graph.node_active, init, 0.0).astype(jnp.float32)}
 
-    def exact(self, state, graph):
+    def exact(self, state, graph, *, layouts=None, backend=None):
         ranks, iters = _pagerank(
             graph,
             state["ranks"] if self.warm_start else None,
@@ -182,10 +206,12 @@ class PageRankAlgorithm(StreamingAlgorithm):
             tol=self.tol,
             teleport_by_n=self.teleport_by_n,
             dangling=self.dangling,
+            layout=layouts[0] if layouts else None,
+            backend=backend,
         )
         return {"ranks": ranks}, iters
 
-    def summarized(self, state, graph, summaries):
+    def summarized(self, state, graph, summaries, *, backend=None):
         (summary,) = summaries
         ranks, iters = _summarized_pagerank(
             summary,
@@ -193,6 +219,7 @@ class PageRankAlgorithm(StreamingAlgorithm):
             beta=self.beta,
             num_iters=self.num_iters,
             tol=self.tol,
+            backend=backend,
         )
         return {"ranks": ranks}, iters
 
@@ -244,7 +271,7 @@ class PersonalizedPageRankAlgorithm(StreamingAlgorithm):
         t = self._teleport(graph.node_capacity)
         return {"ranks": t, "teleport": t}
 
-    def exact(self, state, graph):
+    def exact(self, state, graph, *, layouts=None, backend=None):
         ranks, iters = _pagerank(
             graph,
             state["ranks"] if self.warm_start else None,
@@ -252,10 +279,12 @@ class PersonalizedPageRankAlgorithm(StreamingAlgorithm):
             num_iters=self.num_iters,
             tol=self.tol,
             teleport_v=state["teleport"],
+            layout=layouts[0] if layouts else None,
+            backend=backend,
         )
         return {"ranks": ranks, "teleport": state["teleport"]}, iters
 
-    def summarized(self, state, graph, summaries):
+    def summarized(self, state, graph, summaries, *, backend=None):
         (summary,) = summaries
         ranks, iters = _summarized_pagerank(
             summary,
@@ -264,6 +293,7 @@ class PersonalizedPageRankAlgorithm(StreamingAlgorithm):
             num_iters=self.num_iters,
             tol=self.tol,
             teleport_v=state["teleport"],
+            backend=backend,
         )
         return {"ranks": ranks, "teleport": state["teleport"]}, iters
 
@@ -297,6 +327,7 @@ class HITSAlgorithm(StreamingAlgorithm):
 
     name = "hits"
     normalize_selection_scores = True
+    layout_specs = (("unit", False), ("unit", True))
 
     def __post_init__(self):
         if self.rank_by not in ("auth", "hub"):
@@ -308,38 +339,47 @@ class HITSAlgorithm(StreamingAlgorithm):
         uniform = jnp.where(graph.node_active, 1.0 / n, 0.0).astype(jnp.float32)
         return {"auth": uniform, "hub": uniform}
 
-    def exact(self, state, graph):
+    def exact(self, state, graph, *, layouts=None, backend=None):
         auth, hub, iters = _hits(
             graph,
             state["auth"],
             state["hub"],
             num_iters=self.num_iters,
             tol=self.tol,
+            fwd_layout=layouts[0] if layouts else None,
+            rev_layout=layouts[1] if layouts else None,
+            backend=backend,
         )
         return {"auth": auth, "hub": hub}, iters
 
     def build_summaries(
-        self, state, graph, hot_mask, *, hot_node_capacity, hot_edge_capacity
+        self, state, graph, hot_mask, *, hot_node_capacity, hot_edge_capacity,
+        layouts=None, backend=None,
     ):
         fwd = _build_summary(
             graph, state["hub"], hot_mask,
             hot_node_capacity=hot_node_capacity,
             hot_edge_capacity=hot_edge_capacity,
             weight="unit",
+            layout=layouts[0] if layouts else None,
+            backend=backend,
         )
         rev = _build_summary(
             graph, state["auth"], hot_mask,
             hot_node_capacity=hot_node_capacity,
             hot_edge_capacity=hot_edge_capacity,
             weight="unit", reverse=True,
+            layout=layouts[1] if layouts else None,
+            backend=backend,
         )
         return (fwd, rev)
 
-    def summarized(self, state, graph, summaries):
+    def summarized(self, state, graph, summaries, *, backend=None):
         fwd, rev = summaries
         auth, hub, iters = _summarized_hits(
             fwd, rev, state["auth"], state["hub"],
             num_iters=self.num_iters, tol=self.tol,
+            backend=backend,
         )
         return {"auth": auth, "hub": hub}, iters
 

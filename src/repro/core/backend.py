@@ -1,0 +1,290 @@
+"""Unified propagation backend: one ``push`` primitive for every sweep.
+
+Every power sweep in the repo — exact PageRank, summarized PageRank, both
+HITS directions, ``build_summary``'s frozen big-vertex pass and the
+algorithm-generic fused query step — is the same primitive applied to a
+different edge layout:
+
+    out[v] = Σ over in-edges (u, v) of values[u] · weight(u, v)
+
+This module owns that primitive and its two implementations:
+
+- ``"pallas"``  — the destination-tiled one-hot-matmul MXU kernel in
+  :mod:`repro.kernels.spmv.kernel` (Mosaic on TPU, ``interpret`` mode
+  elsewhere), consuming a receiver-sorted edge stream with per-tile ranges;
+- ``"segment_sum"`` — :func:`repro.graph.csr.gather_push`, an
+  ``indices_are_sorted`` XLA segment-sum over the same sorted stream.
+
+Both consume an :class:`EdgeLayout`: the receiver-sorted edge stream with
+the per-edge weight baked in (``1/d_out(u)`` for PageRank-style sweeps,
+``1`` for HITS/Katz-style ones).  Sorting is the amortizable cost — layouts
+are built once per applied update batch (the engine caches them; see
+``VeilGraphEngine.edge_layouts``), reused across queries, and within one
+query across all ~30 power iterations.
+
+Backend selection
+-----------------
+``resolve_backend(None)`` picks per device: ``"pallas"`` when JAX's default
+backend is TPU, ``"segment_sum"`` otherwise.  The ``VEILGRAPH_BACKEND``
+environment variable overrides (values: ``pallas``, ``segment_sum``,
+``auto``), and every sweep/engine entry point takes an explicit ``backend=``
+knob that overrides both.  Resolution happens at trace time; a changed
+environment variable does not invalidate already-compiled sweeps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.csr import SortedEdges, gather_push, sort_by_dst
+from repro.graph.graph import GraphState, inv_out_degree
+from repro.kernels.spmv.kernel import CHUNK, TILE_N, spmv_push
+
+BACKENDS = ("segment_sum", "pallas")
+
+#: env override for backend selection (read at trace time)
+BACKEND_ENV_VAR = "VEILGRAPH_BACKEND"
+
+
+def resolve_backend(backend: Optional[str] = None) -> str:
+    """Resolve ``None``/``"auto"`` to a concrete backend name.
+
+    Priority: explicit argument > ``$VEILGRAPH_BACKEND`` > device default
+    (TPU → ``"pallas"``, anything else → ``"segment_sum"``).
+    """
+    if backend in (None, "auto"):
+        backend = os.environ.get(BACKEND_ENV_VAR, "auto")
+    if backend in (None, "auto", ""):
+        backend = "pallas" if jax.default_backend() == "tpu" else "segment_sum"
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {backend!r}; expected one of "
+            f"{BACKENDS + ('auto',)}")
+    return backend
+
+
+def default_interpret() -> bool:
+    """Pallas runs as a compiled Mosaic kernel only on TPU; everywhere else
+    the kernel body executes in interpret mode (how CI validates it)."""
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("src", "dst", "weight", "valid", "row_offsets"),
+    meta_fields=("weight_mode", "reverse", "pad_chunk"),
+)
+@dataclasses.dataclass(frozen=True)
+class EdgeLayout:
+    """Receiver-sorted edge stream with baked per-edge weights.
+
+    The propagation-ready form of :class:`~repro.graph.csr.SortedEdges`:
+    same sorted order plus the per-edge multiplier, padded by at least one
+    kernel chunk so the Pallas kernel's fixed-size chunk loads never run
+    past the buffer.  ``dst`` holds ``num_segments`` in padding slots and
+    ``weight`` is 0 there, so both backends ignore padding without
+    branching.
+
+    ``row_offsets`` (int32[num_segments + 1]) gives the edge range per
+    receiver; per-tile kernel ranges for any tile size derive from it with
+    one gather, so one cached layout serves every ``tile_n``.
+
+    ``weight_mode``/``reverse`` record how the layout was built and
+    ``pad_chunk`` how much chunk slack the stream was padded with; they
+    ride through jit as static metadata so consumers can reject a
+    mismatched cached layout at trace time (:func:`require_layout`, the
+    ``chunk`` bound in :func:`push`) instead of silently mis-weighting or
+    reading out of bounds.
+    """
+
+    src: jax.Array          # int32[E_pad] emitting endpoint (sorted order)
+    dst: jax.Array          # int32[E_pad] receiving endpoint (sentinel = N)
+    weight: jax.Array       # f32[E_pad]   per-edge multiplier (0 if invalid)
+    valid: jax.Array        # bool[E_pad]
+    row_offsets: jax.Array  # int32[num_segments + 1]
+    weight_mode: str = "inv_out"
+    reverse: bool = False
+    pad_chunk: int = CHUNK
+
+    @property
+    def num_segments(self) -> int:
+        return self.row_offsets.shape[0] - 1
+
+
+def _pad_stream(src, dst, weight, valid, *, sentinel: int, chunk: int):
+    """Pad the sorted stream to a chunk multiple plus one spare chunk."""
+    e = src.shape[0]
+    e_pad = (e // chunk + 2) * chunk
+    pad = e_pad - e
+    return (
+        jnp.pad(src, (0, pad)),
+        jnp.pad(dst, (0, pad), constant_values=sentinel),
+        jnp.pad(weight, (0, pad)),
+        jnp.pad(valid, (0, pad)),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("weight", "reverse", "chunk"))
+def build_layout(
+    state: GraphState,
+    *,
+    weight: str = "inv_out",
+    reverse: bool = False,
+    chunk: int = CHUNK,
+) -> EdgeLayout:
+    """Full-graph propagation layout, sorted once per call.
+
+    ``weight="inv_out"`` bakes ``1/d_out(u)`` (PageRank-style emission),
+    ``"unit"`` bakes 1 (HITS/Katz).  ``reverse=True`` builds the transposed
+    layout (receivers are original sources — the HITS hub direction);
+    ``"inv_out"`` is only meaningful in the forward orientation.
+
+    Degrees are baked into ``weight``, so a layout is valid exactly until
+    the next applied update batch — the engine invalidates its cache then.
+    """
+    if reverse and weight == "inv_out":
+        raise ValueError(
+            "build_layout(reverse=True) requires weight='unit': inv_out "
+            "would normalize by the out-degree of the receiving endpoint")
+    if weight not in ("inv_out", "unit"):
+        raise ValueError(f"unknown weight mode {weight!r}")
+    se = sort_by_dst(state, reverse=reverse)
+    if weight == "inv_out":
+        w = jnp.where(se.valid, inv_out_degree(state)[se.src], 0.0)
+    else:
+        w = jnp.where(se.valid, 1.0, 0.0)
+    src, dst, w, valid = _pad_stream(
+        se.src, se.dst, w, se.valid,
+        sentinel=state.node_capacity, chunk=chunk)
+    return EdgeLayout(src, dst, w, valid, se.row_offsets,
+                      weight_mode=weight, reverse=reverse, pad_chunk=chunk)
+
+
+def summary_layout(summary, *, chunk: int = CHUNK) -> EdgeLayout:
+    """Propagation layout over a summary's compacted, pre-sorted E_K buffer.
+
+    :func:`repro.core.pagerank.build_summary` already emits E_K sorted by
+    local destination with ``ek_row_offsets``; this only derives validity
+    (sorted buffers keep valid edges first) and pads for the kernel.
+    Traced inline — call it outside the power loop so padding happens once
+    per query, not once per iteration.
+    """
+    k_cap = summary.hot_ids.shape[0]
+    h_cap = summary.ek_src.shape[0]
+    valid = jnp.arange(h_cap, dtype=jnp.int32) < jnp.minimum(
+        summary.num_ek, h_cap)
+    src, dst, w, valid = _pad_stream(
+        summary.ek_src, summary.ek_dst, summary.ek_w, valid,
+        sentinel=k_cap, chunk=chunk)
+    return EdgeLayout(src, dst, w, valid, summary.ek_row_offsets,
+                      weight_mode="summary", pad_chunk=chunk)
+
+
+def require_layout(layout: Optional[EdgeLayout], *, weight: str,
+                   reverse: bool, who: str) -> None:
+    """Trace-time guard: a cached layout must match the weighting and
+    orientation the sweep was built for, else its baked weights silently
+    mis-weight the propagation (e.g. an algorithm overriding
+    ``layout_specs`` without overriding the consuming method).  ``None``
+    passes — sweeps fall back to building/unsorted paths."""
+    if layout is not None and (layout.weight_mode != weight
+                               or layout.reverse != reverse):
+        raise ValueError(
+            f"{who} needs a layout built with (weight={weight!r}, "
+            f"reverse={reverse}); got (weight={layout.weight_mode!r}, "
+            f"reverse={layout.reverse})")
+
+
+def push(
+    values: jax.Array,
+    layout: EdgeLayout,
+    *,
+    backend: Optional[str] = None,
+    mask: Optional[jax.Array] = None,
+    tile_n: int = TILE_N,
+    chunk: int = CHUNK,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """The shared propagation primitive:
+    ``out[v] = Σ_{(u,v)} values[u] · layout.weight[(u,v)]``.
+
+    ``values`` lives in the layout's *node* space (global ids for full-graph
+    layouts, local hot ids for summary layouts); the result has
+    ``layout.num_segments`` entries.  ``mask`` optionally filters edges in
+    the layout's sorted order (e.g. the E_B selection in the big-vertex
+    pass).  Traced inline — call from inside jitted sweeps; ``backend`` must
+    be a Python string (or None) at trace time.
+    """
+    backend = resolve_backend(backend)
+    num_segments = layout.num_segments
+    if backend == "segment_sum":
+        return gather_push(
+            layout, values, num_segments, weight=layout.weight, mask=mask)
+
+    if chunk > layout.pad_chunk:
+        # kernel chunk loads past [start, end) stay inside the buffer only
+        # up to the chunk the stream was padded with at build time
+        raise ValueError(
+            f"push(chunk={chunk}) exceeds the layout's pad_chunk="
+            f"{layout.pad_chunk}; rebuild the layout with chunk>={chunk}")
+
+    # pallas: gather contributions outside the kernel (XLA gathers are
+    # efficient on TPU), then one-hot-matmul accumulate per output tile
+    contrib = values[layout.src] * layout.weight
+    if mask is not None:
+        contrib = jnp.where(mask, contrib, 0.0)
+    num_tiles = -(-num_segments // tile_n)
+    bounds = jnp.minimum(
+        jnp.arange(num_tiles + 1, dtype=jnp.int32) * tile_n, num_segments)
+    tile_start = layout.row_offsets[bounds]
+    if interpret is None:
+        interpret = default_interpret()
+    out = spmv_push(
+        contrib.astype(jnp.float32), layout.dst, tile_start,
+        num_tiles=num_tiles, tile_n=tile_n, chunk=chunk, interpret=interpret)
+    return out[:num_segments]
+
+
+def push_coo(
+    values: jax.Array,
+    src: jax.Array,
+    dst: jax.Array,
+    num_segments: int,
+    *,
+    weight: Optional[jax.Array] = None,
+    mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Unsorted-COO fallback for callers with no layout at hand.
+
+    A plain XLA segment-sum — today's cost model when no cached layout
+    exists (e.g. the sharded dry-run lowering, where a pod-scale argsort
+    would defeat GSPMD's edge sharding).  Prefer :func:`push` with a cached
+    layout everywhere else.
+    """
+    contrib = values[src]
+    if weight is not None:
+        contrib = contrib * weight
+    if mask is not None:
+        contrib = jnp.where(mask, contrib, 0.0)
+    return jax.ops.segment_sum(contrib, dst, num_segments=num_segments)
+
+
+__all__ = [
+    "BACKENDS",
+    "BACKEND_ENV_VAR",
+    "EdgeLayout",
+    "SortedEdges",
+    "build_layout",
+    "default_interpret",
+    "push",
+    "push_coo",
+    "require_layout",
+    "resolve_backend",
+    "summary_layout",
+]

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import backend as B
 from repro.core.algorithm import (Action, AlgoState, PageRankAlgorithm,
                                   StreamingAlgorithm, make_algorithm,
                                   summaries_overflow)
@@ -68,6 +69,11 @@ class EngineConfig:
     # fused=True runs selection+summary+iteration as a single XLA program
     # (overflow fallback handled on host after a one-flag device read)
     fused: bool = True
+    # propagation backend for every sweep: "pallas" (destination-tiled MXU
+    # kernel; interpret mode off-TPU), "segment_sum" (sorted XLA fallback),
+    # or "auto" (per device, overridable via $VEILGRAPH_BACKEND) — see
+    # repro.core.backend
+    backend: str = "auto"
 
 
 @dataclass
@@ -135,6 +141,7 @@ class VeilGraphEngine:
         on_stop: Optional[Callable] = None,
     ):
         self.config = config
+        self.backend = B.resolve_backend(config.backend)
         if algorithm is None:
             # legacy shim: PageRank from the config's scalar knobs
             algorithm = PageRankAlgorithm(
@@ -149,6 +156,10 @@ class VeilGraphEngine:
 
         self.state = G.empty(config.node_capacity, config.edge_capacity)
         self.algo_state: AlgoState = self.algorithm.init_state(self.state)
+        # amortized edge-layout cache: sorted once per applied update batch,
+        # reused across queries and by every sweep in between
+        self._edge_layouts: Optional[Tuple[B.EdgeLayout, ...]] = None
+        self.layout_builds = 0  # observability: how many sorts actually ran
         self.deg_prev = jnp.zeros((config.node_capacity,), jnp.int32)
         self.active_prev = jnp.zeros((config.node_capacity,), bool)
         self._pending_src: List[np.ndarray] = []
@@ -177,9 +188,12 @@ class VeilGraphEngine:
         self.state = G.from_edges(
             init_src, init_dst, self.config.node_capacity, self.config.edge_capacity
         )
+        self._invalidate_layouts()
         self.algo_state = self.algorithm.init_state(self.state)
         t0 = time.perf_counter()
-        self.algo_state, iters = self.algorithm.exact(self.algo_state, self.state)
+        self.algo_state, iters = self.algorithm.exact(
+            self.algo_state, self.state,
+            layouts=self.edge_layouts(), backend=self.backend)
         self.ranks.block_until_ready()
         wall = time.perf_counter() - t0
         self.deg_prev = self._degree_snapshot()
@@ -239,6 +253,20 @@ class VeilGraphEngine:
         return self._pending_count
 
     # ---- internals -----------------------------------------------------------
+    def edge_layouts(self) -> Tuple[B.EdgeLayout, ...]:
+        """Sorted edge layouts per ``algorithm.layout_specs`` — built at most
+        once per applied update batch (graph mutations invalidate them)."""
+        if self._edge_layouts is None:
+            self._edge_layouts = tuple(
+                B.build_layout(self.state, weight=w, reverse=rev)
+                for (w, rev) in self.algorithm.layout_specs
+            )
+            self.layout_builds += 1
+        return self._edge_layouts
+
+    def _invalidate_layouts(self):
+        self._edge_layouts = None
+
     def _degree_snapshot(self) -> jax.Array:
         # NOTE: must copy — add_edges donates the state buffers, so an alias
         # into the old state would be deleted by the next update.
@@ -262,6 +290,8 @@ class VeilGraphEngine:
             slots = G.find_edge_slots(self.state, r_src, r_dst)
             self.state = G.remove_edges_by_slot(self.state, jnp.asarray(slots))
             removals_resolved = int((slots >= 0).sum())
+            if removals_resolved:
+                self._invalidate_layouts()
             self._pending_removals.clear()
             self._pending_removal_count = 0
         applied = removals_resolved
@@ -270,6 +300,7 @@ class VeilGraphEngine:
             return applied, removals_requested, removals_resolved
         src = np.concatenate(self._pending_src)
         dst = np.concatenate(self._pending_dst)
+        self._invalidate_layouts()
         pad = self.config.update_pad
         k = src.shape[0]
         # pad slots must not change degrees, so updates are split into
@@ -299,7 +330,9 @@ class VeilGraphEngine:
         }
 
     def _run_exact(self, st: QueryStats):
-        self.algo_state, iters = self.algorithm.exact(self.algo_state, self.state)
+        self.algo_state, iters = self.algorithm.exact(
+            self.algo_state, self.state,
+            layouts=self.edge_layouts(), backend=self.backend)
         st.iterations = int(iters)
 
     # ---- query serving ---------------------------------------------------
@@ -357,6 +390,8 @@ class VeilGraphEngine:
                 delta_hop_cap=cfg.delta_hop_cap,
                 degree_mode=cfg.degree_mode,
                 expand_both=cfg.expand_both,
+                layouts=self.edge_layouts(),
+                backend=self.backend,
             )
             if bool(qs.used_fallback):
                 # capacities exceeded: the summarized state is invalid;
@@ -397,6 +432,8 @@ class VeilGraphEngine:
                 hot,
                 hot_node_capacity=cfg.hot_node_capacity,
                 hot_edge_capacity=cfg.hot_edge_capacity,
+                layouts=self.edge_layouts(),
+                backend=self.backend,
             )
             st.num_hot = int(hstats.num_hot)
             st.num_kr = int(hstats.num_kr)
@@ -410,7 +447,8 @@ class VeilGraphEngine:
                 self._run_exact(st)
             else:
                 self.algo_state, iters = self.algorithm.summarized(
-                    self.algo_state, self.state, summaries
+                    self.algo_state, self.state, summaries,
+                    backend=self.backend,
                 )
                 st.iterations = int(iters)
             self.ranks.block_until_ready()

@@ -47,7 +47,7 @@ class QueryStepStats(NamedTuple):
     jax.jit,
     static_argnames=(
         "hot_node_capacity", "hot_edge_capacity", "beta", "num_iters", "tol",
-        "n", "delta_hop_cap", "degree_mode", "expand_both",
+        "n", "delta_hop_cap", "degree_mode", "expand_both", "backend",
     ),
 )
 def approximate_query_step(
@@ -67,8 +67,15 @@ def approximate_query_step(
     delta_hop_cap: int = 4,
     degree_mode: str = "out",
     expand_both: bool = False,
+    layout=None,
+    backend: str | None = None,
 ) -> Tuple[jax.Array, QueryStepStats]:
-    """One summarized-PageRank query over the current graph state."""
+    """One summarized-PageRank query over the current graph state.
+
+    ``layout`` is an optional cached forward ``inv_out`` edge layout for the
+    frozen big-vertex pass; ``backend`` selects the propagation
+    implementation (see :mod:`repro.core.backend`).
+    """
     hot, hstats = select_hot_set(
         state, deg_prev, ranks_prev, r, delta,
         active_prev=active_prev, n=n, delta_hop_cap=delta_hop_cap,
@@ -78,6 +85,7 @@ def approximate_query_step(
         state, ranks_prev, hot,
         hot_node_capacity=hot_node_capacity,
         hot_edge_capacity=hot_edge_capacity,
+        layout=layout, backend=backend,
     )
 
     # No lax.cond here: the overflow fallback is almost never taken, and a
@@ -86,7 +94,8 @@ def approximate_query_step(
     # computed unconditionally; when ``used_fallback`` is set the caller
     # discards it and runs the exact recompute (engine does this on host).
     ranks, iters = summarized_pagerank(
-        summary, ranks_prev, beta=beta, num_iters=num_iters, tol=tol
+        summary, ranks_prev, beta=beta, num_iters=num_iters, tol=tol,
+        backend=backend,
     )
     stats = QueryStepStats(
         num_hot=hstats.num_hot,
@@ -110,7 +119,7 @@ def approximate_query_step(
     jax.jit,
     static_argnames=(
         "algo", "hot_node_capacity", "hot_edge_capacity",
-        "n", "delta_hop_cap", "degree_mode", "expand_both",
+        "n", "delta_hop_cap", "degree_mode", "expand_both", "backend",
     ),
 )
 def fused_query_step(
@@ -128,6 +137,8 @@ def fused_query_step(
     delta_hop_cap: int = 4,
     degree_mode: str = "out",
     expand_both: bool = False,
+    layouts=None,
+    backend: str | None = None,
 ):
     """One summarized query for *any* :class:`StreamingAlgorithm`.
 
@@ -139,6 +150,11 @@ def fused_query_step(
     :func:`approximate_query_step` above is the ``algo=PageRankAlgorithm``
     specialization of this (kept for the dry-run/bench harnesses that lower
     it directly).
+
+    ``layouts`` is the cached edge-layout tuple matching
+    ``algo.layout_specs`` (the engine builds it once per applied update
+    batch); ``backend`` picks the propagation implementation for the
+    summarized sweep and the frozen big-vertex pass.
 
     Returns ``(new_algo_state, QueryStepStats)``.  Like the specialized
     path, overflow does not branch on device — the caller discards
@@ -157,8 +173,10 @@ def fused_query_step(
         algo_state, state, hot,
         hot_node_capacity=hot_node_capacity,
         hot_edge_capacity=hot_edge_capacity,
+        layouts=layouts, backend=backend,
     )
-    new_state, iters = algo.summarized(algo_state, state, summaries)
+    new_state, iters = algo.summarized(
+        algo_state, state, summaries, backend=backend)
 
     num_eb = summaries[0].num_eb
     for s in summaries[1:]:

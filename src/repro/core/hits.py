@@ -11,6 +11,11 @@ only its case study).  The update rules are the classic mutual recursion
 with L1 normalization over the active vertex set each half-iteration, which
 keeps 30-iteration power sweeps inside f32 range.
 
+Both directions run through the unified :func:`repro.core.backend.push`
+primitive: the authority update over a forward (dst-sorted) unit-weight
+layout, the hub update over a reverse (src-sorted) one — on the pallas
+backend each half-iteration is one destination-tiled MXU kernel call.
+
 The summarized version runs both updates only for vertices in the hot set K,
 against *two* compacted summaries built by the generalized
 :func:`repro.core.pagerank.build_summary`:
@@ -28,11 +33,12 @@ the exact sweep up to f32 reassociation.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as B
 from repro.core.pagerank import SummaryBuffers
 from repro.graph.graph import GraphState
 
@@ -43,7 +49,7 @@ def _l1_normalize(x: jax.Array) -> jax.Array:
     return x / jnp.maximum(jnp.sum(jnp.abs(x)), _EPS)
 
 
-@functools.partial(jax.jit, static_argnames=("num_iters", "tol"))
+@functools.partial(jax.jit, static_argnames=("num_iters", "tol", "backend"))
 def hits(
     state: GraphState,
     auth0: jax.Array | None = None,
@@ -51,6 +57,9 @@ def hits(
     *,
     num_iters: int = 30,
     tol: float = 0.0,
+    fwd_layout: Optional[B.EdgeLayout] = None,
+    rev_layout: Optional[B.EdgeLayout] = None,
+    backend: Optional[str] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Full HITS power iteration.  Returns ``(auth, hub, iterations_run)``.
 
@@ -58,7 +67,17 @@ def hits(
     authority vector drops below ``tol``.  ``auth0``/``hub0`` warm-start the
     iteration (both converge to the principal singular vectors from any
     positive start, so warm starts only save iterations).
+
+    ``fwd_layout``/``rev_layout`` are optional cached unit-weight layouts
+    (forward/reverse orientation — see
+    :func:`repro.core.backend.build_layout`); the pallas backend sorts on
+    entry when they are absent.
     """
+    backend_r = B.resolve_backend(backend)
+    B.require_layout(fwd_layout, weight="unit", reverse=False,
+                     who="hits fwd_layout")
+    B.require_layout(rev_layout, weight="unit", reverse=True,
+                     who="hits rev_layout")
     n_cap = state.node_capacity
     active = state.node_active
     mask = state.edge_mask()
@@ -68,16 +87,27 @@ def hits(
     a0 = uniform if auth0 is None else _l1_normalize(jnp.where(active, auth0, 0.0))
     h0 = uniform if hub0 is None else _l1_normalize(jnp.where(active, hub0, 0.0))
 
+    if backend_r == "pallas":
+        if fwd_layout is None:
+            fwd_layout = B.build_layout(state, weight="unit")
+        if rev_layout is None:
+            rev_layout = B.build_layout(state, weight="unit", reverse=True)
+    edge_w = mask.astype(jnp.float32)
+
+    def _push_fwd(x):
+        if fwd_layout is None:
+            return B.push_coo(x, state.src, state.dst, n_cap, weight=edge_w)
+        return B.push(x, fwd_layout, backend=backend_r)
+
+    def _push_rev(x):
+        if rev_layout is None:
+            return B.push_coo(x, state.dst, state.src, n_cap, weight=edge_w)
+        return B.push(x, rev_layout, backend=backend_r)
+
     def body(carry):
         i, a, h, _ = carry
-        a_in = jax.ops.segment_sum(
-            jnp.where(mask, h[state.src], 0.0), state.dst, num_segments=n_cap
-        )
-        a_new = _l1_normalize(jnp.where(active, a_in, 0.0))
-        h_in = jax.ops.segment_sum(
-            jnp.where(mask, a_new[state.dst], 0.0), state.src, num_segments=n_cap
-        )
-        h_new = _l1_normalize(jnp.where(active, h_in, 0.0))
+        a_new = _l1_normalize(jnp.where(active, _push_fwd(h), 0.0))
+        h_new = _l1_normalize(jnp.where(active, _push_rev(a_new), 0.0))
         delta = jnp.sum(jnp.abs(a_new - a))
         return i + 1, a_new, h_new, delta
 
@@ -91,7 +121,7 @@ def hits(
     return a, h, i
 
 
-@functools.partial(jax.jit, static_argnames=("num_iters", "tol"))
+@functools.partial(jax.jit, static_argnames=("num_iters", "tol", "backend"))
 def summarized_hits(
     fwd: SummaryBuffers,
     rev: SummaryBuffers,
@@ -100,6 +130,7 @@ def summarized_hits(
     *,
     num_iters: int = 30,
     tol: float = 0.0,
+    backend: Optional[str] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """HITS power iteration restricted to the hot set K.
 
@@ -118,12 +149,18 @@ def summarized_hits(
     previous sum, and the previous sum is 1), so the r = 1.0 sweep is the
     exact sweep up to f32 reassociation.  Returns the updated *global*
     ``(auth, hub, iterations_run)``.
+
+    Each half-iteration is one :func:`repro.core.backend.push` over its
+    summary's pre-sorted E_K layout.
     """
+    backend_r = B.resolve_backend(backend)
     k_cap = fwd.hot_ids.shape[0]
     local_valid = jnp.arange(k_cap, dtype=jnp.int32) < fwd.num_hot
 
     a0 = jnp.where(local_valid, auth_prev[fwd.hot_ids], 0.0)
     h0 = jnp.where(local_valid, hub_prev[fwd.hot_ids], 0.0)
+    fwd_layout = B.summary_layout(fwd)
+    rev_layout = B.summary_layout(rev)
 
     def half_step(prev, raw):
         """Normalize a raw half-update by the hot block's growth rate."""
@@ -134,13 +171,9 @@ def summarized_hits(
 
     def body(carry):
         i, a, h, _ = carry
-        a_in = jax.ops.segment_sum(
-            h[fwd.ek_src] * fwd.ek_w, fwd.ek_dst, num_segments=k_cap
-        )
+        a_in = B.push(h, fwd_layout, backend=backend_r)
         a_new = half_step(a, jnp.where(local_valid, a_in + fwd.b_in, 0.0))
-        h_in = jax.ops.segment_sum(
-            a_new[rev.ek_src] * rev.ek_w, rev.ek_dst, num_segments=k_cap
-        )
+        h_in = B.push(a_new, rev_layout, backend=backend_r)
         h_new = half_step(h, jnp.where(local_valid, h_in + rev.b_in, 0.0))
         delta = jnp.sum(jnp.abs(a_new - a))
         return i + 1, a_new, h_new, delta

@@ -15,6 +15,15 @@ The summarized iteration runs in a *compacted* space: hot edges are gathered
 into a bounded ``hot_edge_capacity`` buffer and hot nodes are relabelled to
 ``[0, hot_node_capacity)``, so per-iteration cost is O(|E_K| + |K|) — this
 is the paper's O(K) claim realized with XLA static shapes.
+
+Both sweeps route their inner propagation through the unified
+:func:`repro.core.backend.push` primitive: pass a cached
+:class:`~repro.core.backend.EdgeLayout` (the engine does) and choose
+``backend="pallas"`` to run each iteration as one destination-tiled MXU
+kernel call, or ``"segment_sum"`` for the sorted XLA fallback.  The
+compacted E_K buffer is emitted *destination-sorted* with per-tile ranges
+(``ek_row_offsets``), so the ~30-iteration summarized loop body is a pure
+kernel call with the sort amortized into summary construction.
 """
 
 from __future__ import annotations
@@ -25,6 +34,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as B
 from repro.graph.graph import GraphState, inv_out_degree
 
 
@@ -35,7 +45,8 @@ from repro.graph.graph import GraphState, inv_out_degree
 
 @functools.partial(
     jax.jit,
-    static_argnames=("num_iters", "beta", "tol", "teleport_by_n", "dangling"),
+    static_argnames=("num_iters", "beta", "tol", "teleport_by_n", "dangling",
+                     "backend"),
 )
 def pagerank(
     state: GraphState,
@@ -47,6 +58,8 @@ def pagerank(
     teleport_by_n: bool = False,
     dangling: bool = False,
     teleport_v: Optional[jax.Array] = None,
+    layout: Optional[B.EdgeLayout] = None,
+    backend: Optional[str] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Full power-method PageRank.
 
@@ -56,7 +69,14 @@ def pagerank(
     ``teleport_v`` (f32[N_cap], optional) replaces the uniform teleport with
     a personalization vector: ``rank(v) = (1-β)·t(v) + β·Σ incoming`` —
     seeded/personalized PageRank in the same Gelly-style normalization.
+
+    ``layout`` is an optional cached forward ``weight="inv_out"`` edge
+    layout (see :func:`repro.core.backend.build_layout`); without one the
+    pallas backend sorts on entry (amortized over the sweep) and the
+    segment_sum backend falls back to the unsorted COO push.
     """
+    backend_r = B.resolve_backend(backend)
+    B.require_layout(layout, weight="inv_out", reverse=False, who="pagerank")
     n_cap = state.node_capacity
     active = state.node_active
     n_active = jnp.maximum(state.num_active_nodes().astype(jnp.float32), 1.0)
@@ -75,12 +95,16 @@ def pagerank(
     else:
         r0 = init_ranks
 
+    if layout is None and backend_r == "pallas":
+        layout = B.build_layout(state, weight="inv_out")
     edge_w = jnp.where(mask, inv_deg[state.src], 0.0)
 
     def body(carry):
         i, r, _ = carry
-        contrib = r[state.src] * edge_w
-        incoming = jax.ops.segment_sum(contrib, state.dst, num_segments=n_cap)
+        if layout is None:
+            incoming = B.push_coo(r, state.src, state.dst, n_cap, weight=edge_w)
+        else:
+            incoming = B.push(r, layout, backend=backend_r)
         if dangling:
             dangle = jnp.sum(jnp.where(active & (state.out_deg == 0), r, 0.0))
             incoming = incoming + dangle / n_active
@@ -160,8 +184,13 @@ class SummaryBuffers(NamedTuple):
     """Compacted summary graph G = (K ∪ {B}, E_K ∪ E_B) — static capacities.
 
     ``hot_ids[i]``   — global id of the i-th hot vertex (i < num_hot)
-    ``ek_src/dst``   — *local* endpoints of E_K edges (i < num_ek)
+    ``ek_src/dst``   — *local* endpoints of E_K edges, **sorted by local
+                       destination** (invalid slots hold the ``K_cap``
+                       sentinel destination and sort last)
     ``ek_w``         — val((u,v)) = 1/d_out(u) at summary-build time
+    ``ek_row_offsets`` — int32[K_cap + 1] edge range per local destination
+                       over the sorted buffer (the summarized sweep's
+                       kernel tile ranges derive from it)
     ``b_in``         — per-hot-vertex frozen big-vertex contribution
                        b_in[z] = Σ_{(w,z): w∉K} rank(w)/d_out(w)
     ``overflow``     — True if |K| or |E_K| exceeded a capacity; the caller
@@ -170,9 +199,10 @@ class SummaryBuffers(NamedTuple):
 
     hot_ids: jax.Array   # int32[K_cap]
     num_hot: jax.Array   # int32
-    ek_src: jax.Array    # int32[H_cap] (local ids)
-    ek_dst: jax.Array    # int32[H_cap] (local ids)
+    ek_src: jax.Array    # int32[H_cap] (local ids, dst-sorted)
+    ek_dst: jax.Array    # int32[H_cap] (local ids, sorted; K_cap = padding)
     ek_w: jax.Array      # f32[H_cap]
+    ek_row_offsets: jax.Array  # int32[K_cap + 1]
     num_ek: jax.Array    # int32
     b_in: jax.Array      # f32[K_cap]
     num_eb: jax.Array    # int32  (size of E_B, for the paper's edge-ratio stat)
@@ -182,7 +212,7 @@ class SummaryBuffers(NamedTuple):
 @functools.partial(
     jax.jit,
     static_argnames=("hot_node_capacity", "hot_edge_capacity", "weight",
-                     "reverse"),
+                     "reverse", "backend"),
 )
 def build_summary(
     state: GraphState,
@@ -193,6 +223,8 @@ def build_summary(
     hot_edge_capacity: int,
     weight: str = "inv_out",
     reverse: bool = False,
+    layout: Optional[B.EdgeLayout] = None,
+    backend: Optional[str] = None,
 ) -> SummaryBuffers:
     """Construct the big-vertex summary (§3.1) into bounded buffers.
 
@@ -206,6 +238,11 @@ def build_summary(
       the contribution of non-hot vertices reached by z's *out*-edges (the
       hub-update direction in HITS).  ``weight="inv_out"`` is only
       meaningful in the forward orientation.
+    - ``layout``: optional cached full-graph edge layout **matching this
+      summary's** ``weight``/``reverse`` (the engine passes one per
+      ``StreamingAlgorithm.layout_specs`` entry); the frozen big-vertex
+      pass then runs through the sorted :func:`repro.core.backend.push`
+      instead of an unsorted segment-sum.
 
     ``ranks_prev`` is whatever score vector the frozen big-vertex
     contribution should be computed from (previous PageRank ranks, previous
@@ -215,6 +252,8 @@ def build_summary(
         raise ValueError(
             "build_summary(reverse=True) requires weight='unit': inv_out "
             "would normalize by the out-degree of the *receiving* endpoint")
+    B.require_layout(layout, weight=weight, reverse=reverse,
+                     who="build_summary")
     n_cap = state.node_capacity
     k_cap = hot_node_capacity
     h_cap = hot_edge_capacity
@@ -245,10 +284,16 @@ def build_summary(
 
     # ---- frozen big-vertex contribution (computed once per query) -------
     # b_in_global[z] = Σ_{(w,z) ∈ E_B} rank_prev(w) · val(w)
-    # node-side precompute keeps this to a single O(E) gather
-    emit = ranks_prev * inv_deg if weight == "inv_out" else ranks_prev
-    eb_contrib = jnp.where(eb_mask, emit[e_src], 0.0)
-    b_in_global = jax.ops.segment_sum(eb_contrib, e_dst, num_segments=n_cap)
+    # one O(E) push; with a cached layout the E_B selection becomes a mask
+    # over the sorted stream and the sum reuses the amortized edge sort
+    if layout is None:
+        emit = ranks_prev * inv_deg if weight == "inv_out" else ranks_prev
+        b_in_global = B.push_coo(emit, e_src, e_dst, n_cap, mask=eb_mask)
+    else:
+        eb_mask_s = (~hot_mask[layout.src]) & hot_mask[
+            jnp.minimum(layout.dst, n_cap - 1)]
+        b_in_global = B.push(ranks_prev, layout, backend=backend,
+                             mask=eb_mask_s)
     b_in = jnp.where(local_valid, b_in_global[hot_ids], 0.0)
 
     # ---- compact E_K into the bounded buffer ----------------------------
@@ -265,12 +310,24 @@ def build_summary(
     ek_src = jnp.where(ek_valid, local_of[gsrc], 0)
     ek_dst = jnp.where(ek_valid, local_of[gdst], 0)
 
+    # ---- destination-sort the compacted buffer --------------------------
+    # One argsort over H_cap per query makes every summarized iteration a
+    # pure sorted push (kernel tile ranges derive from ek_row_offsets);
+    # invalid slots take the K_cap sentinel destination and sort last.
+    ek_key = jnp.where(ek_valid, ek_dst, k_cap)
+    ek_order = jnp.argsort(ek_key, stable=True)
+    ek_dst_s = ek_key[ek_order]
+    ek_row_offsets = jnp.searchsorted(
+        ek_dst_s, jnp.arange(k_cap + 1, dtype=jnp.int32), side="left"
+    ).astype(jnp.int32)
+
     return SummaryBuffers(
         hot_ids=hot_ids,
         num_hot=num_hot,
-        ek_src=ek_src,
-        ek_dst=ek_dst,
-        ek_w=ek_w,
+        ek_src=ek_src[ek_order],
+        ek_dst=ek_dst_s,
+        ek_w=ek_w[ek_order],
+        ek_row_offsets=ek_row_offsets,
         num_ek=num_ek,
         b_in=b_in,
         num_eb=num_eb,
@@ -279,7 +336,7 @@ def build_summary(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("num_iters", "beta", "tol")
+    jax.jit, static_argnames=("num_iters", "beta", "tol", "backend")
 )
 def summarized_pagerank(
     summary: SummaryBuffers,
@@ -289,6 +346,7 @@ def summarized_pagerank(
     num_iters: int = 30,
     tol: float = 0.0,
     teleport_v: Optional[jax.Array] = None,
+    backend: Optional[str] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Power iteration restricted to the summary graph (§3.1).
 
@@ -298,7 +356,12 @@ def summarized_pagerank(
     ``teleport_v`` for seeded PageRank.  Cold ranks are carried over
     unchanged.  Returns the *global* rank vector and the number of
     iterations run.
+
+    The loop body is one :func:`repro.core.backend.push` over the summary's
+    pre-sorted E_K layout — a single kernel call per iteration on the
+    pallas backend.
     """
+    backend_r = B.resolve_backend(backend)
     k_cap = summary.hot_ids.shape[0]
     local_valid = jnp.arange(k_cap, dtype=jnp.int32) < summary.num_hot
     r_local0 = jnp.where(local_valid, ranks_prev[summary.hot_ids], 0.0)
@@ -306,13 +369,11 @@ def summarized_pagerank(
         t_local = jnp.where(local_valid, teleport_v[summary.hot_ids], 0.0)
     else:
         t_local = 1.0
+    layout = B.summary_layout(summary)
 
     def body(carry):
         i, r, _ = carry
-        contrib = r[summary.ek_src] * summary.ek_w
-        incoming = jax.ops.segment_sum(
-            contrib, summary.ek_dst, num_segments=k_cap
-        )
+        incoming = B.push(r, layout, backend=backend_r)
         new_r = jnp.where(
             local_valid,
             (1.0 - beta) * t_local + beta * (incoming + summary.b_in),

@@ -1,15 +1,18 @@
 """CSR/CSC derivation from the padded COO buffer.
 
-The power-iteration push is expressed as a segment-sum over COO in the pure
-JAX path; the Pallas SpMV kernel instead consumes a *destination-sorted*
-(CSC-like) layout so each output tile accumulates from a contiguous edge
-range.  Sorting happens once per query (after updates are applied), which the
-paper's own summary construction also amortizes over ~30 power iterations.
+The power-iteration push consumes a *receiver-sorted* (CSC-like) edge layout
+so each output tile accumulates from a contiguous edge range — both the
+Pallas SpMV kernel and the ``indices_are_sorted`` segment-sum fallback in
+:mod:`repro.core.backend` are built on it.  Sorting happens at most once per
+applied update batch: the engine caches the sorted layout and reuses it
+across queries, and each query's ~30 power iterations reuse it per
+iteration.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
+import functools
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -18,23 +21,35 @@ from .graph import GraphState
 
 
 class SortedEdges(NamedTuple):
-    """Edges permuted so dst is non-decreasing; padding sorts to the end."""
+    """Edges permuted so the receiving endpoint is non-decreasing.
 
-    src: jax.Array        # int32[E_cap]
-    dst: jax.Array        # int32[E_cap]  (node_capacity for padding slots)
+    ``src`` is the *emitting* endpoint and ``dst`` the *receiving* one in
+    the chosen orientation — with ``reverse=True`` they are the transposed
+    graph's, i.e. ``src`` holds original destinations.  Padding/tombstone
+    slots sort to the end with ``dst = node_capacity``.
+    """
+
+    src: jax.Array        # int32[E_cap] emitting endpoint
+    dst: jax.Array        # int32[E_cap] receiving endpoint (n_cap = padding)
     valid: jax.Array      # bool[E_cap]
-    row_offsets: jax.Array  # int32[N_cap + 1] — edge range per destination
+    row_offsets: jax.Array  # int32[N_cap + 1] — edge range per receiver
 
 
-@jax.jit
-def sort_by_dst(state: GraphState) -> SortedEdges:
+@functools.partial(jax.jit, static_argnames=("reverse",))
+def sort_by_dst(state: GraphState, *, reverse: bool = False) -> SortedEdges:
+    """Sort live edges by receiving endpoint (``state.src`` when ``reverse``).
+
+    ``reverse=True`` sorts the transposed edge set — the layout for sweeps
+    that accumulate along *out*-edges (the hub update in HITS).
+    """
     mask = state.edge_mask()
     n = state.node_capacity
+    e_src, e_dst = (state.dst, state.src) if reverse else (state.src, state.dst)
     # invalid edges get dst = n so they sort last
-    key = jnp.where(mask, state.dst, n)
+    key = jnp.where(mask, e_dst, n)
     order = jnp.argsort(key, stable=True)
     dst_s = key[order]
-    src_s = state.src[order]
+    src_s = e_src[order]
     valid = mask[order]
     # offsets via searchsorted over the sorted keys
     row_offsets = jnp.searchsorted(
@@ -43,12 +58,32 @@ def sort_by_dst(state: GraphState) -> SortedEdges:
     return SortedEdges(src_s, dst_s, valid, row_offsets)
 
 
-@jax.jit
 def gather_push(
-    edges: SortedEdges, values: jax.Array, num_segments: int
+    edges,
+    values: jax.Array,
+    num_segments: int,
+    *,
+    weight: Optional[jax.Array] = None,
+    mask: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """out[v] = sum over sorted in-edges (u,v) of values[u] — sorted segments."""
-    contrib = jnp.where(edges.valid, values[edges.src], 0.0)
+    """out[v] = Σ over sorted in-edges (u,v) of values[u]·weight(u,v).
+
+    The ``indices_are_sorted`` segment-sum fallback of the propagation
+    backend (:func:`repro.core.backend.push`): on sorted layouts XLA skips
+    the scatter's sort/unique analysis, so even the non-Pallas path profits
+    from the amortized edge sort.  ``edges`` is anything with
+    ``src``/``dst``/``valid`` fields over the same (sorted) edge order — a
+    :class:`SortedEdges` or a :class:`repro.core.backend.EdgeLayout`;
+    ``weight``/``mask`` are optional per-edge multipliers/filters in that
+    order.  Traced inline (call from inside jit).
+    """
+    contrib = values[edges.src]
+    if weight is not None:
+        contrib = contrib * weight
+    keep = edges.valid if mask is None else (edges.valid & mask)
+    contrib = jnp.where(keep, contrib, 0.0)
+    # padding sentinel (= node capacity) clamps into range; its contribution
+    # is already zeroed above
     dst = jnp.minimum(edges.dst, num_segments - 1)
     return jax.ops.segment_sum(
         contrib, dst, num_segments=num_segments, indices_are_sorted=True

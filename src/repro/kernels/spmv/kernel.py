@@ -1,28 +1,33 @@
-"""Pallas TPU kernel: destination-tiled SpMV push (the PageRank hot loop).
+"""Pallas TPU kernel: destination-tiled SpMV push (every sweep's hot loop).
 
 TPU adaptation of the paper's vertex-centric message push.  A GPU
 implementation would scatter with atomics; TPUs have no scatter-atomics, so
 the kernel is restructured around the MXU:
 
 - edges are sorted by destination (csr.sort_by_dst, amortized over ~30
-  power iterations per query);
-- the destination space is tiled into TILE_N-wide output tiles; each grid
+  power iterations per query and — via the engine's layout cache — across
+  every query between two applied update batches);
+- the destination space is tiled into tile_n-wide output tiles; each grid
   step owns one tile and consumes only its edge range [tile_start[t],
   tile_start[t+1]);
-- within a chunk of CHUNK edges, the scatter-add becomes a one-hot matmul:
-  acc += onehot(dst_local)ᵀ @ contrib — an (CHUNK × TILE_N)ᵀ·(CHUNK,)
+- within a chunk of ``chunk`` edges, the scatter-add becomes a one-hot
+  matmul: acc += onehot(dst_local)ᵀ @ contrib — a (chunk × tile_n)ᵀ·(chunk,)
   product that runs on the MXU instead of a serial scatter (the classic
   TPU segment-sum-by-matmul trick);
-- per-edge contributions (rank[src] / out_deg[src]) are gathered OUTSIDE
-  the kernel by XLA (TPU gathers are efficient; VMEM-resident random
+- per-edge contributions (e.g. rank[src] / out_deg[src]) are gathered
+  OUTSIDE the kernel by XLA (TPU gathers are efficient; VMEM-resident random
   gather inside the kernel is not), so the kernel input is a dense
-  contribution stream — this is the hardware-adaptation note from
-  DESIGN.md §2 in action.
+  contribution stream — the kernel is therefore algorithm-agnostic: PageRank
+  weights, HITS unit weights and summarized E_K weights all arrive pre-baked
+  in the stream.
 
-VMEM budget per step: contrib chunk (CHUNK f32) + dst chunk (CHUNK i32) +
-one-hot (CHUNK × TILE_N f32) + acc (TILE_N f32) ≈ 0.53 MB for
-CHUNK=512, TILE_N=256 — far under the ~16 MB VMEM budget; TILE_N is
-128-lane aligned.
+``tile_n``/``chunk`` are parameters (module constants are only the
+defaults): the summarized sweep runs in the compacted ``k_cap`` space whose
+natural tile size differs from the full-graph sweep's.  VMEM budget per
+step: contrib chunk (chunk f32) + dst chunk (chunk i32) + one-hot
+(chunk × tile_n f32) + acc (tile_n f32) ≈ 0.53 MB for chunk=512,
+tile_n=256 — far under the ~16 MB VMEM budget; tile_n should stay 128-lane
+aligned.
 """
 
 from __future__ import annotations
@@ -37,54 +42,66 @@ CHUNK = 512
 TILE_N = 256
 
 
-def _spmv_kernel(tile_start_ref, contrib_ref, dst_ref, out_ref):
-    """One output tile: accumulate its sorted-edge range via one-hot matmuls."""
-    t = pl.program_id(0)
-    start = tile_start_ref[t]
-    end = tile_start_ref[t + 1]
-    base = t * TILE_N
+def _make_spmv_kernel(tile_n: int, chunk: int):
+    """Kernel body closure over the (static) tile/chunk geometry."""
 
-    n_chunks = pl.cdiv(end - start, CHUNK)
+    def _spmv_kernel(tile_start_ref, contrib_ref, dst_ref, out_ref):
+        """One output tile: accumulate its sorted-edge range via one-hot
+        matmuls."""
+        t = pl.program_id(0)
+        start = tile_start_ref[t]
+        end = tile_start_ref[t + 1]
+        base = t * tile_n
 
-    def body(i, acc):
-        lo = start + i * CHUNK
-        idx = lo + jnp.arange(CHUNK, dtype=jnp.int32)
-        valid = idx < end
-        # dynamic-start loads from the edge stream (HBM -> VMEM)
-        c = pl.load(contrib_ref, (pl.ds(lo, CHUNK),))
-        d = pl.load(dst_ref, (pl.ds(lo, CHUNK),))
-        d_local = jnp.where(valid, d - base, TILE_N)      # OOB -> zero row
-        onehot = (d_local[:, None] ==
-                  jnp.arange(TILE_N, dtype=jnp.int32)[None, :])
-        c = jnp.where(valid, c, 0.0)
-        # MXU: scatter-add as a (1, CHUNK) @ (CHUNK, TILE_N) product
-        return acc + jnp.dot(c[None, :], onehot.astype(jnp.float32))[0]
+        n_chunks = pl.cdiv(end - start, chunk)
 
-    acc0 = jnp.zeros((TILE_N,), jnp.float32)
-    acc = jax.lax.fori_loop(0, n_chunks, body, acc0)
-    out_ref[...] = acc
+        def body(i, acc):
+            lo = start + i * chunk
+            idx = lo + jnp.arange(chunk, dtype=jnp.int32)
+            valid = idx < end
+            # dynamic-start loads from the edge stream (HBM -> VMEM); the
+            # layout builder pads the stream by >= one chunk so these loads
+            # never run past the buffer even when end is near capacity
+            c = pl.load(contrib_ref, (pl.ds(lo, chunk),))
+            d = pl.load(dst_ref, (pl.ds(lo, chunk),))
+            d_local = jnp.where(valid, d - base, tile_n)      # OOB -> zero row
+            onehot = (d_local[:, None] ==
+                      jnp.arange(tile_n, dtype=jnp.int32)[None, :])
+            c = jnp.where(valid, c, 0.0)
+            # MXU: scatter-add as a (1, chunk) @ (chunk, tile_n) product
+            return acc + jnp.dot(c[None, :], onehot.astype(jnp.float32))[0]
+
+        acc0 = jnp.zeros((tile_n,), jnp.float32)
+        acc = jax.lax.fori_loop(0, n_chunks, body, acc0)
+        out_ref[...] = acc
+
+    return _spmv_kernel
 
 
-@functools.partial(jax.jit, static_argnames=("num_tiles", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("num_tiles", "tile_n", "chunk", "interpret")
+)
 def spmv_push(
-    contrib: jax.Array,      # f32[E_pad] — rank[src]/deg[src], dst-sorted
+    contrib: jax.Array,      # f32[E_pad] — per-edge contribution, dst-sorted
     dst_sorted: jax.Array,   # i32[E_pad] — destination per edge (sorted)
     tile_start: jax.Array,   # i32[num_tiles + 1] — edge range per tile
     *,
     num_tiles: int,
+    tile_n: int = TILE_N,
+    chunk: int = CHUNK,
     interpret: bool = False,
 ) -> jax.Array:
-    """Returns f32[num_tiles * TILE_N] accumulated incoming contributions."""
+    """Returns f32[num_tiles * tile_n] accumulated incoming contributions."""
     out = pl.pallas_call(
-        _spmv_kernel,
+        _make_spmv_kernel(tile_n, chunk),
         grid=(num_tiles,),
         in_specs=[
             pl.BlockSpec(memory_space=pl.ANY),   # tile_start (scalar-ish)
             pl.BlockSpec(memory_space=pl.ANY),   # contrib stream stays in HBM
             pl.BlockSpec(memory_space=pl.ANY),   # dst stream stays in HBM
         ],
-        out_specs=pl.BlockSpec((TILE_N,), lambda t: (t,)),
-        out_shape=jax.ShapeDtypeStruct((num_tiles * TILE_N,), jnp.float32),
+        out_specs=pl.BlockSpec((tile_n,), lambda t: (t,)),
+        out_shape=jax.ShapeDtypeStruct((num_tiles * tile_n,), jnp.float32),
         interpret=interpret,
     )(tile_start, contrib, dst_sorted)
     return out

@@ -1,45 +1,39 @@
 """jit'd wrapper: padded-COO graph -> tiled kernel inputs -> PageRank push.
 
-Bridges the VeilGraph GraphState to the Pallas kernel: sorts edges by
-destination, derives per-output-tile edge ranges, gathers per-edge
-contributions with XLA, and calls the kernel.  ``interpret=True`` runs the
-kernel body in Python on CPU (how this container validates it); on TPU the
-same call compiles to a Mosaic kernel.
+Thin convenience wrapper over the unified propagation backend
+(:mod:`repro.core.backend`): builds (or accepts) the destination-sorted
+``inv_out`` edge layout via :func:`repro.graph.csr.sort_by_dst` and runs one
+push through the Pallas kernel.  ``interpret=True`` runs the kernel body in
+Python on CPU (how this container validates it); on TPU the same call
+compiles to a Mosaic kernel.
+
+Callers issuing repeated pushes should build the layout once
+(:func:`repro.core.backend.build_layout`, or the engine's cached
+``edge_layouts``) and pass it in — re-sorting per push is the cost this
+layout amortizes away.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.graph.graph import GraphState, inv_out_degree
-from repro.kernels.spmv.kernel import CHUNK, TILE_N, spmv_push
+from repro.core.backend import EdgeLayout, build_layout, push
+from repro.graph.graph import GraphState
+from repro.kernels.spmv.kernel import CHUNK, TILE_N  # noqa: F401  (re-export)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(
+    jax.jit, static_argnames=("interpret", "tile_n", "chunk"))
 def pagerank_push(state: GraphState, ranks: jax.Array, *,
-                  interpret: bool = True) -> jax.Array:
+                  interpret: bool = True,
+                  layout: Optional[EdgeLayout] = None,
+                  tile_n: int = TILE_N,
+                  chunk: int = CHUNK) -> jax.Array:
     """One power-iteration push: out[v] = Σ_{(u,v)∈E} ranks[u]/d_out(u)."""
-    n_cap = state.node_capacity
-    num_tiles = (n_cap + TILE_N - 1) // TILE_N
-    mask = state.edge_mask()
-
-    # sort edges by destination (invalid edges -> sentinel, sorted last)
-    key = jnp.where(mask, state.dst, num_tiles * TILE_N)
-    order = jnp.argsort(key)
-    dst_s = key[order]
-    src_s = state.src[order]
-    valid_s = mask[order]
-
-    emit = ranks * inv_out_degree(state)
-    contrib = jnp.where(valid_s, emit[src_s], 0.0)
-
-    # per-tile edge ranges over the sorted stream
-    bounds = jnp.arange(num_tiles + 1, dtype=jnp.int32) * TILE_N
-    tile_start = jnp.searchsorted(dst_s, bounds, side="left").astype(jnp.int32)
-
-    out = spmv_push(contrib, dst_s.astype(jnp.int32), tile_start,
-                    num_tiles=num_tiles, interpret=interpret)
-    return out[:n_cap]
+    if layout is None:
+        layout = build_layout(state, weight="inv_out", chunk=chunk)
+    return push(ranks, layout, backend="pallas", tile_n=tile_n, chunk=chunk,
+                interpret=interpret)

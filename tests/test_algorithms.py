@@ -112,6 +112,11 @@ def test_registry_round_trip():
     assert "custom-pr" in available_algorithms()
     b = make_algorithm("custom-pr", beta=0.5)
     assert isinstance(b, PageRankAlgorithm) and b.beta == 0.5
+    # legacy knobs forward through a **kwargs factory in the session builder
+    src = np.asarray([0, 1, 2], np.int32)
+    dst = np.asarray([1, 2, 0], np.int32)
+    with veilgraph.session((src, dst), "custom-pr", num_iters=5) as s:
+        assert s.algorithm.num_iters == 5
 
 
 def test_algorithms_are_jit_static():
