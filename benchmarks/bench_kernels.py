@@ -71,17 +71,40 @@ def _sweep_fixture(nodes=50_000, edges=500_000):
     return g, layout, ranks, summary
 
 
+def _minplus_fixture(g):
+    """min-plus (SSSP) operands over the same reference graph: a length
+    layout, warm distances from a few relaxations, and a min_plus summary."""
+    from repro.core import backend as B
+    from repro.core.pagerank import build_summary
+    from repro.core.traversal import sssp
+
+    nodes = g.node_capacity
+    layout = B.build_layout(g, weight="length", semiring="min_plus")
+    source = jnp.zeros((nodes,), bool).at[0].set(True)
+    dist, _ = sssp(g, source, num_iters=3, layout=layout,
+                   backend="segment_sum")
+    hot = jnp.asarray(np.random.default_rng(1).random(nodes) < 0.15)
+    summary = build_summary(g, dist, hot, hot_node_capacity=8192,
+                            hot_edge_capacity=65536, weight="length",
+                            semiring="min_plus")
+    return layout, dist, source, summary
+
+
 def bench_sweep_backends(*, smoke: bool = False, nodes=50_000, edges=500_000):
-    """Backend-vs-backend rows: one push and one full summarized sweep per
-    backend on the 500k-edge reference graph.  The pallas rows run in
-    interpret mode off-TPU — they track kernel-logic cost trajectory, not
-    TPU wall time (the dry-run covers that).  Returns (rows, records); the
-    records feed BENCH_sweeps.json.
+    """Backend-vs-backend rows: a plus_times push + summarized PageRank
+    sweep, and a min_plus push + summarized SSSP sweep, per backend on the
+    500k-edge reference graph.  The pallas rows run in interpret mode
+    off-TPU — they track kernel-logic cost trajectory, not TPU wall time
+    (the dry-run covers that); the min_plus rows exercise the masked-reduce
+    kernel variant instead of the one-hot matmul.  Returns (rows, records);
+    the records feed BENCH_sweeps.json.
     """
     from repro.core import backend as B
     from repro.core.pagerank import summarized_pagerank
+    from repro.core.traversal import summarized_sssp
 
     g, layout, ranks, summary = _sweep_fixture(nodes, edges)
+    mp_layout, dist, source, mp_summary = _minplus_fixture(g)
     iters = 1 if smoke else 3
     sweep_iters = 1 if smoke else 30
     interpret = B.default_interpret()
@@ -100,6 +123,18 @@ def bench_sweep_backends(*, smoke: bool = False, nodes=50_000, edges=500_000):
         us = _bench(summ_fn, summary, ranks, iters=iters, warmup=1)
         cases.append((f"summarized_sweep_{sweep_iters}it_{tag}", us,
                       f"|K|={int(summary.num_hot)},|E_K|={int(summary.num_ek)}"))
+        mp_push_fn = jax.jit(lambda d, lay, b=backend: B.push(
+            d, lay, semiring="min_plus", backend=b, interpret=interpret))
+        us = _bench(mp_push_fn, dist, mp_layout, iters=iters, warmup=1)
+        cases.append((f"push_minplus_{tag}_{edges // 1000}k", us,
+                      f"{live_edges / (us / 1e6) / 1e9:.3f}Gedge/s"))
+        mp_sweep_fn = jax.jit(lambda s, d, m, b=backend: summarized_sssp(
+            s, d, m, num_iters=sweep_iters, backend=b)[0])
+        us = _bench(mp_sweep_fn, mp_summary, dist, source, iters=iters,
+                    warmup=1)
+        cases.append((f"summarized_sssp_{sweep_iters}it_{tag}", us,
+                      f"|K|={int(mp_summary.num_hot)},"
+                      f"|E_K|={int(mp_summary.num_ek)}"))
     records = [
         {"name": name, "us_per_call": round(us, 1), "derived": derived}
         for name, us, derived in cases

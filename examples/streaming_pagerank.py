@@ -43,9 +43,21 @@ def run(dataset="synth-citation", algorithm="pagerank", r=0.2, n=1, delta=0.1,
         node_capacity=n_cap, edge_capacity=e_cap,
         hot_node_capacity=max(2048, n_cap // 2),
         hot_edge_capacity=max(16384, e_cap // 2),
-        r=r, n=n, delta=delta, num_iters=30, tol=1e-6,
+        r=r, n=n, delta=delta,
         **algo_params,
     )
+    # sweep knobs only where the algorithm takes them (the fixed-point
+    # traversal workloads have no tol — they stop when nothing changes);
+    # introspect the registry factory rather than instantiating it, so
+    # algorithms with required constructor args don't crash here.  An
+    # already-constructed instance carries its own knobs — session()
+    # rejects forwarding to it, so inject nothing.
+    if isinstance(algorithm, str):
+        from repro.core.algorithm import algorithm_factory, factory_accepts
+        factory = algorithm_factory(algorithm)
+        for k, v in (("num_iters", 30), ("tol", 1e-6)):
+            if factory_accepts(factory, k):
+                knobs.setdefault(k, v)
     approx = veilgraph.session(stream, algorithm, **knobs)
     exact = veilgraph.session(stream, algorithm,
                               on_query=always(veilgraph.Action.EXACT), **knobs)
@@ -59,9 +71,21 @@ def run(dataset="synth-citation", algorithm="pagerank", r=0.2, n=1, delta=0.1,
 
     rows = []
     for q, (ra, re_) in enumerate(zip(approx.play(), exact.play())):
+        # orient by the algorithm's ranking direction and drop sentinel
+        # entries (+inf unreachable distances, int-max labels) — otherwise
+        # distance/label workloads would be compared on an inverted,
+        # tie-dominated ranking.  Only the *exact* run's validity filters:
+        # a vertex the approximation left at a sentinel while the exact run
+        # resolved it is a miss, and (sign-flipped to -inf) it ranks last
+        # in the approx ordering, correctly dragging RBO down.
+        mask = np.asarray(approx.engine.state.node_active)
+        if re_.valid is not None:
+            mask = mask & re_.valid
+        sign = 1.0 if ra.descending else -1.0
         rbo = rbo_from_scores(
-            ra.scores, re_.scores, depth=depth,
-            active=np.asarray(approx.engine.state.node_active))
+            sign * ra.scores.astype(np.float64),
+            sign * re_.scores.astype(np.float64),
+            depth=depth, active=mask)
         rows.append({
             "q": q, "vertex_ratio": ra.stats.vertex_ratio,
             "edge_ratio": ra.stats.edge_ratio, "rbo": rbo,

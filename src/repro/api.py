@@ -16,6 +16,18 @@ dataset (``repro.graph.generators.DATASETS``), or a prebuilt
 from the stream's initial graph and ``s.play()`` replays the update chunks,
 one query per chunk.
 
+The registry spans the whole semiring family, not just ranking — the same
+call drives non-float workloads end to end::
+
+    veilgraph.session((src, dst), algorithm="sssp", sources=(0,))
+    veilgraph.session((src, dst), algorithm="connected-components")
+    veilgraph.session((src, dst), algorithm="katz", alpha=0.01)
+
+``result.scores`` then carries the algorithm's own result dtype (f32
+distances, int32 component labels, …); the engine's hot-set policy is
+driven by each algorithm's float ``selection_view`` (label churn /
+distance deltas for the traversal workloads).
+
 Capacities are sized automatically from the source when no
 :class:`EngineConfig` is given (hot buffers default to full capacity, so a
 fresh session never overflow-falls-back; pass explicit ``hot_node_capacity``
@@ -35,9 +47,13 @@ keyword overrides.
 
 The propagation backend for every sweep is likewise a config override:
 ``session(src_dst, backend="pallas")`` forces the destination-tiled Pallas
-MXU kernel, ``"segment_sum"`` the sorted-XLA fallback, and the default
-``"auto"`` resolves per device (TPU → pallas) with ``$VEILGRAPH_BACKEND``
-as the environment override — see :mod:`repro.core.backend`.
+kernels (the one-hot-matmul MXU path for sum-of-products, the masked-reduce
+variant for min/max semirings), ``"segment_sum"`` the sorted-XLA fallback,
+and the default ``"auto"`` resolves per device (TPU → pallas) with
+``$VEILGRAPH_BACKEND`` as the environment override.  Which semiring a sweep
+runs over is the *algorithm's* declaration (``StreamingAlgorithm.semiring``
+/ ``layout_specs``), not a session knob — see :mod:`repro.core.backend` and
+:mod:`repro.core.semiring`.
 """
 
 from __future__ import annotations
@@ -59,24 +75,54 @@ GraphSource = Union[str, Tuple[np.ndarray, np.ndarray], EdgeStream]
 _CONFIG_KEYS = frozenset(f.name for f in fields(EngineConfig))
 
 
-def _top_ids(scores: np.ndarray, k: int) -> np.ndarray:
-    """Ids of the k highest-scored vertices (descending, stable ties)."""
-    return np.argsort(-scores, kind="stable")[:k]
+def _result_valid(scores: np.ndarray, active: np.ndarray) -> np.ndarray:
+    """Vertices whose result value is an answer, not padding: active, and
+    not the ⊕-identity sentinel of a min/max workload (+∞ unreachable
+    distances, int-extreme labels of never-seen capacity slots)."""
+    valid = np.asarray(active, bool).copy()
+    if np.issubdtype(scores.dtype, np.floating):
+        valid &= np.isfinite(scores)
+    elif np.issubdtype(scores.dtype, np.integer):
+        info = np.iinfo(scores.dtype)
+        valid &= (scores != info.max) & (scores != info.min)
+    return valid
+
+
+def _top_ids(scores: np.ndarray, k: int, *, descending: bool = True,
+             valid: Optional[np.ndarray] = None) -> np.ndarray:
+    """Ids of the k best-ranked vertices (stable ties).  ``descending``
+    follows the algorithm's ``rank_descending`` (False for distances /
+    min-labels); sentinel/inactive vertices are dropped, so fewer than
+    ``k`` ids may come back."""
+    order = np.argsort(-scores if descending else scores, kind="stable")
+    if valid is not None:
+        order = order[valid[order]]
+    return order[:k]
 
 
 @dataclass
 class QueryResult:
-    """One served query: the score vector plus the engine's stats row."""
+    """One served query: the result vector plus the engine's stats row.
+
+    ``scores`` is the algorithm's ``result_view`` in its own dtype (f32
+    ranks/distances, int32 component labels); ``valid`` masks the entries
+    that are real answers (capacity padding, never-seen vertices and
+    unreachable-∞ slots are False) and ``descending`` records the
+    algorithm's ranking direction — both feed :meth:`top`.
+    """
 
     scores: np.ndarray
     stats: QueryStats
+    valid: Optional[np.ndarray] = None
+    descending: bool = True
 
     @property
     def action(self) -> str:
         return self.stats.action
 
     def top(self, k: int = 10) -> np.ndarray:
-        return _top_ids(self.scores, k)
+        return _top_ids(self.scores, k, descending=self.descending,
+                        valid=self.valid)
 
 
 class VeilGraphSession:
@@ -107,7 +153,12 @@ class VeilGraphSession:
         return self.engine.stats_log
 
     def top(self, k: int = 10) -> np.ndarray:
-        return _top_ids(self.scores, k)
+        scores = self.scores
+        return _top_ids(
+            scores, k,
+            descending=self.algorithm.rank_descending,
+            valid=_result_valid(scores,
+                                np.asarray(self.engine.state.node_active)))
 
     # ---- streaming -------------------------------------------------------
     def add_edges(self, src, dst) -> "VeilGraphSession":
@@ -120,7 +171,11 @@ class VeilGraphSession:
 
     def query(self, msg: Optional[Dict] = None) -> QueryResult:
         scores, stats = self.engine.query(msg)
-        return QueryResult(scores=scores, stats=stats)
+        return QueryResult(
+            scores=scores, stats=stats,
+            valid=_result_valid(scores,
+                                np.asarray(self.engine.state.node_active)),
+            descending=self.algorithm.rank_descending)
 
     def play(self) -> Iterator[QueryResult]:
         """Replay the attached stream: one update chunk + one query each."""
@@ -214,18 +269,11 @@ def session(
                 f"constructed algorithm — pass them to "
                 f"{type(algorithm).__name__}(...) instead")
     elif _legacy_knobs:
-        from repro.core.algorithm import _ALIASES, _REGISTRY
-        import inspect
+        from repro.core.algorithm import algorithm_factory, factory_accepts
 
-        canonical = _ALIASES.get(algorithm, algorithm)
-        accepted = inspect.signature(_REGISTRY[canonical]).parameters \
-            if canonical in _REGISTRY else {}
-        # a **kwargs factory (the documented registration pattern) accepts
-        # any knob even though none is literally named in its signature
-        has_var_kw = any(p.kind is inspect.Parameter.VAR_KEYWORD
-                         for p in accepted.values())
-        rejected = [] if has_var_kw else \
-            [k for k in _legacy_knobs if k not in accepted]
+        factory = algorithm_factory(algorithm)
+        rejected = [k for k in _legacy_knobs
+                    if not factory_accepts(factory, k)]
         if rejected:
             raise ValueError(
                 f"algorithm {algorithm!r} does not accept {sorted(rejected)}")

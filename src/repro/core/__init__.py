@@ -1,16 +1,26 @@
 """VeilGraph core: the paper's contribution — approximate streaming graph
 processing via hot-vertex selection + big-vertex summarization — behind a
-pluggable :class:`StreamingAlgorithm` interface (PageRank is the paper's
-case study; personalized PageRank and HITS ship alongside it)."""
-from repro.core.algorithm import (Action, AlgoState, HITSAlgorithm,
+pluggable :class:`StreamingAlgorithm` interface over semiring-generic
+propagation (PageRank is the paper's case study; personalized PageRank,
+HITS, Katz, connected components and SSSP ship alongside it)."""
+from repro.core.algorithm import (Action, AlgoState,
+                                  ConnectedComponentsAlgorithm,
+                                  HITSAlgorithm, KatzAlgorithm,
                                   PageRankAlgorithm,
                                   PersonalizedPageRankAlgorithm,
-                                  StreamingAlgorithm, available_algorithms,
+                                  SSSPAlgorithm, StreamingAlgorithm,
+                                  algorithm_factory, available_algorithms,
                                   make_algorithm, register_algorithm)
 from repro.core.backend import (EdgeLayout, build_layout, push, push_coo,
                                 resolve_backend, summary_layout)
 from repro.core.engine import (EngineConfig, QueryStats, VeilGraphEngine)
 from repro.core.hits import hits, summarized_hits
 from repro.core.hotset import HotSetStats, select_hot_set
+from repro.core.katz import katz, summarized_katz
 from repro.core.pagerank import (SummaryBuffers, build_summary, pagerank,
                                  summarized_pagerank)
+from repro.core.semiring import (Semiring, available_semirings,
+                                 register_semiring, resolve_semiring)
+from repro.core.traversal import (connected_components, sssp,
+                                  summarized_connected_components,
+                                  summarized_sssp)

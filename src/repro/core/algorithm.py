@@ -7,32 +7,50 @@ study.  This module makes that separation concrete: the engine owns stream
 ingestion, update buffering, hot-set selection and the action policy, while
 everything rank-computation-specific lives behind :class:`StreamingAlgorithm`:
 
-    init_state(graph)            -> state pytree (dict of arrays)
+    init_state(graph)            -> state pytree (dict of arrays, any dtypes
+                                    — declared in ``state_dtypes``)
     exact(state, graph)          -> (state', iterations)        # ground truth
     build_summaries(state, graph, hot, caps) -> (SummaryBuffers, ...)
     summarized(state, graph, summaries)      -> (state', iterations)
-    score_view(state)            -> f32[N_cap]  # drives hot-set Δ + ranking
-    layout_specs                 -> ((weight, reverse), ...)  # cached edge
-                                    layouts the sweeps consume
+    result_view(state)           -> dtype[N_cap]  # the query answer
+    selection_view(state)        -> f32[N_cap]    # drives the hot-set Δ
+                                    policy (defaults to result_view as f32)
+    semiring                     -> the (⊕, ⊗) algebra the sweeps run over
+    layout_specs                 -> ((weight, reverse, semiring), ...) —
+                                    cached edge layouts the sweeps consume
 
 Every sweep runs through the unified propagation primitive in
-:mod:`repro.core.backend`; ``layout_specs`` declares which full-graph
-:class:`~repro.core.backend.EdgeLayout` orientations an algorithm needs so
-the engine can build them once per applied update batch and pass them into
-``exact`` / ``build_summaries`` (the ``layouts`` tuple, same order).  The
-``backend`` keyword selects the implementation (``"pallas"`` MXU kernel vs
-``"segment_sum"`` XLA fallback); ``None`` resolves per device/env.
+:mod:`repro.core.backend`, parameterized by an explicit
+:class:`~repro.core.semiring.Semiring` — ``plus_times`` sum-of-products for
+the ranking family, ``min_plus`` for SSSP relaxations, ``min_min`` label
+propagation over int32 state for connected components.  ``layout_specs``
+declares which full-graph :class:`~repro.core.backend.EdgeLayout`
+orientations/algebras an algorithm needs so the engine can build them once
+per applied update batch and pass them into ``exact`` / ``build_summaries``
+(the ``layouts`` tuple, same order).  The ``backend`` keyword selects the
+implementation (``"pallas"`` MXU/VPU kernels vs ``"segment_sum"`` XLA
+fallback); ``None`` resolves per device/env.
+
+The old single ``score_view`` is split in two: :meth:`result_view` is the
+query answer in the algorithm's own dtype (ranks, distances, int labels)
+while :meth:`selection_view` is the *float* volatility signal the paper's
+Δ-dilution bound consumes (Eqs. 4-5) — ranking algorithms use their scores
+for both, whereas CC/SSSP expose label-churn / distance-delta indicators.
+``score_view`` remains as a deprecated alias of ``result_view``.
 
 Algorithms are **frozen dataclasses** so instances are hashable and can ride
 through ``jax.jit`` as static arguments — the generic fused query step in
 :mod:`repro.core.fused` traces ``build_summaries`` + ``summarized`` inline
 into one XLA program per (algorithm, capacities) pair.
 
-Three algorithms ship in the registry:
+Six algorithms ship in the registry:
 
 - ``pagerank``  — the paper's case study (Gelly-style normalization);
 - ``personalized-pagerank`` — seeded teleport vector, same summarized path;
-- ``hits``      — hubs & authorities via a forward + reverse summary pair.
+- ``hits``      — hubs & authorities via a forward + reverse summary pair;
+- ``katz``      — attenuated-walk centrality (unit weights, β attraction);
+- ``connected-components`` — label-min propagation on ``min_min``/int32;
+- ``sssp``      — single-source shortest paths on ``min_plus``.
 
 Register your own with :func:`register_algorithm` and run it through
 ``veilgraph``'s session front door (:func:`repro.api.session`).
@@ -50,10 +68,18 @@ import jax.numpy as jnp
 
 from repro.core.hits import hits as _hits
 from repro.core.hits import summarized_hits as _summarized_hits
+from repro.core.katz import katz as _katz
+from repro.core.katz import summarized_katz as _summarized_katz
 from repro.core.pagerank import SummaryBuffers
 from repro.core.pagerank import build_summary as _build_summary
 from repro.core.pagerank import pagerank as _pagerank
 from repro.core.pagerank import summarized_pagerank as _summarized_pagerank
+from repro.core.traversal import LABEL_SENTINEL
+from repro.core.traversal import connected_components as _cc
+from repro.core.traversal import sssp as _sssp
+from repro.core.traversal import \
+    summarized_connected_components as _summarized_cc
+from repro.core.traversal import summarized_sssp as _summarized_sssp
 from repro.graph.graph import GraphState
 
 #: Algorithm state is a flat dict of device arrays — a JAX pytree, so the
@@ -84,14 +110,33 @@ class StreamingAlgorithm(abc.ABC):
     #: False opts an algorithm out of the single-XLA-program fused query
     #: path (the engine then runs select/summarize/iterate as separate jits).
     supports_fused: bool = True
-    #: True rescales score_view to mean 1 over active vertices inside the
-    #: hot-set Δ-dilution bound (Eqs. 4-5 are calibrated against
+    #: True rescales selection_view to mean 1 over active vertices inside
+    #: the hot-set Δ-dilution bound (Eqs. 4-5 are calibrated against
     #: PageRank-scale scores; L1-normalized algorithms opt in).
     normalize_selection_scores: bool = False
-    #: full-graph edge layouts the sweeps consume, as (weight, reverse)
-    #: pairs — the engine builds and caches one EdgeLayout per entry (once
-    #: per applied update batch) and passes them as the ``layouts`` tuple.
-    layout_specs: Tuple[Tuple[str, bool], ...] = (("inv_out", False),)
+    #: the (⊕, ⊗) algebra the sweeps run over (registry name in
+    #: :mod:`repro.core.semiring`); the default :meth:`build_summaries`
+    #: bakes ``ek_w``/``b_in`` for it.
+    semiring: str = "plus_times"
+    #: True: bigger result values rank first (scores).  False: smaller
+    #: values rank first (distances, min-labels) — ``QueryResult.top``
+    #: orders accordingly.
+    rank_descending: bool = True
+    #: weight mode of the default single-summary :meth:`build_summaries`
+    #: (``"inv_out"``, ``"unit"`` or ``"length"``).
+    summary_weight: str = "inv_out"
+    #: declared per-key dtypes of the :meth:`init_state` pytree — the
+    #: engine validates them once at state initialization so non-float
+    #: state (e.g. CC's int32 labels) can't silently decay to float.
+    #: Empty (the default) declares nothing: legacy plugins with arbitrary
+    #: state keys construct unchecked.
+    state_dtypes: Dict[str, str] = {}
+    #: full-graph edge layouts the sweeps consume, as
+    #: (weight, reverse, semiring) triples — the engine builds and caches
+    #: one EdgeLayout per entry (once per applied update batch) and passes
+    #: them as the ``layouts`` tuple.  Two-element (weight, reverse)
+    #: entries from the pre-semiring API mean ``plus_times``.
+    layout_specs: Tuple[Tuple, ...] = (("inv_out", False, "plus_times"),)
 
     @abc.abstractmethod
     def init_state(self, graph: GraphState) -> AlgoState:
@@ -123,19 +168,22 @@ class StreamingAlgorithm(abc.ABC):
     ) -> Tuple[SummaryBuffers, ...]:
         """Compacted summary graph(s) the summarized step consumes.
 
-        The default is the paper's single forward big-vertex summary with
-        PageRank edge weights, frozen from :meth:`score_view`.  Algorithms
-        needing different weights or both orientations (HITS) override.
-        ``layouts`` matches :attr:`layout_specs` and accelerates the frozen
-        big-vertex pass.
+        The default is the paper's single forward big-vertex summary over
+        the algorithm's declared :attr:`semiring` and
+        :attr:`summary_weight`, frozen from :meth:`result_view`.
+        Algorithms needing different frozen vectors or both orientations
+        (HITS, connected components) override.  ``layouts`` matches
+        :attr:`layout_specs` and accelerates the frozen big-vertex pass.
         """
         return (
             _build_summary(
                 graph,
-                self.score_view(state),
+                self.result_view(state),
                 hot_mask,
                 hot_node_capacity=hot_node_capacity,
                 hot_edge_capacity=hot_edge_capacity,
+                weight=self.summary_weight,
+                semiring=self.semiring,
                 layout=layouts[0] if layouts else None,
                 backend=backend,
             ),
@@ -152,10 +200,79 @@ class StreamingAlgorithm(abc.ABC):
     ) -> Tuple[AlgoState, jax.Array]:
         """Approximate update restricted to the hot set (§3.1)."""
 
+    def __init_subclass__(cls, **kwargs):
+        """Legacy-plugin dispatch, resolved once at class creation.
+
+        A pre-semiring plugin overrides ``score_view``; the engine now
+        reads ``result_view``.  Whenever a class (re-)defines
+        ``score_view`` *below* the most-derived ``result_view`` in its MRO
+        — a fresh old-style plugin, or a subclass of a shipped algorithm
+        that customizes only ``score_view`` — the override is what the
+        author meant the engine to see, so ``result_view`` is rerouted
+        through it.  Classes defining both at the same level (the new API)
+        are left alone.  Rerouted methods are tagged so the base
+        ``score_view`` alias can skip them when a legacy override chains
+        up via ``super().score_view(...)`` (no mutual recursion).
+        """
+        super().__init_subclass__(**kwargs)
+
+        def defining(name):
+            for klass in cls.__mro__:
+                if name in vars(klass):
+                    return klass
+            return None
+
+        sv, rv = defining("score_view"), defining("result_view")
+        if (sv not in (None, StreamingAlgorithm) and rv is not None
+                and sv is not rv
+                # MRO position, not issubclass: a score_view supplied by a
+                # mixin precedes the algorithm base without subclassing it
+                and cls.__mro__.index(sv) < cls.__mro__.index(rv)):
+            orig = vars(sv)["score_view"]
+
+            def _rerouted(self, state, _orig=orig):
+                return _orig(self, state)
+
+            _rerouted._legacy_reroute = True
+            _rerouted.__doc__ = (
+                f"result_view rerouted through the legacy "
+                f"{sv.__name__}.score_view override.")
+            cls.result_view = _rerouted
+
     @abc.abstractmethod
+    def result_view(self, state: AlgoState) -> jax.Array:
+        """dtype[N_cap] query answer — PageRank/Katz scores, HITS
+        authorities, int32 component labels, f32 distances, …
+
+        Subclasses must override this (or, legacy pre-semiring plugins,
+        ``score_view`` — :meth:`__init_subclass__` reroutes *before*
+        ``__abstractmethods__`` is computed, so old plugins stay
+        instantiable while a class implementing neither view still fails
+        at construction).
+        """
+
+    def selection_view(self, state: AlgoState) -> jax.Array:
+        """f32[N_cap] volatility signal: the v_s term in the hot-set
+        Δ-expansion (Eqs. 4-5).  Ranking algorithms default to their
+        scores; algorithms with non-score state (CC, SSSP) override with
+        churn indicators (recent label flips / distance deltas)."""
+        return self.result_view(state).astype(jnp.float32)
+
     def score_view(self, state: AlgoState) -> jax.Array:
-        """f32[N_cap] score vector: the query answer, and the v_s term in
-        the hot-set Δ-expansion (Eqs. 4-5)."""
+        """Deprecated pre-semiring alias of :meth:`result_view` (the
+        engine's selection now reads :meth:`selection_view` instead).
+
+        Resolves to the first *non-rerouted* ``result_view`` in the MRO so
+        a legacy override calling ``super().score_view(...)`` gets its
+        parent's answer (the pre-split behaviour), not itself back.
+        """
+        for klass in type(self).__mro__:
+            rv = vars(klass).get("result_view")
+            if rv is not None and not getattr(rv, "_legacy_reroute", False):
+                return rv(self, state)
+        raise NotImplementedError(
+            f"{type(self).__name__} implements neither result_view nor the "
+            "legacy score_view")
 
 
 def summaries_overflow(summaries: Tuple[SummaryBuffers, ...]) -> jax.Array:
@@ -190,6 +307,7 @@ class PageRankAlgorithm(StreamingAlgorithm):
     warm_start: bool = False
 
     name = "pagerank"
+    state_dtypes = {"ranks": "float32"}
 
     def init_state(self, graph: GraphState) -> AlgoState:
         init = 1.0 / jnp.maximum(
@@ -223,7 +341,7 @@ class PageRankAlgorithm(StreamingAlgorithm):
         )
         return {"ranks": ranks}, iters
 
-    def score_view(self, state):
+    def result_view(self, state):
         return state["ranks"]
 
 
@@ -252,6 +370,7 @@ class PersonalizedPageRankAlgorithm(StreamingAlgorithm):
 
     name = "personalized-pagerank"
     normalize_selection_scores = True
+    state_dtypes = {"ranks": "float32", "teleport": "float32"}
 
     def __post_init__(self):
         if not self.seeds:
@@ -297,7 +416,7 @@ class PersonalizedPageRankAlgorithm(StreamingAlgorithm):
         )
         return {"ranks": ranks, "teleport": state["teleport"]}, iters
 
-    def score_view(self, state):
+    def result_view(self, state):
         return state["ranks"]
 
 
@@ -310,7 +429,7 @@ class PersonalizedPageRankAlgorithm(StreamingAlgorithm):
 class HITSAlgorithm(StreamingAlgorithm):
     """Kleinberg's HITS with per-iteration L1 normalization.
 
-    State carries both vectors; :meth:`score_view` exposes authorities (the
+    State carries both vectors; :meth:`result_view` exposes authorities (the
     usual query answer — swap for hubs with ``rank_by="hub"``).  The
     summarized path freezes cold contributions in *both* directions, which
     needs the forward and the reverse (transposed) big-vertex summary.
@@ -327,7 +446,9 @@ class HITSAlgorithm(StreamingAlgorithm):
 
     name = "hits"
     normalize_selection_scores = True
-    layout_specs = (("unit", False), ("unit", True))
+    summary_weight = "unit"
+    state_dtypes = {"auth": "float32", "hub": "float32"}
+    layout_specs = (("unit", False, "plus_times"), ("unit", True, "plus_times"))
 
     def __post_init__(self):
         if self.rank_by not in ("auth", "hub"):
@@ -383,8 +504,257 @@ class HITSAlgorithm(StreamingAlgorithm):
         )
         return {"auth": auth, "hub": hub}, iters
 
-    def score_view(self, state):
+    def result_view(self, state):
         return state["auth"] if self.rank_by == "auth" else state["hub"]
+
+
+# ---------------------------------------------------------------------------
+# Katz centrality — attenuated walk counts (plus_times, unit weights)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class KatzAlgorithm(StreamingAlgorithm):
+    """Katz centrality ``c = Σ_k α^k (Aᵀ)^k β·1`` on the five-UDF engine.
+
+    The sweep contracts (and the fixed point exists) only while
+    ``α < 1/σ_max(A)`` — keep ``alpha`` small on hub-heavy graphs.  EXACT
+    actions warm-start from the previous scores by default (same fixed
+    point, fewer iterations); ``warm_start=False`` restores the
+    cold-baseline protocol.
+    """
+
+    alpha: float = 0.05
+    beta: float = 1.0
+    num_iters: int = 30
+    tol: float = 0.0
+    warm_start: bool = True
+
+    name = "katz"
+    normalize_selection_scores = True
+    summary_weight = "unit"
+    state_dtypes = {"katz": "float32"}
+    layout_specs = (("unit", False, "plus_times"),)
+
+    def __post_init__(self):
+        if not 0.0 < self.alpha < 1.0:
+            raise ValueError(f"alpha must be in (0, 1), got {self.alpha}")
+
+    def init_state(self, graph: GraphState) -> AlgoState:
+        return {"katz": jnp.where(graph.node_active, self.beta, 0.0).astype(
+            jnp.float32)}
+
+    def exact(self, state, graph, *, layouts=None, backend=None):
+        c, iters = _katz(
+            graph,
+            state["katz"] if self.warm_start else None,
+            alpha=self.alpha,
+            beta=self.beta,
+            num_iters=self.num_iters,
+            tol=self.tol,
+            layout=layouts[0] if layouts else None,
+            backend=backend,
+        )
+        return {"katz": c}, iters
+
+    def summarized(self, state, graph, summaries, *, backend=None):
+        (summary,) = summaries
+        c, iters = _summarized_katz(
+            summary,
+            state["katz"],
+            alpha=self.alpha,
+            beta=self.beta,
+            num_iters=self.num_iters,
+            tol=self.tol,
+            backend=backend,
+        )
+        return {"katz": c}, iters
+
+    def result_view(self, state):
+        return state["katz"]
+
+
+# ---------------------------------------------------------------------------
+# Connected components — label-min propagation (min_min, int32 state)
+# ---------------------------------------------------------------------------
+
+
+def _finite_churn(new: jax.Array, old: jax.Array) -> jax.Array:
+    """f32 per-vertex change indicator robust to ±∞/sentinel state:
+    |new − old| where both are finite, 1.0 where exactly one is, 0 else."""
+    new_f = new.astype(jnp.float32)
+    old_f = old.astype(jnp.float32)
+    both = jnp.isfinite(new_f) & jnp.isfinite(old_f)
+    return jnp.where(both, jnp.abs(new_f - old_f),
+                     jnp.where(new_f != old_f, 1.0, 0.0))
+
+
+@dataclass(frozen=True)
+class ConnectedComponentsAlgorithm(StreamingAlgorithm):
+    """Weakly-connected components via min-label propagation.
+
+    The first non-float workload on the engine: state is *int32* labels
+    (every vertex converges to the minimum vertex id in its weakly
+    connected component; inactive vertices hold the int32-max sentinel),
+    propagated over the ``min_min`` semiring in both edge orientations.
+    :meth:`selection_view` is the label-*churn* indicator — 1.0 where the
+    last sweep changed a vertex's label — so the Δ-expansion grows the hot
+    set around recently-merged regions rather than around big labels.
+
+    EXACT actions recompute labels from scratch by default (correct under
+    removals); ``warm_start=True`` reuses previous labels, which is exact
+    for the paper's addition-only streams and converges faster.
+    """
+
+    num_iters: int = 30
+    warm_start: bool = False
+
+    name = "connected-components"
+    normalize_selection_scores = True
+    rank_descending = False  # smaller labels first (component min ids)
+    semiring = "min_min"
+    summary_weight = "unit"
+    state_dtypes = {"labels": "int32", "churn": "float32"}
+    layout_specs = (("unit", False, "min_min"), ("unit", True, "min_min"))
+
+    def init_state(self, graph: GraphState) -> AlgoState:
+        ids = jnp.arange(graph.node_capacity, dtype=jnp.int32)
+        return {
+            "labels": jnp.where(graph.node_active, ids, LABEL_SENTINEL),
+            "churn": jnp.zeros((graph.node_capacity,), jnp.float32),
+        }
+
+    def exact(self, state, graph, *, layouts=None, backend=None):
+        labels, iters = _cc(
+            graph,
+            state["labels"] if self.warm_start else None,
+            num_iters=self.num_iters,
+            fwd_layout=layouts[0] if layouts else None,
+            rev_layout=layouts[1] if layouts else None,
+            backend=backend,
+        )
+        return {"labels": labels,
+                "churn": (labels != state["labels"]).astype(jnp.float32)}, \
+            iters
+
+    def build_summaries(
+        self, state, graph, hot_mask, *, hot_node_capacity, hot_edge_capacity,
+        layouts=None, backend=None,
+    ):
+        common = dict(hot_node_capacity=hot_node_capacity,
+                      hot_edge_capacity=hot_edge_capacity,
+                      weight="unit", semiring="min_min", backend=backend)
+        fwd = _build_summary(
+            graph, state["labels"], hot_mask,
+            layout=layouts[0] if layouts else None, **common)
+        rev = _build_summary(
+            graph, state["labels"], hot_mask, reverse=True,
+            layout=layouts[1] if layouts else None, **common)
+        return (fwd, rev)
+
+    def summarized(self, state, graph, summaries, *, backend=None):
+        fwd, rev = summaries
+        labels, iters = _summarized_cc(
+            fwd, rev, state["labels"],
+            num_iters=self.num_iters, backend=backend,
+        )
+        return {"labels": labels,
+                "churn": (labels != state["labels"]).astype(jnp.float32)}, \
+            iters
+
+    def result_view(self, state):
+        return state["labels"]
+
+    def selection_view(self, state):
+        return state["churn"]
+
+
+# ---------------------------------------------------------------------------
+# SSSP — single-source shortest paths (min_plus)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SSSPAlgorithm(StreamingAlgorithm):
+    """Streaming single-source shortest paths (Bellman-Ford on min-plus).
+
+    ``sources`` is a (hashable) tuple of vertex ids whose distances are
+    pinned to 0; unreachable vertices hold +∞.  Edge lengths are the unit
+    hop count (the engine's streamed edges carry no length attribute; bake
+    explicit lengths into a ``weight="length"`` layout for the standalone
+    sweeps in :mod:`repro.core.traversal`).  :meth:`selection_view` is the
+    distance-*delta* indicator of the last sweep, so the Δ-expansion
+    follows shortest-path churn instead of raw distance magnitude.
+
+    EXACT actions recompute from the sources by default (correct under
+    removals); ``warm_start=True`` relaxes from the previous distances,
+    exact for addition-only streams (distances are monotone
+    non-increasing) and typically far fewer iterations.
+    """
+
+    sources: Tuple[int, ...] = (0,)
+    num_iters: int = 30
+    warm_start: bool = False
+
+    name = "sssp"
+    normalize_selection_scores = True
+    rank_descending = False  # nearest vertices first
+    semiring = "min_plus"
+    summary_weight = "length"
+    state_dtypes = {"dist": "float32", "source": "bool",
+                    "delta": "float32"}
+    layout_specs = (("length", False, "min_plus"),)
+
+    def __post_init__(self):
+        if not self.sources:
+            raise ValueError("sssp needs >= 1 source vertex")
+
+    def _source_mask(self, n_cap: int) -> jax.Array:
+        src = jnp.asarray(self.sources, jnp.int32)
+        if int(src.min()) < 0:
+            raise ValueError(f"source {int(src.min())} is negative")
+        if int(src.max()) >= n_cap:
+            raise ValueError(
+                f"source {int(src.max())} >= node_capacity {n_cap}")
+        return jnp.zeros((n_cap,), bool).at[src].set(True)
+
+    def init_state(self, graph: GraphState) -> AlgoState:
+        source = self._source_mask(graph.node_capacity)
+        return {
+            "dist": jnp.where(source, 0.0, jnp.inf).astype(jnp.float32),
+            "source": source,
+            "delta": jnp.zeros((graph.node_capacity,), jnp.float32),
+        }
+
+    def exact(self, state, graph, *, layouts=None, backend=None):
+        dist, iters = _sssp(
+            graph,
+            state["source"],
+            state["dist"] if self.warm_start else None,
+            num_iters=self.num_iters,
+            layout=layouts[0] if layouts else None,
+            backend=backend,
+        )
+        return {"dist": dist, "source": state["source"],
+                "delta": _finite_churn(dist, state["dist"])}, iters
+
+    # build_summaries: the inherited default — one forward summary frozen
+    # from result_view (= dist) over summary_weight/semiring declared above
+
+    def summarized(self, state, graph, summaries, *, backend=None):
+        (summary,) = summaries
+        dist, iters = _summarized_sssp(
+            summary, state["dist"], state["source"],
+            num_iters=self.num_iters, backend=backend,
+        )
+        return {"dist": dist, "source": state["source"],
+                "delta": _finite_churn(dist, state["dist"])}, iters
+
+    def result_view(self, state):
+        return state["dist"]
+
+    def selection_view(self, state):
+        return state["delta"]
 
 
 # ---------------------------------------------------------------------------
@@ -416,6 +786,33 @@ def available_algorithms() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
+def algorithm_factory(name: str) -> Callable[..., StreamingAlgorithm]:
+    """The registered factory for a name or alias, without instantiating —
+    for callers that want to introspect an algorithm's knobs (e.g. its
+    dataclass fields / signature) before constructing it."""
+    try:
+        return _REGISTRY[_ALIASES.get(name, name)]
+    except KeyError:
+        raise KeyError(
+            f"unknown algorithm {name!r}; registered: "
+            f"{', '.join(available_algorithms())}") from None
+
+
+def factory_accepts(factory: Callable, knob: str) -> bool:
+    """True if ``factory``'s signature takes ``knob`` — directly or via
+    ``**kwargs`` (the documented registration pattern).  The single answer
+    to "can this algorithm receive this keyword?", shared by the session
+    builder's legacy-knob forwarding and example drivers."""
+    import inspect
+
+    try:
+        params = inspect.signature(factory).parameters
+    except (TypeError, ValueError):
+        return False
+    return knob in params or any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
+
+
 def make_algorithm(spec, **params) -> StreamingAlgorithm:
     """Resolve ``spec`` into a :class:`StreamingAlgorithm` instance.
 
@@ -429,17 +826,15 @@ def make_algorithm(spec, **params) -> StreamingAlgorithm:
                 "algorithm instance given — pass parameters to its "
                 "constructor instead")
         return spec
-    name = _ALIASES.get(spec, spec)
-    try:
-        factory = _REGISTRY[name]
-    except KeyError:
-        raise KeyError(
-            f"unknown algorithm {spec!r}; registered: "
-            f"{', '.join(available_algorithms())}") from None
-    return factory(**params)
+    return algorithm_factory(spec)(**params)
 
 
 register_algorithm("pagerank", PageRankAlgorithm)
 register_algorithm("personalized-pagerank", PersonalizedPageRankAlgorithm,
                    aliases=("ppr",))
 register_algorithm("hits", HITSAlgorithm)
+register_algorithm("katz", KatzAlgorithm)
+register_algorithm("connected-components", ConnectedComponentsAlgorithm,
+                   aliases=("cc", "wcc"))
+register_algorithm("sssp", SSSPAlgorithm,
+                   aliases=("shortest-paths",))

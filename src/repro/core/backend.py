@@ -1,23 +1,32 @@
 """Unified propagation backend: one ``push`` primitive for every sweep.
 
 Every power sweep in the repo — exact PageRank, summarized PageRank, both
-HITS directions, ``build_summary``'s frozen big-vertex pass and the
+HITS directions, Katz, SSSP relaxations, connected-components label
+propagation, ``build_summary``'s frozen big-vertex pass and the
 algorithm-generic fused query step — is the same primitive applied to a
-different edge layout:
+different edge layout under a different algebra:
 
-    out[v] = Σ over in-edges (u, v) of values[u] · weight(u, v)
+    out[v] = ⊕ over in-edges (u, v) of ( values[u] ⊗ weight(u, v) )
 
-This module owns that primitive and its two implementations:
+The (⊕, ⊗) pair is an explicit :class:`~repro.core.semiring.Semiring`
+(``plus_times`` sum-of-products, ``min_plus`` shortest paths, ``min_min``
+label-min over int32, ``max_times`` widest paths — see
+:mod:`repro.core.semiring`).  This module owns the primitive and its two
+implementations:
 
-- ``"pallas"``  — the destination-tiled one-hot-matmul MXU kernel in
+- ``"pallas"``  — the destination-tiled MXU/VPU kernels in
   :mod:`repro.kernels.spmv.kernel` (Mosaic on TPU, ``interpret`` mode
-  elsewhere), consuming a receiver-sorted edge stream with per-tile ranges;
+  elsewhere), consuming a receiver-sorted edge stream with per-tile
+  ranges: the one-hot matmul for ``sum`` reductions, the tiled
+  masked-reduce variant for ``min``/``max``;
 - ``"segment_sum"`` — :func:`repro.graph.csr.gather_push`, an
-  ``indices_are_sorted`` XLA segment-sum over the same sorted stream.
+  ``indices_are_sorted`` XLA segment-sum/min/max over the same sorted
+  stream.
 
 Both consume an :class:`EdgeLayout`: the receiver-sorted edge stream with
-the per-edge weight baked in (``1/d_out(u)`` for PageRank-style sweeps,
-``1`` for HITS/Katz-style ones).  Sorting is the amortizable cost — layouts
+the per-edge weight baked in, in the semiring's dtype (``1/d_out(u)`` for
+PageRank-style sweeps, the ⊗-identity for ``"unit"`` layouts, per-edge
+lengths for ``"length"`` ones).  Sorting is the amortizable cost — layouts
 are built once per applied update batch (the engine caches them; see
 ``VeilGraphEngine.edge_layouts``), reused across queries, and within one
 query across all ~30 power iterations.
@@ -37,16 +46,23 @@ from __future__ import annotations
 import dataclasses
 import functools
 import os
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.semiring import Semiring, resolve_semiring
 from repro.graph.csr import SortedEdges, gather_push, sort_by_dst
 from repro.graph.graph import GraphState, inv_out_degree
-from repro.kernels.spmv.kernel import CHUNK, TILE_N, spmv_push
+from repro.kernels.spmv.kernel import (CHUNK, TILE_N, spmv_push,
+                                       spmv_reduce_push)
 
 BACKENDS = ("segment_sum", "pallas")
+
+#: weight modes an EdgeLayout can bake: ``inv_out`` = 1/d_out(u) (PageRank
+#: emission; plus_times only), ``unit`` = the semiring's ⊗-identity,
+#: ``length`` = per-edge lengths (default 1) for min_plus-style relaxations.
+WEIGHT_MODES = ("inv_out", "unit", "length")
 
 #: env override for backend selection (read at trace time)
 BACKEND_ENV_VAR = "VEILGRAPH_BACKEND"
@@ -77,8 +93,8 @@ def default_interpret() -> bool:
 
 @functools.partial(
     jax.tree_util.register_dataclass,
-    data_fields=("src", "dst", "weight", "valid", "row_offsets"),
-    meta_fields=("weight_mode", "reverse", "pad_chunk"),
+    data_fields=("src", "dst", "weight", "valid", "row_offsets", "order"),
+    meta_fields=("weight_mode", "reverse", "pad_chunk", "semiring"),
 )
 @dataclasses.dataclass(frozen=True)
 class EdgeLayout:
@@ -88,123 +104,214 @@ class EdgeLayout:
     same sorted order plus the per-edge multiplier, padded by at least one
     kernel chunk so the Pallas kernel's fixed-size chunk loads never run
     past the buffer.  ``dst`` holds ``num_segments`` in padding slots and
-    ``weight`` is 0 there, so both backends ignore padding without
-    branching.
+    ``weight`` the semiring's ⊕-identity there (0 for sum-of-products,
+    ±∞/int extrema for min/max reductions), so both backends ignore
+    padding without branching.
 
     ``row_offsets`` (int32[num_segments + 1]) gives the edge range per
     receiver; per-tile kernel ranges for any tile size derive from it with
     one gather, so one cached layout serves every ``tile_n``.
 
-    ``weight_mode``/``reverse`` record how the layout was built and
-    ``pad_chunk`` how much chunk slack the stream was padded with; they
-    ride through jit as static metadata so consumers can reject a
-    mismatched cached layout at trace time (:func:`require_layout`, the
-    ``chunk`` bound in :func:`push`) instead of silently mis-weighting or
-    reading out of bounds.
+    ``weight_mode``/``reverse``/``semiring`` record how the layout was
+    built and ``pad_chunk`` how much chunk slack the stream was padded
+    with; they ride through jit as static metadata so consumers can reject
+    a mismatched cached layout at trace time (:func:`require_layout`, the
+    semiring check and ``chunk`` bound in :func:`push`) instead of
+    silently mis-weighting, mis-padding, or reading out of bounds.
     """
 
     src: jax.Array          # int32[E_pad] emitting endpoint (sorted order)
     dst: jax.Array          # int32[E_pad] receiving endpoint (sentinel = N)
-    weight: jax.Array       # f32[E_pad]   per-edge multiplier (0 if invalid)
+    weight: jax.Array       # dtype[E_pad] per-edge operand (⊕-id if invalid)
     valid: jax.Array        # bool[E_pad]
     row_offsets: jax.Array  # int32[num_segments + 1]
+    #: original edge slot per sorted position (sentinel = edge_capacity in
+    #: padding) — lets consumers map baked weights back to slot order
+    #: (build_summary recovers per-edge lengths this way).  None for
+    #: summary layouts, whose edge space is already compacted.
+    order: Optional[jax.Array] = None
     weight_mode: str = "inv_out"
     reverse: bool = False
     pad_chunk: int = CHUNK
+    semiring: str = "plus_times"
 
     @property
     def num_segments(self) -> int:
         return self.row_offsets.shape[0] - 1
 
 
-def _pad_stream(src, dst, weight, valid, *, sentinel: int, chunk: int):
-    """Pad the sorted stream to a chunk multiple plus one spare chunk."""
+def _pad_stream(src, dst, weight, valid, *, sentinel: int, chunk: int,
+                zero=0.0):
+    """Pad the sorted stream to a chunk multiple plus one spare chunk;
+    padded weight slots hold ``zero`` (the consuming semiring's
+    ⊕-identity) so they never contribute."""
     e = src.shape[0]
     e_pad = (e // chunk + 2) * chunk
     pad = e_pad - e
     return (
         jnp.pad(src, (0, pad)),
         jnp.pad(dst, (0, pad), constant_values=sentinel),
-        jnp.pad(weight, (0, pad)),
+        jnp.pad(weight, (0, pad), constant_values=zero),
         jnp.pad(valid, (0, pad)),
     )
 
 
-@functools.partial(jax.jit, static_argnames=("weight", "reverse", "chunk"))
+def validate_weight_spec(weight: str, *, reverse: bool = False,
+                         semiring="plus_times", lengths=None,
+                         edge_capacity: Optional[int] = None) -> "Semiring":
+    """Shared trace-time checks for every (weight, reverse, semiring)
+    consumer — :func:`build_layout` and ``build_summary`` must accept
+    exactly the same spec space or layouts and summaries drift apart.
+    Returns the resolved semiring."""
+    s = resolve_semiring(semiring)
+    if weight not in WEIGHT_MODES:
+        raise ValueError(f"unknown weight mode {weight!r}; expected one of "
+                         f"{WEIGHT_MODES}")
+    if reverse and weight == "inv_out":
+        raise ValueError(
+            "reverse=True requires weight='unit' or 'length': inv_out "
+            "would normalize by the out-degree of the receiving endpoint")
+    if weight == "inv_out" and (s.add, s.mul) != ("sum", "times"):
+        raise ValueError(
+            "weight='inv_out' (1/d_out emission) is a sum-of-products "
+            f"notion; semiring {s.name!r} needs 'unit' or 'length' weights")
+    if lengths is not None and weight != "length":
+        raise ValueError("lengths= is only meaningful with weight='length'")
+    if (lengths is not None and edge_capacity is not None
+            and lengths.shape[0] != edge_capacity):
+        # a shorter array would silently clamp-gather its last element into
+        # every higher edge slot (streamed edges land beyond the initial
+        # edge list) — fail loudly at trace time instead
+        raise ValueError(
+            f"lengths must cover every edge slot: got shape "
+            f"{lengths.shape}, edge_capacity={edge_capacity}")
+    return s
+
+
+@functools.partial(
+    jax.jit, static_argnames=("weight", "reverse", "chunk", "semiring"))
 def build_layout(
     state: GraphState,
     *,
     weight: str = "inv_out",
     reverse: bool = False,
     chunk: int = CHUNK,
+    semiring: str = "plus_times",
+    lengths: Optional[jax.Array] = None,
 ) -> EdgeLayout:
     """Full-graph propagation layout, sorted once per call.
 
-    ``weight="inv_out"`` bakes ``1/d_out(u)`` (PageRank-style emission),
-    ``"unit"`` bakes 1 (HITS/Katz).  ``reverse=True`` builds the transposed
-    layout (receivers are original sources — the HITS hub direction);
-    ``"inv_out"`` is only meaningful in the forward orientation.
+    ``weight`` picks the baked per-edge ⊗-operand:
+
+    - ``"inv_out"`` — ``1/d_out(u)`` (PageRank-style emission; only
+      meaningful under ``plus_times`` and the forward orientation);
+    - ``"unit"``    — the semiring's ⊗-identity (1 for sum-of-products —
+      HITS/Katz — but e.g. +∞ for ``min_min`` so labels pass through
+      unchanged);
+    - ``"length"``  — per-edge lengths for ``min_plus``-style relaxations:
+      ``lengths`` (dtype[E_cap], indexed by edge slot) if given, else 1
+      per edge (hop counts).
+
+    ``reverse=True`` builds the transposed layout (receivers are original
+    sources — the HITS hub direction / CC's symmetric pass).  Invalid and
+    padding slots bake the semiring's ⊕-identity so they never contribute.
 
     Degrees are baked into ``weight``, so a layout is valid exactly until
     the next applied update batch — the engine invalidates its cache then.
     """
-    if reverse and weight == "inv_out":
-        raise ValueError(
-            "build_layout(reverse=True) requires weight='unit': inv_out "
-            "would normalize by the out-degree of the receiving endpoint")
-    if weight not in ("inv_out", "unit"):
-        raise ValueError(f"unknown weight mode {weight!r}")
+    s = validate_weight_spec(weight, reverse=reverse, semiring=semiring,
+                             lengths=lengths,
+                             edge_capacity=state.edge_capacity)
     se = sort_by_dst(state, reverse=reverse)
+    dtype = jnp.dtype(s.dtype)
+    zero = jnp.asarray(s.zero, dtype)
     if weight == "inv_out":
         w = jnp.where(se.valid, inv_out_degree(state)[se.src], 0.0)
-    else:
-        w = jnp.where(se.valid, 1.0, 0.0)
+    elif weight == "unit":
+        w = jnp.where(se.valid, jnp.asarray(s.one, dtype), zero)
+    else:  # "length"
+        per_edge = (jnp.ones((state.edge_capacity,), dtype)
+                    if lengths is None else lengths.astype(dtype))
+        w = jnp.where(se.valid, per_edge[se.order], zero)
     src, dst, w, valid = _pad_stream(
         se.src, se.dst, w, se.valid,
-        sentinel=state.node_capacity, chunk=chunk)
-    return EdgeLayout(src, dst, w, valid, se.row_offsets,
-                      weight_mode=weight, reverse=reverse, pad_chunk=chunk)
+        sentinel=state.node_capacity, chunk=chunk, zero=s.zero)
+    order = jnp.pad(se.order, (0, src.shape[0] - se.order.shape[0]),
+                    constant_values=state.edge_capacity)
+    return EdgeLayout(src, dst, w, valid, se.row_offsets, order,
+                      weight_mode=weight, reverse=reverse, pad_chunk=chunk,
+                      semiring=s.name)
 
 
-def summary_layout(summary, *, chunk: int = CHUNK) -> EdgeLayout:
+def summary_layout(summary, *, chunk: int = CHUNK,
+                   semiring: str = "plus_times") -> EdgeLayout:
     """Propagation layout over a summary's compacted, pre-sorted E_K buffer.
 
     :func:`repro.core.pagerank.build_summary` already emits E_K sorted by
     local destination with ``ek_row_offsets``; this only derives validity
     (sorted buffers keep valid edges first) and pads for the kernel.
-    Traced inline — call it outside the power loop so padding happens once
-    per query, not once per iteration.
+    ``semiring`` must match the one the summary's ``ek_w``/``b_in`` were
+    baked for (checked at trace time against the summary's recorded
+    metadata — a ``plus_times`` reduce over +∞-baked min-semiring buffers
+    would silently produce NaNs).  Traced inline — call it outside the
+    power loop so padding happens once per query, not once per iteration.
     """
+    s = resolve_semiring(semiring)
+    baked = getattr(summary, "semiring", None)
+    if baked is not None and baked != s.name:
+        raise ValueError(
+            f"summary_layout(semiring={s.name!r}) over a summary baked for "
+            f"{baked!r}; rebuild the summary for this semiring")
     k_cap = summary.hot_ids.shape[0]
     h_cap = summary.ek_src.shape[0]
     valid = jnp.arange(h_cap, dtype=jnp.int32) < jnp.minimum(
         summary.num_ek, h_cap)
     src, dst, w, valid = _pad_stream(
         summary.ek_src, summary.ek_dst, summary.ek_w, valid,
-        sentinel=k_cap, chunk=chunk)
-    return EdgeLayout(src, dst, w, valid, summary.ek_row_offsets,
-                      weight_mode="summary", pad_chunk=chunk)
+        sentinel=k_cap, chunk=chunk, zero=s.zero)
+    return EdgeLayout(src, dst, w, valid, summary.ek_row_offsets, None,
+                      weight_mode="summary", pad_chunk=chunk,
+                      semiring=s.name)
 
 
 def require_layout(layout: Optional[EdgeLayout], *, weight: str,
-                   reverse: bool, who: str) -> None:
-    """Trace-time guard: a cached layout must match the weighting and
-    orientation the sweep was built for, else its baked weights silently
-    mis-weight the propagation (e.g. an algorithm overriding
-    ``layout_specs`` without overriding the consuming method).  ``None``
-    passes — sweeps fall back to building/unsorted paths."""
+                   reverse: bool, who: str,
+                   semiring: str = "plus_times") -> None:
+    """Trace-time guard: a cached layout must match the weighting,
+    orientation and semiring the sweep was built for, else its baked
+    weights silently mis-weight the propagation (e.g. an algorithm
+    overriding ``layout_specs`` without overriding the consuming method).
+    ``None`` passes — sweeps fall back to building/unsorted paths."""
+    want_s = resolve_semiring(semiring).name
     if layout is not None and (layout.weight_mode != weight
-                               or layout.reverse != reverse):
+                               or layout.reverse != reverse
+                               or layout.semiring != want_s):
         raise ValueError(
             f"{who} needs a layout built with (weight={weight!r}, "
-            f"reverse={reverse}); got (weight={layout.weight_mode!r}, "
-            f"reverse={layout.reverse})")
+            f"reverse={reverse}, semiring={want_s!r}); got "
+            f"(weight={layout.weight_mode!r}, reverse={layout.reverse}, "
+            f"semiring={layout.semiring!r})")
+
+
+def normalize_layout_spec(spec) -> tuple:
+    """``(weight, reverse[, semiring])`` → ``(weight, reverse, semiring)``.
+
+    ``StreamingAlgorithm.layout_specs`` entries written before the semiring
+    API carry no third element; they mean ``plus_times``.
+    """
+    if len(spec) == 2:
+        return (spec[0], spec[1], "plus_times")
+    if len(spec) != 3:
+        raise ValueError(
+            f"layout spec must be (weight, reverse[, semiring]); got {spec!r}")
+    return tuple(spec)
 
 
 def push(
     values: jax.Array,
     layout: EdgeLayout,
     *,
+    semiring: Union[str, Semiring] = "plus_times",
     backend: Optional[str] = None,
     mask: Optional[jax.Array] = None,
     tile_n: int = TILE_N,
@@ -212,20 +319,36 @@ def push(
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """The shared propagation primitive:
-    ``out[v] = Σ_{(u,v)} values[u] · layout.weight[(u,v)]``.
+    ``out[v] = ⊕_{(u,v)} values[u] ⊗ layout.weight[(u,v)]``.
+
+    ``semiring`` names the (⊕, ⊗) pair (registry name or
+    :class:`~repro.core.semiring.Semiring`); it must match the semiring the
+    layout was built for — the baked weights and padding values are
+    algebra-specific, so a mismatch fails at trace time rather than
+    silently corrupting the reduce.  ``plus_times`` keeps the one-hot
+    matmul MXU fast path; ``min``/``max`` reductions run the tiled
+    masked-reduce kernel variant (or XLA segment-min/max on the
+    ``segment_sum`` backend).
 
     ``values`` lives in the layout's *node* space (global ids for full-graph
     layouts, local hot ids for summary layouts); the result has
-    ``layout.num_segments`` entries.  ``mask`` optionally filters edges in
-    the layout's sorted order (e.g. the E_B selection in the big-vertex
-    pass).  Traced inline — call from inside jitted sweeps; ``backend`` must
-    be a Python string (or None) at trace time.
+    ``layout.num_segments`` entries.  Receivers with no (unmasked) in-edge
+    get the semiring's ⊕-identity (0 / +∞ / −∞).  ``mask`` optionally
+    filters edges in the layout's sorted order (e.g. the E_B selection in
+    the big-vertex pass).  Traced inline — call from inside jitted sweeps;
+    ``backend``/``semiring`` must be Python values at trace time.
     """
+    s = resolve_semiring(semiring)
+    if layout.semiring != s.name:
+        raise ValueError(
+            f"push(semiring={s.name!r}) over a layout built for "
+            f"{layout.semiring!r}; rebuild the layout for this semiring")
     backend = resolve_backend(backend)
     num_segments = layout.num_segments
     if backend == "segment_sum":
         return gather_push(
-            layout, values, num_segments, weight=layout.weight, mask=mask)
+            layout, values, num_segments, weight=layout.weight, mask=mask,
+            semiring=s)
 
     if chunk > layout.pad_chunk:
         # kernel chunk loads past [start, end) stay inside the buffer only
@@ -235,19 +358,39 @@ def push(
             f"{layout.pad_chunk}; rebuild the layout with chunk>={chunk}")
 
     # pallas: gather contributions outside the kernel (XLA gathers are
-    # efficient on TPU), then one-hot-matmul accumulate per output tile
-    contrib = values[layout.src] * layout.weight
-    if mask is not None:
-        contrib = jnp.where(mask, contrib, 0.0)
+    # efficient on TPU), then accumulate per output tile — one-hot matmul
+    # for sum reductions, masked min/max reduce otherwise
     num_tiles = -(-num_segments // tile_n)
     bounds = jnp.minimum(
         jnp.arange(num_tiles + 1, dtype=jnp.int32) * tile_n, num_segments)
     tile_start = layout.row_offsets[bounds]
     if interpret is None:
         interpret = default_interpret()
-    out = spmv_push(
-        contrib.astype(jnp.float32), layout.dst, tile_start,
-        num_tiles=num_tiles, tile_n=tile_n, chunk=chunk, interpret=interpret)
+    if s.add == "sum":
+        if jnp.dtype(s.dtype) != jnp.float32:
+            # the one-hot matmul accumulates on the f32 MXU — a silent cast
+            # would break dtype/exactness parity with the segment backend
+            # (e.g. int32 path counts losing exactness above 2^24)
+            raise NotImplementedError(
+                f"the pallas sum-reduce is the f32 one-hot-matmul MXU path; "
+                f"semiring {s.name!r} ({s.dtype}) needs "
+                f"backend='segment_sum'")
+        contrib = s.combine(values[layout.src], layout.weight)
+        if mask is not None:
+            contrib = jnp.where(mask, contrib, 0.0)
+        out = spmv_push(
+            contrib.astype(jnp.float32), layout.dst, tile_start,
+            num_tiles=num_tiles, tile_n=tile_n, chunk=chunk,
+            interpret=interpret)
+    else:
+        dtype = jnp.dtype(s.dtype)
+        zero = jnp.asarray(s.zero, dtype)
+        contrib = s.combine(values.astype(dtype)[layout.src], layout.weight)
+        keep = layout.valid if mask is None else (layout.valid & mask)
+        contrib = jnp.where(keep, contrib, zero)
+        out = spmv_reduce_push(
+            contrib, layout.dst, tile_start, num_tiles=num_tiles,
+            op=s.add, tile_n=tile_n, chunk=chunk, interpret=interpret)
     return out[:num_segments]
 
 
@@ -259,32 +402,41 @@ def push_coo(
     *,
     weight: Optional[jax.Array] = None,
     mask: Optional[jax.Array] = None,
+    semiring: Union[str, Semiring] = "plus_times",
 ) -> jax.Array:
     """Unsorted-COO fallback for callers with no layout at hand.
 
-    A plain XLA segment-sum — today's cost model when no cached layout
-    exists (e.g. the sharded dry-run lowering, where a pod-scale argsort
-    would defeat GSPMD's edge sharding).  Prefer :func:`push` with a cached
-    layout everywhere else.
+    A plain XLA segment-sum/min/max — today's cost model when no cached
+    layout exists (e.g. the sharded dry-run lowering, where a pod-scale
+    argsort would defeat GSPMD's edge sharding).  ``weight`` is the raw
+    ⊗-operand per edge in the caller's (unsorted) edge order; masked edges
+    contribute the semiring's ⊕-identity.  Prefer :func:`push` with a
+    cached layout everywhere else.
     """
+    s = resolve_semiring(semiring)
     contrib = values[src]
     if weight is not None:
-        contrib = contrib * weight
+        contrib = s.combine(contrib, weight)
     if mask is not None:
-        contrib = jnp.where(mask, contrib, 0.0)
-    return jax.ops.segment_sum(contrib, dst, num_segments=num_segments)
+        contrib = jnp.where(mask, contrib, jnp.asarray(s.zero, contrib.dtype))
+    return s.segment_reduce(contrib, dst, num_segments=num_segments)
 
 
 __all__ = [
     "BACKENDS",
     "BACKEND_ENV_VAR",
+    "WEIGHT_MODES",
     "EdgeLayout",
+    "Semiring",
     "SortedEdges",
     "build_layout",
     "default_interpret",
+    "normalize_layout_spec",
+    "validate_weight_spec",
     "push",
     "push_coo",
     "require_layout",
     "resolve_backend",
+    "resolve_semiring",
     "summary_layout",
 ]

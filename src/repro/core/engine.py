@@ -155,7 +155,7 @@ class VeilGraphEngine:
         self._on_stop = on_stop
 
         self.state = G.empty(config.node_capacity, config.edge_capacity)
-        self.algo_state: AlgoState = self.algorithm.init_state(self.state)
+        self.algo_state: AlgoState = self._init_algo_state()
         # amortized edge-layout cache: sorted once per applied update batch,
         # reused across queries and by every sweep in between
         self._edge_layouts: Optional[Tuple[B.EdgeLayout, ...]] = None
@@ -176,8 +176,26 @@ class VeilGraphEngine:
 
     @property
     def ranks(self) -> jax.Array:
-        """The algorithm's score vector (legacy alias: PageRank's ranks)."""
-        return self.algorithm.score_view(self.algo_state)
+        """The algorithm's result vector (legacy alias: PageRank's ranks).
+        Any dtype — f32 scores, f32 distances, int32 component labels."""
+        return self.algorithm.result_view(self.algo_state)
+
+    def _init_algo_state(self) -> AlgoState:
+        """init_state + one-time validation against the algorithm's
+        declared ``state_dtypes`` (so e.g. an int32 label vector can't
+        silently decay to float inside a custom plugin)."""
+        state = self.algorithm.init_state(self.state)
+        for key, want in self.algorithm.state_dtypes.items():
+            if key not in state:
+                raise ValueError(
+                    f"{self.algorithm.name}.init_state missing declared "
+                    f"state key {key!r}")
+            got = jnp.asarray(state[key]).dtype
+            if got != jnp.dtype(want):
+                raise ValueError(
+                    f"{self.algorithm.name} state {key!r} declared "
+                    f"{want} but init_state produced {got}")
+        return state
 
     # ---- lifecycle -------------------------------------------------------
     def start(self, init_src: np.ndarray, init_dst: np.ndarray) -> QueryStats:
@@ -189,7 +207,7 @@ class VeilGraphEngine:
             init_src, init_dst, self.config.node_capacity, self.config.edge_capacity
         )
         self._invalidate_layouts()
-        self.algo_state = self.algorithm.init_state(self.state)
+        self.algo_state = self._init_algo_state()
         t0 = time.perf_counter()
         self.algo_state, iters = self.algorithm.exact(
             self.algo_state, self.state,
@@ -216,10 +234,19 @@ class VeilGraphEngine:
             self._on_stop(self)
 
     # ---- stream ingestion --------------------------------------------------
+    @staticmethod
+    def _check_shapes(src: np.ndarray, dst: np.ndarray):
+        # mismatched shapes would broadcast or truncate inside the jitted
+        # scatters — fail loudly at ingestion
+        if src.ndim != 1 or dst.ndim != 1 or src.shape != dst.shape:
+            raise ValueError(
+                f"src/dst must be 1-D arrays of equal length; got shapes "
+                f"{src.shape} and {dst.shape}")
+
     def _check_ids(self, src: np.ndarray, dst: np.ndarray):
         # out-of-range ids would silently clamp/drop inside the jitted
-        # scatters and corrupt neighbouring vertices' results — fail loudly
-        # at ingestion instead
+        # scatters and corrupt neighbouring vertices' results
+        self._check_shapes(src, dst)
         if src.size == 0:
             return
         lo = min(int(src.min()), int(dst.min()))
@@ -243,8 +270,10 @@ class VeilGraphEngine:
         Removals are buffered and resolved to buffer slots at apply time; a
         removal that matches no live slot counts as *requested* but never as
         *resolved* in the query stats."""
-        self._pending_removals.append(
-            (np.asarray(src, np.int32), np.asarray(dst, np.int32)))
+        src = np.asarray(src, np.int32)
+        dst = np.asarray(dst, np.int32)
+        self._check_shapes(src, dst)
+        self._pending_removals.append((src, dst))
         self._pending_count += len(src)
         self._pending_removal_count += len(src)
 
@@ -258,8 +287,9 @@ class VeilGraphEngine:
         once per applied update batch (graph mutations invalidate them)."""
         if self._edge_layouts is None:
             self._edge_layouts = tuple(
-                B.build_layout(self.state, weight=w, reverse=rev)
-                for (w, rev) in self.algorithm.layout_specs
+                B.build_layout(self.state, weight=w, reverse=rev, semiring=s)
+                for (w, rev, s) in map(B.normalize_layout_spec,
+                                       self.algorithm.layout_specs)
             )
             self.layout_builds += 1
         return self._edge_layouts
@@ -416,7 +446,7 @@ class VeilGraphEngine:
             hot, hstats = select_hot_set(
                 self.state,
                 self.deg_prev,
-                self.algorithm.score_view(self.algo_state),
+                self.algorithm.selection_view(self.algo_state),
                 jnp.float32(cfg.r),
                 jnp.float32(cfg.delta),
                 active_prev=self.active_prev,

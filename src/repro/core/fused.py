@@ -143,7 +143,7 @@ def fused_query_step(
     """One summarized query for *any* :class:`StreamingAlgorithm`.
 
     ``algo`` is a frozen (hashable) algorithm instance riding through jit as
-    a static argument, so its ``score_view`` / ``build_summaries`` /
+    a static argument, so its ``selection_view`` / ``build_summaries`` /
     ``summarized`` trace inline: selection, summary construction and the
     restricted power sweep compile to a single XLA program per
     (algorithm, capacities) pair — the PageRank-specific
@@ -162,7 +162,7 @@ def fused_query_step(
     """
     from repro.core.algorithm import summaries_overflow
 
-    scores = algo.score_view(algo_state)
+    scores = algo.selection_view(algo_state)
     hot, hstats = select_hot_set(
         state, deg_prev, scores, r, delta,
         active_prev=active_prev, n=n, delta_hop_cap=delta_hop_cap,

@@ -12,9 +12,10 @@ with L1 normalization over the active vertex set each half-iteration, which
 keeps 30-iteration power sweeps inside f32 range.
 
 Both directions run through the unified :func:`repro.core.backend.push`
-primitive: the authority update over a forward (dst-sorted) unit-weight
-layout, the hub update over a reverse (src-sorted) one — on the pallas
-backend each half-iteration is one destination-tiled MXU kernel call.
+primitive on the ``plus_times`` semiring (unit weights are its ⊗-identity,
+1): the authority update over a forward (dst-sorted) layout, the hub update
+over a reverse (src-sorted) one — on the pallas backend each half-iteration
+is one destination-tiled one-hot-matmul MXU kernel call.
 
 The summarized version runs both updates only for vertices in the hot set K,
 against *two* compacted summaries built by the generalized

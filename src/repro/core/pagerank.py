@@ -28,8 +28,9 @@ kernel call with the sort amortized into summary construction.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -180,14 +181,24 @@ def compact_indices(mask: jax.Array, size: int, *, rows: int = 64) -> jax.Array:
     )
 
 
-class SummaryBuffers(NamedTuple):
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("hot_ids", "num_hot", "ek_src", "ek_dst", "ek_w",
+                 "ek_row_offsets", "num_ek", "b_in", "num_eb", "overflow"),
+    meta_fields=("weight_mode", "semiring"),
+)
+@dataclasses.dataclass(frozen=True)
+class SummaryBuffers:
     """Compacted summary graph G = (K ∪ {B}, E_K ∪ E_B) — static capacities.
 
     ``hot_ids[i]``   — global id of the i-th hot vertex (i < num_hot)
     ``ek_src/dst``   — *local* endpoints of E_K edges, **sorted by local
                        destination** (invalid slots hold the ``K_cap``
                        sentinel destination and sort last)
-    ``ek_w``         — val((u,v)) = 1/d_out(u) at summary-build time
+    ``ek_w``         — val((u,v)) at summary-build time, in the consuming
+                       semiring's dtype (1/d_out(u) for the paper's
+                       PageRank summaries; the ⊗-identity for ``"unit"``;
+                       per-edge lengths for ``"length"``)
     ``ek_row_offsets`` — int32[K_cap + 1] edge range per local destination
                        over the sorted buffer (the summarized sweep's
                        kernel tile ranges derive from it)
@@ -195,24 +206,32 @@ class SummaryBuffers(NamedTuple):
                        b_in[z] = Σ_{(w,z): w∉K} rank(w)/d_out(w)
     ``overflow``     — True if |K| or |E_K| exceeded a capacity; the caller
                        must fall back to exact recomputation.
+    ``weight_mode``/``semiring`` — static metadata recording how
+                       ``ek_w``/``b_in`` were baked, so
+                       :func:`repro.core.backend.summary_layout` can reject
+                       a consumer running the wrong algebra at trace time
+                       (a ``plus_times`` sweep over +∞-baked ``min_plus``
+                       buffers would silently produce NaNs).
     """
 
     hot_ids: jax.Array   # int32[K_cap]
     num_hot: jax.Array   # int32
     ek_src: jax.Array    # int32[H_cap] (local ids, dst-sorted)
     ek_dst: jax.Array    # int32[H_cap] (local ids, sorted; K_cap = padding)
-    ek_w: jax.Array      # f32[H_cap]
+    ek_w: jax.Array      # dtype[H_cap] (the consuming semiring's dtype)
     ek_row_offsets: jax.Array  # int32[K_cap + 1]
     num_ek: jax.Array    # int32
-    b_in: jax.Array      # f32[K_cap]
+    b_in: jax.Array      # dtype[K_cap]
     num_eb: jax.Array    # int32  (size of E_B, for the paper's edge-ratio stat)
     overflow: jax.Array  # bool
+    weight_mode: str = "inv_out"
+    semiring: str = "plus_times"
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("hot_node_capacity", "hot_edge_capacity", "weight",
-                     "reverse", "backend"),
+                     "reverse", "backend", "semiring"),
 )
 def build_summary(
     state: GraphState,
@@ -225,40 +244,60 @@ def build_summary(
     reverse: bool = False,
     layout: Optional[B.EdgeLayout] = None,
     backend: Optional[str] = None,
+    semiring: str = "plus_times",
+    lengths: Optional[jax.Array] = None,
 ) -> SummaryBuffers:
     """Construct the big-vertex summary (§3.1) into bounded buffers.
 
     Generalized beyond PageRank so other :class:`StreamingAlgorithm` plugins
     can reuse the same compaction machinery:
 
-    - ``weight``: ``"inv_out"`` (PageRank-style ``val((u,v)) = 1/d_out(u)``)
-      or ``"unit"`` (unweighted propagation, e.g. HITS / Katz).
+    - ``weight``: ``"inv_out"`` (PageRank-style ``val((u,v)) = 1/d_out(u)``),
+      ``"unit"`` (the semiring's ⊗-identity — HITS / Katz / CC label-min),
+      or ``"length"`` (per-edge lengths for SSSP-style relaxations).
+      Length resolution: a passed ``layout``'s baked lengths win (mapped
+      back to slot order through ``layout.order``, so E_K and the ``b_in``
+      boundary can never disagree), else the explicit ``lengths`` array
+      (dtype[E_cap], indexed by original edge slot), else 1 per edge.
     - ``reverse``: build the summary over the *transposed* edge set — the
       emitting endpoint is the original ``dst``.  ``b_in[z]`` then freezes
       the contribution of non-hot vertices reached by z's *out*-edges (the
-      hub-update direction in HITS).  ``weight="inv_out"`` is only
-      meaningful in the forward orientation.
+      hub-update direction in HITS, the symmetric pass in CC).
+      ``weight="inv_out"`` is only meaningful in the forward orientation.
     - ``layout``: optional cached full-graph edge layout **matching this
-      summary's** ``weight``/``reverse`` (the engine passes one per
-      ``StreamingAlgorithm.layout_specs`` entry); the frozen big-vertex
-      pass then runs through the sorted :func:`repro.core.backend.push`
-      instead of an unsorted segment-sum.
+      summary's** ``weight``/``reverse``/``semiring`` (the engine passes
+      one per ``StreamingAlgorithm.layout_specs`` entry); the frozen
+      big-vertex pass then runs through the sorted
+      :func:`repro.core.backend.push` instead of an unsorted segment reduce.
+    - ``semiring``: the (⊕, ⊗) algebra of the consuming summarized sweep
+      (:mod:`repro.core.semiring`).  ``ek_w`` and ``b_in`` take the
+      semiring's dtype, invalid slots its ⊕-identity, and the frozen
+      big-vertex pass ⊕-reduces cold contributions (a *min* over frozen
+      cold distances/labels for ``min_plus``/``min_min``, the paper's sum
+      for ``plus_times``).
 
-    ``ranks_prev`` is whatever score vector the frozen big-vertex
+    ``ranks_prev`` is whatever state vector the frozen big-vertex
     contribution should be computed from (previous PageRank ranks, previous
-    hub scores, …).
+    hub scores, previous distances/labels, …).
     """
-    if reverse and weight == "inv_out":
-        raise ValueError(
-            "build_summary(reverse=True) requires weight='unit': inv_out "
-            "would normalize by the out-degree of the *receiving* endpoint")
+    s = B.validate_weight_spec(weight, reverse=reverse, semiring=semiring,
+                               lengths=lengths,
+                               edge_capacity=state.edge_capacity)
     B.require_layout(layout, weight=weight, reverse=reverse,
-                     who="build_summary")
+                     who="build_summary", semiring=s)
     n_cap = state.node_capacity
     k_cap = hot_node_capacity
     h_cap = hot_edge_capacity
     mask = state.edge_mask()
     inv_deg = inv_out_degree(state)
+    w_dtype = jnp.dtype(s.dtype)
+    s_zero = jnp.asarray(s.zero, w_dtype)
+    if weight == "length" and layout is not None and layout.order is not None:
+        # the layout's baked lengths are the single source of truth: map
+        # them back to edge-slot order so E_K cannot silently diverge from
+        # the b_in boundary pass (e.g. hop counts vs real lengths)
+        lengths = jnp.full((state.edge_capacity,), s_zero).at[
+            layout.order].set(layout.weight, mode="drop")
 
     e_src, e_dst = (state.dst, state.src) if reverse else (state.src, state.dst)
     src_hot = hot_mask[e_src]
@@ -283,18 +322,25 @@ def build_summary(
     )
 
     # ---- frozen big-vertex contribution (computed once per query) -------
-    # b_in_global[z] = Σ_{(w,z) ∈ E_B} rank_prev(w) · val(w)
+    # b_in_global[z] = ⊕_{(w,z) ∈ E_B} rank_prev(w) ⊗ val(w)
     # one O(E) push; with a cached layout the E_B selection becomes a mask
-    # over the sorted stream and the sum reuses the amortized edge sort
+    # over the sorted stream and the reduce reuses the amortized edge sort
     if layout is None:
-        emit = ranks_prev * inv_deg if weight == "inv_out" else ranks_prev
-        b_in_global = B.push_coo(emit, e_src, e_dst, n_cap, mask=eb_mask)
+        if weight == "inv_out":
+            coo_w = inv_deg[e_src]
+        elif weight == "length":
+            coo_w = (jnp.ones_like(e_src, dtype=w_dtype) if lengths is None
+                     else lengths.astype(w_dtype))
+        else:  # "unit": ⊗-identity — skip the combine entirely
+            coo_w = None
+        b_in_global = B.push_coo(ranks_prev, e_src, e_dst, n_cap,
+                                 weight=coo_w, mask=eb_mask, semiring=s)
     else:
         eb_mask_s = (~hot_mask[layout.src]) & hot_mask[
             jnp.minimum(layout.dst, n_cap - 1)]
         b_in_global = B.push(ranks_prev, layout, backend=backend,
-                             mask=eb_mask_s)
-    b_in = jnp.where(local_valid, b_in_global[hot_ids], 0.0)
+                             mask=eb_mask_s, semiring=s)
+    b_in = jnp.where(local_valid, b_in_global[hot_ids], s_zero)
 
     # ---- compact E_K into the bounded buffer ----------------------------
     ek_idx = compact_indices(ek_mask, h_cap)
@@ -305,8 +351,15 @@ def build_summary(
     # discarded out-edges still count in the emitting degree).
     if weight == "inv_out":
         ek_w = jnp.where(ek_valid, inv_deg[gsrc], 0.0)
-    else:
-        ek_w = jnp.where(ek_valid, 1.0, 0.0)
+    elif weight == "length":
+        # ek_idx holds original edge slots, so explicit lengths gather
+        # directly (clipped gathers on padding slots are masked by ek_valid)
+        per_edge = (jnp.asarray(1, w_dtype) if lengths is None
+                    else lengths.astype(w_dtype)[jnp.minimum(
+                        ek_idx, lengths.shape[0] - 1)])
+        ek_w = jnp.where(ek_valid, per_edge, s_zero)
+    else:  # "unit": the semiring's ⊗-identity
+        ek_w = jnp.where(ek_valid, jnp.asarray(s.one, w_dtype), s_zero)
     ek_src = jnp.where(ek_valid, local_of[gsrc], 0)
     ek_dst = jnp.where(ek_valid, local_of[gdst], 0)
 
@@ -332,6 +385,8 @@ def build_summary(
         b_in=b_in,
         num_eb=num_eb,
         overflow=overflow,
+        weight_mode=weight,
+        semiring=s.name,
     )
 
 

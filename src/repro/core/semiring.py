@@ -1,0 +1,185 @@
+"""The algebra behind every propagation sweep: a frozen ``Semiring`` spec.
+
+Every sweep in the repo is one primitive applied per iteration,
+
+    out[v] = ⊕ over in-edges (u, v) of ( values[u] ⊗ weight(u, v) )
+
+and until this module existed the primitive was hard-wired to the
+``(+, ·)`` semiring over float32 — which is exactly why PageRank/HITS/Katz
+ran through the engine while connected components (needs integer label
+state) and SSSP-style relaxations (need a min-reduce) could not.  A
+:class:`Semiring` names the pair of operations, their identities, and the
+element dtype; :func:`repro.core.backend.push` dispatches on it:
+
+=============  =====  =====  ========  =================================
+name           ⊕      ⊗      dtype     workload
+=============  =====  =====  ========  =================================
+``plus_times`` sum    ×      float32   PageRank, HITS, Katz (the paper's
+                                       sum-of-products; MXU fast path)
+``min_plus``   min    \\+     float32   SSSP / shortest-path relaxation
+``min_min``    min    min    int32     connected components (label-min:
+                                       ⊗'s identity is +∞, so unit
+                                       weights pass labels through)
+``max_times``  max    ×      float32   widest/most-reliable-path sweeps
+                                       over multiplicative reliabilities
+=============  =====  =====  ========  =================================
+
+Identities are derived, not stored: ``zero`` is ⊕'s identity (0 for sum,
++∞ for min, −∞ for max — the value padding/masked edges contribute) and
+``one`` is ⊗'s identity (1 for ×, 0 for +, +∞ for min — the value a
+``weight="unit"`` edge layout bakes).  For integer dtypes ±∞ means the
+dtype's extrema.  Instances are frozen/hashable so they ride through
+``jax.jit`` as static arguments, and every ``semiring=`` knob accepts the
+registry name or an instance (:func:`resolve_semiring`).
+
+Register custom semirings with :func:`register_semiring` — e.g. a
+``max_min`` bottleneck-capacity semiring — and they become usable by every
+backend, sweep, and :class:`~repro.core.algorithm.StreamingAlgorithm`.
+One backend caveat: ``sum`` reductions on the pallas backend run the f32
+one-hot-matmul MXU path, so a sum semiring over any other dtype must use
+``backend="segment_sum"`` (the pallas path rejects it loudly rather than
+silently casting); ``min``/``max`` reductions support f32 and i32 on both
+backends.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: ⊕ reduce kinds the backends implement.
+ADD_OPS = ("sum", "min", "max")
+#: ⊗ combine kinds.
+MUL_OPS = ("times", "plus", "min")
+
+
+def _identity(op: str, dtype: np.dtype, *, lower: bool):
+    """The neutral element of ``op`` over ``dtype``.
+
+    ``sum``/``plus`` → 0, ``times`` → 1; ``min`` → +∞ (int max),
+    ``max`` → −∞ (int min) — ``lower`` selects which extremum.
+    """
+    if op in ("sum", "plus"):
+        return dtype.type(0)
+    if op == "times":
+        return dtype.type(1)
+    if np.issubdtype(dtype, np.floating):
+        return dtype.type(-np.inf if lower else np.inf)
+    info = np.iinfo(dtype)
+    return dtype.type(info.min if lower else info.max)
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    """A (⊕, ⊗) pair with identities and element dtype.
+
+    ``add`` is the per-vertex reduce over incoming contributions, ``mul``
+    combines a value with the edge weight.  ``dtype`` is a string
+    (``"float32"``, ``"int32"``, …) so instances stay hashable and valid
+    ``jax.jit`` static arguments.
+    """
+
+    name: str
+    add: str = "sum"
+    mul: str = "times"
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.add not in ADD_OPS:
+            raise ValueError(f"unknown ⊕ op {self.add!r}; expected {ADD_OPS}")
+        if self.mul not in MUL_OPS:
+            raise ValueError(f"unknown ⊗ op {self.mul!r}; expected {MUL_OPS}")
+        np.dtype(self.dtype)  # fail fast on bogus dtype strings
+
+    # ---- dtype / identities ---------------------------------------------
+    @property
+    def np_dtype(self) -> np.dtype:
+        return np.dtype(self.dtype)
+
+    @property
+    def zero(self):
+        """⊕'s identity — what padding, masked edges and empty in-neighbor
+        sets contribute (0 for sum, +∞ for min, −∞ for max)."""
+        return _identity(self.add, self.np_dtype, lower=(self.add == "max"))
+
+    @property
+    def one(self):
+        """⊗'s identity — the weight a ``"unit"`` edge layout bakes so the
+        push propagates values unchanged (1 for ×, 0 for +, +∞ for min)."""
+        return _identity(self.mul, self.np_dtype, lower=False)
+
+    # ---- traced ops ------------------------------------------------------
+    def combine(self, values: jax.Array, weight: jax.Array) -> jax.Array:
+        """``values ⊗ weight`` (elementwise, traced inline)."""
+        if self.mul == "times":
+            return values * weight
+        if self.mul == "plus":
+            return values + weight
+        return jnp.minimum(values, weight)
+
+    def segment_reduce(self, contrib: jax.Array, segments: jax.Array, *,
+                       num_segments: int,
+                       indices_are_sorted: bool = False) -> jax.Array:
+        """⊕-reduce contributions per segment; empty segments get ``zero``
+        (XLA's segment ops already initialize with the matching identity)."""
+        op = {"sum": jax.ops.segment_sum, "min": jax.ops.segment_min,
+              "max": jax.ops.segment_max}[self.add]
+        return op(contrib, segments, num_segments=num_segments,
+                  indices_are_sorted=indices_are_sorted)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Semiring] = {}
+
+
+def register_semiring(s: Semiring) -> Semiring:
+    """Register ``s`` under its name (latest registration wins)."""
+    _REGISTRY[s.name] = s
+    return s
+
+
+def available_semirings() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_semiring(spec: Union[str, Semiring, None]) -> Semiring:
+    """Name / instance / ``None`` (→ ``plus_times``) to a :class:`Semiring`."""
+    if spec is None:
+        return PLUS_TIMES
+    if isinstance(spec, Semiring):
+        return spec
+    try:
+        return _REGISTRY[spec]
+    except KeyError:
+        raise KeyError(
+            f"unknown semiring {spec!r}; registered: "
+            f"{', '.join(available_semirings())}") from None
+
+
+PLUS_TIMES = register_semiring(Semiring("plus_times", "sum", "times",
+                                        "float32"))
+MIN_PLUS = register_semiring(Semiring("min_plus", "min", "plus", "float32"))
+MIN_MIN = register_semiring(Semiring("min_min", "min", "min", "int32"))
+MAX_TIMES = register_semiring(Semiring("max_times", "max", "times",
+                                       "float32"))
+
+
+__all__ = [
+    "ADD_OPS",
+    "MUL_OPS",
+    "MAX_TIMES",
+    "MIN_MIN",
+    "MIN_PLUS",
+    "PLUS_TIMES",
+    "Semiring",
+    "available_semirings",
+    "register_semiring",
+    "resolve_semiring",
+]

@@ -1,0 +1,257 @@
+"""Traversal workloads on min-semirings: SSSP and connected components.
+
+These are the ROADMAP's long-open "needs a non-float state story" workloads,
+unlocked by the semiring-generic propagation API: both are the same power
+sweep as PageRank, just over a different algebra —
+
+- **SSSP** (single-source shortest paths) is Bellman-Ford iteration on the
+  ``min_plus`` semiring: ``dist(v) = min(dist(v), min_{(u,v)} dist(u) +
+  len(u,v))`` with source distances pinned to 0.  Edge lengths come from a
+  ``weight="length"`` :class:`~repro.core.backend.EdgeLayout` (unit lengths
+  — hop counts — unless the caller bakes explicit per-edge lengths).
+- **Connected components** is label-min propagation on the ``min_min``
+  semiring over *int32* state: every vertex starts labeled with its own id
+  and repeatedly takes the minimum label over its neighborhood.  Weak
+  connectivity on the directed stream needs the symmetric closure, so the
+  sweep pushes over a forward and a reverse unit layout per iteration
+  (labels pass through ⊗ unchanged — ``min_min``'s ⊗-identity is +∞).
+
+Both sweeps iterate until a fixed point (no vertex changed) or the
+iteration budget, and both have VeilGraph-summarized versions that restrict
+the relaxation to the hot set K with *frozen cold state as a Dirichlet
+boundary*: ``b_in[z]`` holds the min over z's cold in-neighbors of their
+frozen distance-plus-length (SSSP) or label (CC), injected each iteration
+exactly like the paper's frozen big-vertex rank mass.  Because min is
+associative, commutative and reassociation-exact (no floating-point
+rounding in the reduce order), a summarized sweep over ``hot == all active
+vertices`` reproduces the exact sweep **bitwise**, not just approximately.
+
+Monotonicity note: both relaxations only ever decrease state, so
+warm-starting from previous distances/labels is exact under edge
+*additions* (the paper's e+ stream model) — the summarized paths exploit
+that.  Edge removals can strand stale-low values; the exact sweeps
+therefore default to a cold start (the engine's ground-truth action).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import backend as B
+from repro.core.pagerank import SummaryBuffers
+from repro.graph.graph import GraphState
+
+#: int32 "+∞": the label of never-seen vertices and empty reduces.
+LABEL_SENTINEL = jnp.iinfo(jnp.int32).max
+
+
+def _fixed_point(step, x0, num_iters: int):
+    """Iterate ``x ← step(x)`` until no element changes or the budget runs
+    out.  The shared scaffold of every min-semiring sweep: the relaxations
+    are monotone, so "nothing changed" identifies the fixed point exactly
+    (no float-tolerance subtleties — min never rounds).  Returns
+    ``(x, iterations_run)``."""
+
+    def body(carry):
+        i, x, _ = carry
+        new_x = step(x)
+        return i + 1, new_x, jnp.sum((new_x != x).astype(jnp.int32))
+
+    def cond(carry):
+        i, _, changed = carry
+        return (i < num_iters) & (changed > 0)
+
+    i, x, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), x0, jnp.int32(1)))
+    return x, i
+
+
+# --------------------------------------------------------------------------
+# SSSP — Bellman-Ford on the min_plus semiring
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "backend"))
+def sssp(
+    state: GraphState,
+    source_mask: jax.Array,
+    dist0: Optional[jax.Array] = None,
+    *,
+    num_iters: int = 30,
+    layout: Optional[B.EdgeLayout] = None,
+    backend: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Bounded Bellman-Ford from the vertices in ``source_mask``.
+
+    Returns ``(dist f32[N_cap], iterations_run)`` — ``inf`` marks
+    unreachable vertices.  The loop exits as soon as an iteration changes
+    no distance (a fixed point; at most the graph diameter + 1 trips).
+
+    ``dist0`` warm-starts the relaxation (exact under edge additions —
+    distances are monotone non-increasing; see the module docstring for
+    the removal caveat); sources are pinned to 0 regardless.  ``layout``
+    is an optional cached ``weight="length"``/``min_plus`` layout; without
+    one the sweep sorts on entry (unit lengths), amortized over the
+    relaxations on both backends.
+    """
+    backend_r = B.resolve_backend(backend)
+    B.require_layout(layout, weight="length", reverse=False, who="sssp",
+                     semiring="min_plus")
+    inf = jnp.float32(jnp.inf)
+    if dist0 is None:
+        d0 = jnp.where(source_mask, 0.0, inf)
+    else:
+        d0 = jnp.where(source_mask, 0.0, dist0.astype(jnp.float32))
+
+    if layout is None:
+        # one sort amortized over every relaxation, on both backends (the
+        # sorted gather_push skips XLA's scatter sort/unique analysis too)
+        layout = B.build_layout(state, weight="length", semiring="min_plus")
+
+    def relax(d):
+        incoming = B.push(d, layout, semiring="min_plus", backend=backend_r)
+        return jnp.where(source_mask, 0.0, jnp.minimum(d, incoming))
+
+    return _fixed_point(relax, d0, num_iters)
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "backend"))
+def summarized_sssp(
+    summary: SummaryBuffers,
+    dist_prev: jax.Array,
+    source_mask: jax.Array,
+    *,
+    num_iters: int = 30,
+    backend: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Bellman-Ford restricted to the hot set K (§3.1 on ``min_plus``).
+
+    ``summary`` is a ``weight="length"``/``min_plus`` big-vertex summary:
+    ``b_in[z] = min_{(w,z) ∈ E_B} dist_prev(w) + len(w,z)`` freezes the
+    cold boundary.  Hot distances relax against E_K and ``b_in``; cold
+    distances carry over unchanged.  Returns the *global* distance vector
+    and the iterations run.
+    """
+    backend_r = B.resolve_backend(backend)
+    k_cap = summary.hot_ids.shape[0]
+    inf = jnp.float32(jnp.inf)
+    local_valid = jnp.arange(k_cap, dtype=jnp.int32) < summary.num_hot
+    src_local = jnp.where(local_valid, source_mask[summary.hot_ids], False)
+    d0 = jnp.where(local_valid, dist_prev[summary.hot_ids], inf)
+    d0 = jnp.where(src_local, 0.0, d0)
+    layout = B.summary_layout(summary, semiring="min_plus")
+
+    def relax(d):
+        relaxed = jnp.minimum(
+            d, jnp.minimum(
+                B.push(d, layout, semiring="min_plus", backend=backend_r),
+                summary.b_in))
+        return jnp.where(local_valid, jnp.where(src_local, 0.0, relaxed), inf)
+
+    d_loc, i = _fixed_point(relax, d0, num_iters)
+    dist = dist_prev.at[summary.hot_ids].set(d_loc, mode="drop")
+    return dist, i
+
+
+# --------------------------------------------------------------------------
+# Connected components — label-min propagation on the min_min semiring
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "backend"))
+def connected_components(
+    state: GraphState,
+    labels0: Optional[jax.Array] = None,
+    *,
+    num_iters: int = 30,
+    fwd_layout: Optional[B.EdgeLayout] = None,
+    rev_layout: Optional[B.EdgeLayout] = None,
+    backend: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Weakly-connected components by label-min propagation.
+
+    Returns ``(labels i32[N_cap], iterations_run)``: every active vertex
+    ends up labeled with the minimum vertex id of its weakly-connected
+    component; inactive vertices hold :data:`LABEL_SENTINEL`.  ``labels0``
+    warm-starts (labels are monotone non-increasing under edge additions);
+    every active vertex is re-seeded with ``min(labels0[v], v)`` so
+    vertices first seen after ``labels0`` was computed join correctly.
+    """
+    backend_r = B.resolve_backend(backend)
+    B.require_layout(fwd_layout, weight="unit", reverse=False,
+                     who="connected_components fwd_layout",
+                     semiring="min_min")
+    B.require_layout(rev_layout, weight="unit", reverse=True,
+                     who="connected_components rev_layout",
+                     semiring="min_min")
+    n_cap = state.node_capacity
+    active = state.node_active
+    ids = jnp.arange(n_cap, dtype=jnp.int32)
+    if labels0 is None:
+        l0 = jnp.where(active, ids, LABEL_SENTINEL)
+    else:
+        l0 = jnp.where(active, jnp.minimum(labels0.astype(jnp.int32), ids),
+                       LABEL_SENTINEL)
+
+    # each direction's sort is amortized over every relaxation, on both
+    # backends; a caller may have either one of the two cached already
+    if fwd_layout is None:
+        fwd_layout = B.build_layout(state, weight="unit", semiring="min_min")
+    if rev_layout is None:
+        rev_layout = B.build_layout(state, weight="unit", reverse=True,
+                                    semiring="min_min")
+
+    def relax(lab):
+        incoming = jnp.minimum(
+            B.push(lab, fwd_layout, semiring="min_min", backend=backend_r),
+            B.push(lab, rev_layout, semiring="min_min", backend=backend_r))
+        return jnp.where(active, jnp.minimum(lab, incoming), LABEL_SENTINEL)
+
+    return _fixed_point(relax, l0, num_iters)
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "backend"))
+def summarized_connected_components(
+    fwd: SummaryBuffers,
+    rev: SummaryBuffers,
+    labels_prev: jax.Array,
+    *,
+    num_iters: int = 30,
+    backend: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Label-min propagation restricted to the hot set K.
+
+    ``fwd``/``rev`` are ``weight="unit"``/``min_min`` summaries over the
+    same hot mask (so they share ``hot_ids``); their ``b_in`` vectors
+    freeze the minimum cold label reachable over one boundary edge in each
+    orientation.  Hot labels relax against E_K (both directions) and the
+    frozen boundary; cold labels carry over unchanged.  Returns the
+    *global* label vector and the iterations run.
+    """
+    backend_r = B.resolve_backend(backend)
+    k_cap = fwd.hot_ids.shape[0]
+    local_valid = jnp.arange(k_cap, dtype=jnp.int32) < fwd.num_hot
+    # re-seed with own ids: a vertex first seen after labels_prev was
+    # computed is necessarily hot (new vertices always enter K_r)
+    l0 = jnp.where(
+        local_valid,
+        jnp.minimum(labels_prev.astype(jnp.int32)[fwd.hot_ids], fwd.hot_ids),
+        LABEL_SENTINEL)
+    boundary = jnp.minimum(fwd.b_in, rev.b_in)
+    fwd_layout = B.summary_layout(fwd, semiring="min_min")
+    rev_layout = B.summary_layout(rev, semiring="min_min")
+
+    def relax(lab):
+        incoming = jnp.minimum(
+            B.push(lab, fwd_layout, semiring="min_min", backend=backend_r),
+            B.push(lab, rev_layout, semiring="min_min", backend=backend_r))
+        relaxed = jnp.minimum(lab, jnp.minimum(incoming, boundary))
+        return jnp.where(local_valid, relaxed, LABEL_SENTINEL)
+
+    l_loc, i = _fixed_point(relax, l0, num_iters)
+    labels = labels_prev.at[fwd.hot_ids].set(l_loc, mode="drop")
+    return labels, i

@@ -26,13 +26,16 @@ class SortedEdges(NamedTuple):
     ``src`` is the *emitting* endpoint and ``dst`` the *receiving* one in
     the chosen orientation — with ``reverse=True`` they are the transposed
     graph's, i.e. ``src`` holds original destinations.  Padding/tombstone
-    slots sort to the end with ``dst = node_capacity``.
+    slots sort to the end with ``dst = node_capacity``.  ``order`` is the
+    applied permutation (sorted position → original edge slot) so per-edge
+    payloads such as lengths can be carried into the sorted stream.
     """
 
     src: jax.Array        # int32[E_cap] emitting endpoint
     dst: jax.Array        # int32[E_cap] receiving endpoint (n_cap = padding)
     valid: jax.Array      # bool[E_cap]
     row_offsets: jax.Array  # int32[N_cap + 1] — edge range per receiver
+    order: jax.Array      # int32[E_cap] — original edge slot per position
 
 
 @functools.partial(jax.jit, static_argnames=("reverse",))
@@ -55,7 +58,8 @@ def sort_by_dst(state: GraphState, *, reverse: bool = False) -> SortedEdges:
     row_offsets = jnp.searchsorted(
         dst_s, jnp.arange(n + 1, dtype=jnp.int32), side="left"
     ).astype(jnp.int32)
-    return SortedEdges(src_s, dst_s, valid, row_offsets)
+    return SortedEdges(src_s, dst_s, valid, row_offsets,
+                       order.astype(jnp.int32))
 
 
 def gather_push(
@@ -65,26 +69,39 @@ def gather_push(
     *,
     weight: Optional[jax.Array] = None,
     mask: Optional[jax.Array] = None,
+    semiring=None,
 ) -> jax.Array:
-    """out[v] = Σ over sorted in-edges (u,v) of values[u]·weight(u,v).
+    """out[v] = ⊕ over sorted in-edges (u,v) of values[u] ⊗ weight(u,v).
 
-    The ``indices_are_sorted`` segment-sum fallback of the propagation
+    The ``indices_are_sorted`` segment-reduce fallback of the propagation
     backend (:func:`repro.core.backend.push`): on sorted layouts XLA skips
     the scatter's sort/unique analysis, so even the non-Pallas path profits
     from the amortized edge sort.  ``edges`` is anything with
     ``src``/``dst``/``valid`` fields over the same (sorted) edge order — a
     :class:`SortedEdges` or a :class:`repro.core.backend.EdgeLayout`;
     ``weight``/``mask`` are optional per-edge multipliers/filters in that
-    order.  Traced inline (call from inside jit).
+    order.  ``semiring`` is a resolved
+    :class:`~repro.core.semiring.Semiring` (``None`` = the classic
+    sum-of-products): ⊗ combines value and weight, masked/invalid edges
+    contribute the ⊕-identity, and the reduce lowers to XLA's
+    ``segment_sum``/``segment_min``/``segment_max``.  Traced inline (call
+    from inside jit).
     """
     contrib = values[edges.src]
     if weight is not None:
-        contrib = contrib * weight
+        contrib = contrib * weight if semiring is None else \
+            semiring.combine(contrib, weight)
     keep = edges.valid if mask is None else (edges.valid & mask)
-    contrib = jnp.where(keep, contrib, 0.0)
+    zero = 0.0 if semiring is None else \
+        jnp.asarray(semiring.zero, contrib.dtype)
+    contrib = jnp.where(keep, contrib, zero)
     # padding sentinel (= node capacity) clamps into range; its contribution
-    # is already zeroed above
+    # is already the reduce identity
     dst = jnp.minimum(edges.dst, num_segments - 1)
-    return jax.ops.segment_sum(
+    if semiring is None:
+        return jax.ops.segment_sum(
+            contrib, dst, num_segments=num_segments, indices_are_sorted=True
+        )
+    return semiring.segment_reduce(
         contrib, dst, num_segments=num_segments, indices_are_sorted=True
     )

@@ -21,6 +21,19 @@ the kernel is restructured around the MXU:
   weights, HITS unit weights and summarized E_K weights all arrive pre-baked
   in the stream.
 
+Two kernel variants share that structure, selected by the reduction of the
+semiring the sweep runs over (:mod:`repro.core.semiring`):
+
+- :func:`spmv_push` — the ``sum``-reduce (``plus_times``) fast path: the
+  scatter-add becomes a one-hot matmul on the MXU (f32 only);
+- :func:`spmv_reduce_push` — the tiled *masked-reduce* variant for
+  non-additive reductions (``min``/``max`` over f32 or i32): the same
+  one-hot destination mask selects contributions into a
+  (chunk × tile_n) tile initialized to the reduce identity, and a VPU
+  min/max along the chunk axis replaces the matmul.  This is what makes
+  SSSP's min-plus relaxation and connected components' label-min run as
+  destination-tiled kernels rather than serial scatters.
+
 ``tile_n``/``chunk`` are parameters (module constants are only the
 defaults): the summarized sweep runs in the compacted ``k_cap`` space whose
 natural tile size differs from the full-graph sweep's.  VMEM budget per
@@ -78,6 +91,46 @@ def _make_spmv_kernel(tile_n: int, chunk: int):
     return _spmv_kernel
 
 
+def _make_reduce_kernel(tile_n: int, chunk: int, op: str, identity):
+    """Masked-reduce kernel body: ⊕ ∈ {min, max} instead of the matmul.
+
+    The one-hot destination mask that the sum variant feeds to the MXU here
+    selects contributions into a (chunk × tile_n) tile whose unselected
+    lanes hold the reduce identity; a VPU reduce over the chunk axis folds
+    the tile into the accumulator.  Works for any dtype with a total order
+    (f32 and i32 in practice) — the MXU has no non-additive accumulate, so
+    this is the TPU-native form of segment-min/max.
+    """
+    reduce_fn = jnp.min if op == "min" else jnp.max
+    combine_fn = jnp.minimum if op == "min" else jnp.maximum
+
+    def _reduce_kernel(tile_start_ref, contrib_ref, dst_ref, out_ref):
+        t = pl.program_id(0)
+        start = tile_start_ref[t]
+        end = tile_start_ref[t + 1]
+        base = t * tile_n
+
+        n_chunks = pl.cdiv(end - start, chunk)
+
+        def body(i, acc):
+            lo = start + i * chunk
+            idx = lo + jnp.arange(chunk, dtype=jnp.int32)
+            valid = idx < end
+            c = pl.load(contrib_ref, (pl.ds(lo, chunk),))
+            d = pl.load(dst_ref, (pl.ds(lo, chunk),))
+            d_local = jnp.where(valid, d - base, tile_n)  # OOB -> no column
+            onehot = (d_local[:, None] ==
+                      jnp.arange(tile_n, dtype=jnp.int32)[None, :])
+            tile = jnp.where(onehot, c[:, None], identity)
+            return combine_fn(acc, reduce_fn(tile, axis=0))
+
+        acc0 = jnp.full((tile_n,), identity, contrib_ref.dtype)
+        acc = jax.lax.fori_loop(0, n_chunks, body, acc0)
+        out_ref[...] = acc
+
+    return _reduce_kernel
+
+
 @functools.partial(
     jax.jit, static_argnames=("num_tiles", "tile_n", "chunk", "interpret")
 )
@@ -102,6 +155,51 @@ def spmv_push(
         ],
         out_specs=pl.BlockSpec((tile_n,), lambda t: (t,)),
         out_shape=jax.ShapeDtypeStruct((num_tiles * tile_n,), jnp.float32),
+        interpret=interpret,
+    )(tile_start, contrib, dst_sorted)
+    return out
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_tiles", "tile_n", "chunk", "op", "interpret"),
+)
+def spmv_reduce_push(
+    contrib: jax.Array,      # [E_pad] per-edge contribution, dst-sorted
+    dst_sorted: jax.Array,   # i32[E_pad] destination per edge (sorted)
+    tile_start: jax.Array,   # i32[num_tiles + 1] edge range per tile
+    *,
+    num_tiles: int,
+    op: str,
+    tile_n: int = TILE_N,
+    chunk: int = CHUNK,
+    interpret: bool = False,
+) -> jax.Array:
+    """Masked-reduce sibling of :func:`spmv_push` for ``op`` ∈ {min, max}.
+
+    Returns ``contrib.dtype[num_tiles * tile_n]``; destinations with no
+    in-range edge hold the reduce identity (+∞/−∞ or the int extrema) —
+    the ⊕-zero of the semiring the caller runs, matching XLA's
+    ``segment_min``/``segment_max`` empty-segment convention.
+    """
+    if op not in ("min", "max"):
+        raise ValueError(f"op must be 'min' or 'max', got {op!r}")
+    dtype = contrib.dtype
+    if jnp.issubdtype(dtype, jnp.floating):
+        identity = dtype.type(-jnp.inf if op == "max" else jnp.inf)
+    else:
+        info = jnp.iinfo(dtype)
+        identity = dtype.type(info.min if op == "max" else info.max)
+    out = pl.pallas_call(
+        _make_reduce_kernel(tile_n, chunk, op, identity),
+        grid=(num_tiles,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((tile_n,), lambda t: (t,)),
+        out_shape=jax.ShapeDtypeStruct((num_tiles * tile_n,), dtype),
         interpret=interpret,
     )(tile_start, contrib, dst_sorted)
     return out

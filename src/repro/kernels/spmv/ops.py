@@ -1,9 +1,10 @@
-"""jit'd wrapper: padded-COO graph -> tiled kernel inputs -> PageRank push.
+"""jit'd wrappers: padded-COO graph -> tiled kernel inputs -> one push.
 
-Thin convenience wrapper over the unified propagation backend
-(:mod:`repro.core.backend`): builds (or accepts) the destination-sorted
-``inv_out`` edge layout via :func:`repro.graph.csr.sort_by_dst` and runs one
-push through the Pallas kernel.  ``interpret=True`` runs the kernel body in
+Thin convenience wrappers over the unified propagation backend
+(:mod:`repro.core.backend`): build (or accept) a destination-sorted edge
+layout via :func:`repro.graph.csr.sort_by_dst` and run one push through the
+Pallas kernels — the one-hot matmul for sum reductions, the masked-reduce
+variant for min/max semirings.  ``interpret=True`` runs the kernel body in
 Python on CPU (how this container validates it); on TPU the same call
 compiles to a Mosaic kernel.
 
@@ -26,14 +27,34 @@ from repro.kernels.spmv.kernel import CHUNK, TILE_N  # noqa: F401  (re-export)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("interpret", "tile_n", "chunk"))
+    jax.jit,
+    static_argnames=("semiring", "weight", "interpret", "tile_n", "chunk"))
+def semiring_push(state: GraphState, values: jax.Array, *,
+                  semiring: str = "plus_times",
+                  weight: str = "unit",
+                  interpret: bool = True,
+                  layout: Optional[EdgeLayout] = None,
+                  tile_n: int = TILE_N,
+                  chunk: int = CHUNK) -> jax.Array:
+    """One kernel-backed push over any registered semiring:
+    ``out[v] = ⊕_{(u,v)∈E} values[u] ⊗ weight(u, v)`` (e.g.
+    ``semiring="min_plus", weight="length"`` is one Bellman-Ford
+    relaxation step)."""
+    if layout is None:
+        layout = build_layout(state, weight=weight, semiring=semiring,
+                              chunk=chunk)
+    return push(values, layout, semiring=semiring, backend="pallas",
+                tile_n=tile_n, chunk=chunk, interpret=interpret)
+
+
 def pagerank_push(state: GraphState, ranks: jax.Array, *,
                   interpret: bool = True,
                   layout: Optional[EdgeLayout] = None,
                   tile_n: int = TILE_N,
                   chunk: int = CHUNK) -> jax.Array:
-    """One power-iteration push: out[v] = Σ_{(u,v)∈E} ranks[u]/d_out(u)."""
-    if layout is None:
-        layout = build_layout(state, weight="inv_out", chunk=chunk)
-    return push(ranks, layout, backend="pallas", tile_n=tile_n, chunk=chunk,
-                interpret=interpret)
+    """One power-iteration push: out[v] = Σ_{(u,v)∈E} ranks[u]/d_out(u) —
+    the ``plus_times``/``inv_out`` specialization of
+    :func:`semiring_push`."""
+    return semiring_push(state, ranks, semiring="plus_times",
+                         weight="inv_out", interpret=interpret,
+                         layout=layout, tile_n=tile_n, chunk=chunk)

@@ -39,8 +39,9 @@ def _graph(n=300, m=2000, seed=0, n_cap=None):
 
 
 def _layouts(g, algo):
-    return tuple(B.build_layout(g, weight=w, reverse=rev)
-                 for (w, rev) in algo.layout_specs)
+    return tuple(B.build_layout(g, weight=w, reverse=rev, semiring=s)
+                 for (w, rev, s) in map(B.normalize_layout_spec,
+                                        algo.layout_specs))
 
 
 def _hot(n_cap, seed=0, frac=0.5):

@@ -1,0 +1,522 @@
+"""Katz, connected components and SSSP on the streaming engine.
+
+Acceptance contract (ISSUE 3):
+
+- the three workloads are registered algorithms reachable unchanged
+  through ``repro.api.session(..., algorithm="sssp", sources=(0,))``;
+- exact sweeps match independent numpy references (BFS / union-find /
+  dense Katz) on both propagation backends;
+- a summarized step over ``hot == all active vertices`` matches the exact
+  sweep — *bitwise* for the min-semiring workloads (min has no
+  reassociation error), tight-allclose for Katz's float sums;
+- streamed replays under the exact policy track the references as the
+  graph grows, and approximate replays preserve the workloads' monotone
+  invariants.
+"""
+
+import collections
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core import (Action, ConnectedComponentsAlgorithm, KatzAlgorithm,
+                        SSSPAlgorithm, VeilGraphEngine, available_algorithms,
+                        make_algorithm)
+from repro.core.engine import EngineConfig
+from repro.core.policies import always
+from repro.core.traversal import LABEL_SENTINEL
+from repro.graph import from_edges
+from repro.graph.generators import barabasi_albert_edges, gnm_edges
+
+
+# ------------------------------------------------------- numpy references
+def _bfs_dist(n, src, dst, sources):
+    adj = collections.defaultdict(list)
+    for a, b in zip(src, dst):
+        adj[int(a)].append(int(b))
+    dist = np.full(n, np.inf, np.float32)
+    dq = collections.deque()
+    for s in sources:
+        dist[s] = 0.0
+        dq.append(s)
+    while dq:
+        u = dq.popleft()
+        for v in adj[u]:
+            if dist[v] > dist[u] + 1:
+                dist[v] = dist[u] + 1
+                dq.append(v)
+    return dist
+
+
+def _wcc_labels(n, src, dst):
+    parent = list(range(n))
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    active = np.zeros(n, bool)
+    for a, b in zip(src, dst):
+        active[a] = active[b] = True
+        ra, rb = find(int(a)), find(int(b))
+        if ra != rb:
+            parent[max(ra, rb)] = min(ra, rb)
+    labels = np.full(n, LABEL_SENTINEL, np.int32)
+    roots = collections.defaultdict(list)
+    for v in range(n):
+        if active[v]:
+            roots[find(v)].append(v)
+    for vs in roots.values():
+        labels[vs] = min(vs)
+    return labels
+
+
+def _dense_katz(n, src, dst, alpha, beta, active):
+    a_t = np.zeros((n, n))
+    for u, v in zip(src, dst):
+        a_t[v, u] += 1.0
+    c = np.linalg.solve(np.eye(n) - alpha * a_t,
+                        beta * np.ones(n)) * active
+    return c
+
+
+def _cfg(n_cap, e_cap, **kw):
+    base = dict(node_capacity=n_cap, edge_capacity=e_cap,
+                hot_node_capacity=n_cap, hot_edge_capacity=e_cap,
+                r=0.2, n=1, delta=0.1)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+# ----------------------------------------------------------- exact sweeps
+@pytest.mark.parametrize("backend", ["segment_sum", "pallas"])
+def test_sssp_exact_matches_bfs(backend):
+    from repro.core.traversal import sssp
+    src, dst = gnm_edges(300, 1800, seed=0)
+    g = from_edges(src, dst, 300, 1864)
+    source = jnp.zeros(300, bool).at[jnp.asarray([0, 7])].set(True)
+    dist, iters = sssp(g, source, backend=backend)
+    ref = _bfs_dist(300, src, dst, [0, 7])
+    np.testing.assert_array_equal(np.asarray(dist), ref)
+    assert 0 < int(iters) <= 30
+
+
+@pytest.mark.parametrize("backend", ["segment_sum", "pallas"])
+def test_cc_exact_matches_union_find(backend):
+    from repro.core.traversal import connected_components
+    # sparse graph so several components exist
+    src, dst = gnm_edges(400, 350, seed=1)
+    g = from_edges(src, dst, 400, 414)
+    labels, _ = connected_components(g, backend=backend)
+    np.testing.assert_array_equal(np.asarray(labels),
+                                  _wcc_labels(400, src, dst))
+    assert labels.dtype == jnp.int32
+
+
+def test_katz_exact_matches_dense_solve():
+    from repro.core.katz import katz
+    src, dst = barabasi_albert_edges(120, 2, seed=2)
+    g = from_edges(src, dst, 120, len(src) + 16)
+    c, _ = katz(g, alpha=0.02, num_iters=200, tol=1e-10)
+    ref = _dense_katz(120, src, dst, 0.02, 1.0,
+                      np.asarray(g.node_active))
+    np.testing.assert_allclose(np.asarray(c), ref, rtol=2e-5, atol=2e-5)
+
+
+# -------------------------------------- summarized: hot == all is exact
+def test_summarized_sssp_full_hot_set_is_bitwise_exact():
+    algo = SSSPAlgorithm(sources=(0, 3), warm_start=True)
+    src, dst = gnm_edges(300, 1800, seed=3)
+    g = from_edges(src, dst, 300, 1864)
+    st0 = algo.init_state(g)
+    st, _ = algo.exact(st0, g)
+    # grow the graph, then run warm summarized(hot=all) vs warm exact
+    from repro.graph.graph import add_edges
+    g2 = add_edges(g, jnp.asarray([0, 5, 9], jnp.int32),
+                   jnp.asarray([250, 260, 270], jnp.int32))
+    hot = jnp.copy(g2.node_active)
+    summaries = algo.build_summaries(
+        st, g2, hot, hot_node_capacity=300, hot_edge_capacity=2048)
+    approx, _ = algo.summarized(st, g2, summaries)
+    exact, _ = algo.exact(st, g2)
+    np.testing.assert_array_equal(np.asarray(approx["dist"]),
+                                  np.asarray(exact["dist"]))
+    # min_plus has no reassociation error: equality is bitwise
+    assert np.array_equal(np.asarray(approx["delta"]),
+                          np.asarray(exact["delta"]))
+
+
+def test_summarized_cc_full_hot_set_is_bitwise_exact():
+    algo = ConnectedComponentsAlgorithm(warm_start=True)
+    src, dst = gnm_edges(400, 350, seed=4)
+    g = from_edges(src, dst, 400, 414)
+    st0 = algo.init_state(g)
+    st, _ = algo.exact(st0, g)
+    from repro.graph.graph import add_edges
+    g2 = add_edges(g, jnp.asarray([0, 17], jnp.int32),
+                   jnp.asarray([399, 301], jnp.int32))
+    hot = jnp.copy(g2.node_active)
+    summaries = algo.build_summaries(
+        st, g2, hot, hot_node_capacity=400, hot_edge_capacity=512)
+    approx, _ = algo.summarized(st, g2, summaries)
+    exact, _ = algo.exact(st, g2)
+    np.testing.assert_array_equal(np.asarray(approx["labels"]),
+                                  np.asarray(exact["labels"]))
+
+
+@pytest.mark.parametrize("name,tol", [
+    ("katz", 1e-5), ("connected-components", 0.0), ("sssp", 0.0)])
+@pytest.mark.parametrize("fused", [True, False])
+def test_engine_full_hot_set_matches_exact(name, tol, fused):
+    """r < 0 makes every seen vertex hot: the approximate engine action must
+    reproduce the exact engine's answer through both query paths."""
+    src, dst = barabasi_albert_edges(800, 3, seed=0)
+    params = {"katz": dict(alpha=0.01, num_iters=80, tol=1e-9),
+              "sssp": dict(sources=(0,))}.get(name, {})
+    approx = VeilGraphEngine(
+        _cfg(1000, 8192, r=-1.0, delta=1e9, fused=fused),
+        make_algorithm(name, **params))
+    exact = VeilGraphEngine(
+        _cfg(1000, 8192, fused=fused), make_algorithm(name, **params),
+        on_query=always(Action.EXACT))
+    approx.start(src, dst)
+    exact.start(src, dst)
+    ra, sa = approx.query()
+    re_, se = exact.query()
+    assert sa.action == "compute-approximate"
+    assert not sa.overflow_fallback
+    assert sa.num_hot == sa.num_nodes
+    if tol:
+        np.testing.assert_allclose(ra, re_, rtol=tol, atol=tol)
+    else:
+        np.testing.assert_array_equal(ra, re_)
+
+
+# --------------------------------------------------- session end-to-end
+def test_session_sssp_streamed_exact_policy():
+    src, dst = barabasi_albert_edges(500, 3, seed=5)
+    hold = 120  # stream the tail in later
+    s = repro.session((src[:-hold], dst[:-hold]), algorithm="sssp",
+                      sources=(0,), node_capacity=600,
+                      on_query=always(Action.EXACT))
+    r = s.query()
+    np.testing.assert_array_equal(
+        r.scores, _bfs_dist(600, src[:-hold], dst[:-hold], [0]))
+    s.add_edges(src[-hold:], dst[-hold:])
+    r2 = s.query()
+    np.testing.assert_array_equal(r2.scores, _bfs_dist(600, src, dst, [0]))
+    assert r2.stats.algorithm == "sssp"
+
+
+def test_session_sssp_approximate_keeps_monotone_upper_bound():
+    """At paper knobs the approximate distances are always realizable path
+    lengths: >= the true distance, and never increasing as edges arrive."""
+    src, dst = barabasi_albert_edges(500, 3, seed=6)
+    hold = 200
+    s = repro.session((src[:-hold], dst[:-hold]), algorithm="sssp",
+                      sources=(0,), node_capacity=600, r=0.2, delta=0.1)
+    prev = s.query().scores
+    for lo in range(len(src) - hold, len(src), 50):
+        s.add_edges(src[lo:lo + 50], dst[lo:lo + 50])
+        cur = s.query().scores
+        assert (cur <= prev + 1e-6).all()  # monotone under additions
+        prev = cur
+    true = _bfs_dist(600, src, dst, [0])
+    assert (prev >= true - 1e-6).all()     # never better than possible
+    # and the hot-set machinery actually restricted the work
+    st = s.stats_log[-1]
+    assert 0 < st.num_hot < st.num_nodes
+
+
+def test_session_cc_streamed_exact_policy():
+    rng = np.random.default_rng(7)
+    src = rng.integers(0, 400, 300).astype(np.int32)
+    dst = rng.integers(0, 400, 300).astype(np.int32)
+    s = repro.session((src, dst), algorithm="connected-components",
+                      node_capacity=450, on_query=always(Action.EXACT))
+    np.testing.assert_array_equal(s.query().scores[:400],
+                                  _wcc_labels(400, src, dst)[:400])
+    # merge two components and stream a brand-new vertex in
+    s.add_edges([0, 420], [399, 0])
+    out = s.query().scores
+    ref = _wcc_labels(450, np.concatenate([src, [0, 420]]),
+                      np.concatenate([dst, [399, 0]]))
+    np.testing.assert_array_equal(out, ref)
+    assert out.dtype == np.int32
+
+
+def test_session_katz_streamed():
+    src, dst = barabasi_albert_edges(200, 2, seed=8)
+    s = repro.session((src, dst), algorithm="katz", alpha=0.02,
+                      num_iters=200, tol=1e-10,
+                      on_query=always(Action.EXACT))
+    r = s.query()
+    ref = _dense_katz(s.engine.config.node_capacity, src, dst, 0.02, 1.0,
+                      np.asarray(s.engine.state.node_active))
+    np.testing.assert_allclose(r.scores, ref, rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------- registry and contract
+def test_top_masks_padding_and_orders_by_algorithm_direction():
+    """session top() must never surface capacity-padding / sentinel
+    vertices, and must rank ascending for distance/label workloads."""
+    src = np.asarray([0, 1, 2, 3], np.int32)
+    dst = np.asarray([1, 2, 3, 0], np.int32)
+    s = repro.session((src, dst), algorithm="connected-components",
+                      node_capacity=20)
+    r = s.query()
+    top = r.top(10)
+    assert set(top) <= {0, 1, 2, 3}  # no phantom padding ids
+    assert len(top) == 4
+    np.testing.assert_array_equal(np.sort(r.scores[top]), r.scores[top])
+    # sssp: nearest-first, unreachable/inactive excluded
+    s2 = repro.session((src, dst), algorithm="sssp", sources=(0,),
+                       node_capacity=20)
+    r2 = s2.query()
+    top2 = r2.top(10)
+    assert list(top2)[0] == 0 and set(top2) <= {0, 1, 2, 3}
+    assert (np.diff(r2.scores[top2]) >= 0).all()
+    assert np.array_equal(s2.top(10), top2)  # session.top agrees
+    # ranking algorithms keep descending order
+    r3 = repro.session((src, dst), algorithm="pagerank",
+                       node_capacity=20).query()
+    assert (np.diff(r3.scores[r3.top(4)]) <= 0).all()
+
+
+def test_cc_single_cached_layout_per_direction():
+    """A caller with only one of the two directional layouts cached must
+    not crash (and must still be correct) on either backend."""
+    from repro.core.backend import build_layout
+    from repro.core.traversal import connected_components
+    src, dst = gnm_edges(200, 180, seed=14)
+    g = from_edges(src, dst, 200, 200)
+    ref = _wcc_labels(200, src, dst)
+    fwd = build_layout(g, weight="unit", semiring="min_min")
+    rev = build_layout(g, weight="unit", semiring="min_min", reverse=True)
+    for backend in ("segment_sum", "pallas"):
+        for kw in (dict(fwd_layout=fwd), dict(rev_layout=rev),
+                   dict(fwd_layout=fwd, rev_layout=rev)):
+            labels, _ = connected_components(g, backend=backend, **kw)
+            np.testing.assert_array_equal(np.asarray(labels), ref)
+
+
+def test_new_algorithms_registered():
+    listed = set(available_algorithms())
+    assert {"katz", "connected-components", "sssp"} <= listed
+    assert isinstance(make_algorithm("cc"), ConnectedComponentsAlgorithm)
+    assert isinstance(make_algorithm("wcc"), ConnectedComponentsAlgorithm)
+    assert isinstance(make_algorithm("shortest-paths", sources=(3,)),
+                      SSSPAlgorithm)
+    a = make_algorithm("sssp", sources=(1, 2))
+    assert a.sources == (1, 2)
+    with pytest.raises(ValueError):
+        SSSPAlgorithm(sources=())
+    with pytest.raises(ValueError):
+        KatzAlgorithm(alpha=1.5)
+
+
+def test_sssp_source_validation_through_session():
+    src = np.asarray([0, 1, 2], np.int32)
+    dst = np.asarray([1, 2, 0], np.int32)
+    with pytest.raises(ValueError, match="node_capacity"):
+        repro.session((src, dst), algorithm="sssp", sources=(10_000,))
+    with pytest.raises(ValueError, match="negative"):
+        repro.session((src, dst), algorithm="sssp", sources=(-1,))
+
+
+def test_state_dtype_declarations_validated():
+    """state_dtypes is enforced at engine init: an int workload whose
+    plugin accidentally produces floats must fail loudly."""
+
+    class BrokenCC(ConnectedComponentsAlgorithm):
+        def init_state(self, graph):
+            st = super().init_state(graph)
+            return {**st, "labels": st["labels"].astype(jnp.float32)}
+
+    with pytest.raises(ValueError, match="declared int32"):
+        VeilGraphEngine(_cfg(16, 64), BrokenCC())
+    # declared keys must exist at all
+    class MissingKey(ConnectedComponentsAlgorithm):
+        def init_state(self, graph):
+            st = super().init_state(graph)
+            return {"labels": st["labels"]}
+
+    with pytest.raises(ValueError, match="missing declared"):
+        VeilGraphEngine(_cfg(16, 64), MissingKey())
+
+
+def test_selection_view_is_churn_for_traversal_workloads():
+    """CC/SSSP drive the Δ policy with churn indicators, not raw state —
+    and the legacy score_view alias still reports the result view."""
+    src, dst = gnm_edges(100, 400, seed=9)
+    eng = VeilGraphEngine(_cfg(120, 512), "sssp")
+    eng.start(src, dst)
+    sel = np.asarray(eng.algorithm.selection_view(eng.algo_state))
+    assert sel.dtype == np.float32
+    assert np.isfinite(sel).all()  # churn indicators, never ±inf
+    res = np.asarray(eng.algorithm.result_view(eng.algo_state))
+    legacy = np.asarray(eng.algorithm.score_view(eng.algo_state))
+    np.testing.assert_array_equal(res, legacy)
+    assert np.isinf(res).any() or (res >= 0).all()  # distances, not churn
+
+
+def test_legacy_score_view_only_subclass_still_works():
+    """Pre-semiring plugins that override score_view (not result_view)
+    keep steering the engine — including subclasses of shipped
+    algorithms, whose inherited result_view must not shadow the
+    customization."""
+    from dataclasses import dataclass
+    from repro.core import PageRankAlgorithm
+
+    @dataclass(frozen=True)
+    class OldStyle(PageRankAlgorithm):
+        name = "old-style"
+
+        def score_view(self, state):  # the pre-split override point
+            return state["ranks"] * 2.0
+
+    src, dst = gnm_edges(50, 200, seed=10)
+    eng = VeilGraphEngine(_cfg(60, 256), OldStyle())
+    eng.start(src, dst)
+    scores, st = eng.query()
+    assert st.action == "compute-approximate"
+    # the engine's answer is the score_view override, not raw ranks
+    np.testing.assert_allclose(
+        scores, 2.0 * np.asarray(eng.algo_state["ranks"]), rtol=1e-6)
+    # a legacy override chaining up via super().score_view must get its
+    # parent's answer, not itself back (no mutual recursion)
+    @dataclass(frozen=True)
+    class Chained(PageRankAlgorithm):
+        name = "chained"
+
+        def score_view(self, state):
+            return super().score_view(state) * 3.0
+
+    eng_c = VeilGraphEngine(_cfg(60, 256), Chained())
+    eng_c.start(src, dst)
+    np.testing.assert_allclose(
+        np.asarray(eng_c.ranks), 3.0 * np.asarray(eng_c.algo_state["ranks"]),
+        rtol=1e-6)
+    # score_view supplied by a mixin (precedes the base in the MRO without
+    # subclassing it) must also win
+    class ScoreMixin:
+        def score_view(self, state):
+            return state["ranks"] * 5.0
+
+    @dataclass(frozen=True)
+    class Mixed(ScoreMixin, PageRankAlgorithm):
+        name = "mixed"
+
+    eng_m = VeilGraphEngine(_cfg(60, 256), Mixed())
+    eng_m.start(src, dst)
+    np.testing.assert_allclose(
+        np.asarray(eng_m.ranks), 5.0 * np.asarray(eng_m.algo_state["ranks"]),
+        rtol=1e-6)
+    # ...and a modern subclass that defines result_view is left alone
+    @dataclass(frozen=True)
+    class NewStyle(PageRankAlgorithm):
+        name = "new-style"
+
+        def result_view(self, state):
+            return state["ranks"] + 1.0
+
+    eng2 = VeilGraphEngine(_cfg(60, 256), NewStyle())
+    eng2.start(src, dst)
+    np.testing.assert_allclose(
+        np.asarray(eng2.ranks), np.asarray(eng2.algo_state["ranks"]) + 1.0,
+        rtol=1e-6)
+
+
+def test_plugin_with_no_view_method_fails_at_construction():
+    """result_view stays abstract: a plugin implementing neither view
+    method must fail at instantiation, not at first query."""
+    from dataclasses import dataclass
+    from repro.core import StreamingAlgorithm
+
+    @dataclass(frozen=True)
+    class NoView(StreamingAlgorithm):
+        name = "no-view"
+
+        def init_state(self, graph):
+            return {}
+
+        def exact(self, state, graph, *, layouts=None, backend=None):
+            return state, jnp.int32(0)
+
+        def summarized(self, state, graph, summaries, *, backend=None):
+            return state, jnp.int32(0)
+
+    with pytest.raises(TypeError, match="abstract"):
+        NoView()
+
+
+def test_legacy_plugin_with_custom_state_keys_constructs():
+    """An old plugin whose state has no 'ranks' key (and declares no
+    state_dtypes) must not trip the new dtype validation."""
+    from dataclasses import dataclass
+    from repro.core import PageRankAlgorithm
+
+    @dataclass(frozen=True)
+    class Renamed(PageRankAlgorithm):
+        name = "renamed-state"
+        state_dtypes = {}
+
+        def init_state(self, graph):
+            return {"scores": super().init_state(graph)["ranks"]}
+
+        def exact(self, state, graph, *, layouts=None, backend=None):
+            st, it = super().exact({"ranks": state["scores"]}, graph,
+                                   layouts=layouts, backend=backend)
+            return {"scores": st["ranks"]}, it
+
+        def summarized(self, state, graph, summaries, *, backend=None):
+            st, it = super().summarized({"ranks": state["scores"]}, graph,
+                                        summaries, backend=backend)
+            return {"scores": st["ranks"]}, it
+
+        def score_view(self, state):
+            return state["scores"]
+
+    src, dst = gnm_edges(50, 200, seed=11)
+    eng = VeilGraphEngine(_cfg(60, 256), Renamed())
+    eng.start(src, dst)
+    scores, st = eng.query()
+    assert np.isfinite(scores).all()
+
+
+def test_summarized_sssp_honors_explicit_edge_lengths():
+    """build_summary(weight='length', lengths=...) must bake the real
+    lengths into E_K, not hop counts (b_in already used them)."""
+    from repro.core.backend import build_layout
+    from repro.core.pagerank import build_summary
+    from repro.core.traversal import sssp, summarized_sssp
+
+    src, dst = gnm_edges(120, 600, seed=12)
+    g = from_edges(src, dst, 120, 664)
+    rng = np.random.default_rng(13)
+    lengths = jnp.asarray(
+        (1.0 + 9.0 * rng.random(g.edge_capacity)).astype(np.float32))
+    layout = build_layout(g, weight="length", semiring="min_plus",
+                          lengths=lengths)
+    source = jnp.zeros(120, bool).at[0].set(True)
+    dist, _ = sssp(g, source, layout=layout)
+    hot = jnp.copy(g.node_active)
+    # the layout's baked lengths are authoritative: no lengths= needed
+    summary = build_summary(g, dist, hot, hot_node_capacity=120,
+                            hot_edge_capacity=1024, weight="length",
+                            semiring="min_plus", layout=layout)
+    again, _ = summarized_sssp(summary, dist, source)
+    # the converged weighted distances are a fixed point of the summarized
+    # relaxation only if E_K carries the same lengths
+    np.testing.assert_array_equal(np.asarray(again), np.asarray(dist))
+    # and a partial hot set relaxes *with* lengths from a degraded start
+    hot2 = jnp.asarray(rng.random(120) < 0.6) & g.node_active
+    summary2 = build_summary(g, dist, hot2, hot_node_capacity=120,
+                             hot_edge_capacity=1024, weight="length",
+                             semiring="min_plus", lengths=lengths)
+    relaxed, _ = summarized_sssp(summary2, dist, source)
+    np.testing.assert_array_equal(np.asarray(relaxed), np.asarray(dist))
