@@ -90,14 +90,44 @@ def _minplus_fixture(g):
     return layout, dist, source, summary
 
 
+def _sharded_cases(g, ranks, live_edges, *, iters, shard_counts=(2, 4, 8)):
+    """Sharded push rows (the shard_map partial-push + psum backend): one
+    row per host-shard count.  When the process has >= S devices (the CI
+    sharded job forces 8 host devices) the row measures the real
+    shard_map-ed path over an S-device mesh; otherwise the on-device
+    shard-loop reference path — the tag records which.
+    """
+    from jax.sharding import Mesh
+    from repro.core import backend as B
+    from repro.graph.partition import (build_sharded_layout,
+                                       place_sharded_layout)
+
+    cases = []
+    for s_count in shard_counts:
+        mesh = None
+        if jax.device_count() >= s_count:
+            mesh = Mesh(np.asarray(jax.devices()[:s_count]), ("shards",))
+        # place once, like the engine cache — otherwise the timed calls
+        # would measure per-call redistribution of the edge stream
+        layout_s = place_sharded_layout(build_sharded_layout(
+            g, mesh=mesh, num_shards=s_count, weight="inv_out"))
+        fn = jax.jit(lambda r, lay: B.push(r, lay, backend="segment_sum"))
+        us = _bench(fn, ranks, layout_s, iters=iters, warmup=1)
+        tag = "mesh" if mesh is not None else "loop"
+        cases.append((f"push_sharded_s{s_count}_{tag}", us,
+                      f"{live_edges / (us / 1e6) / 1e9:.3f}Gedge/s"))
+    return cases
+
+
 def bench_sweep_backends(*, smoke: bool = False, nodes=50_000, edges=500_000):
     """Backend-vs-backend rows: a plus_times push + summarized PageRank
     sweep, and a min_plus push + summarized SSSP sweep, per backend on the
-    500k-edge reference graph.  The pallas rows run in interpret mode
-    off-TPU — they track kernel-logic cost trajectory, not TPU wall time
-    (the dry-run covers that); the min_plus rows exercise the masked-reduce
-    kernel variant instead of the one-hot matmul.  Returns (rows, records);
-    the records feed BENCH_sweeps.json.
+    500k-edge reference graph, plus sharded-push rows over 2/4/8 host
+    shards.  The pallas rows run in interpret mode off-TPU — they track
+    kernel-logic cost trajectory, not TPU wall time (the dry-run covers
+    that); the min_plus rows exercise the masked-reduce kernel variant
+    instead of the one-hot matmul.  Returns (rows, records); the records
+    feed BENCH_sweeps.json.
     """
     from repro.core import backend as B
     from repro.core.pagerank import summarized_pagerank
@@ -135,6 +165,7 @@ def bench_sweep_backends(*, smoke: bool = False, nodes=50_000, edges=500_000):
         cases.append((f"summarized_sssp_{sweep_iters}it_{tag}", us,
                       f"|K|={int(mp_summary.num_hot)},"
                       f"|E_K|={int(mp_summary.num_ek)}"))
+    cases.extend(_sharded_cases(g, ranks, live_edges, iters=iters))
     records = [
         {"name": name, "us_per_call": round(us, 1), "derived": derived}
         for name, us, derived in cases
@@ -143,6 +174,7 @@ def bench_sweep_backends(*, smoke: bool = False, nodes=50_000, edges=500_000):
         "graph": {"nodes": nodes, "edges": edges, "live_edges": live_edges},
         "interpret": interpret,
         "device": jax.default_backend(),
+        "device_count": jax.device_count(),
         "smoke": smoke,
         "sweep_iters": sweep_iters,
     }

@@ -142,7 +142,12 @@ def sweep_dataset(name: str, queries: int = 50, shuffle: bool = True,
                                    gt_ranks, gt_times, depth)
         key = f"r{r}_n{n}_d{delta}"
         results[key] = rows
-        w = rows[1:]
+        if not rows:
+            raise SystemExit(
+                f"[{name}] combo {key}: the replay produced no query rows "
+                f"(empty stream?) — nothing to summarize")
+        # the warm-up query is skipped when there is more than one row
+        w = rows[1:] or rows
         summary = {
             "vertex_ratio": float(np.mean([x["vertex_ratio"] for x in w])),
             "edge_ratio": float(np.mean([x["edge_ratio"] for x in w])),

@@ -49,15 +49,25 @@ def sweeps_summary(*, smoke: bool = False, out_path: Path = None):
 
 
 def paper_summary():
-    files = sorted(glob.glob(str(ART / "paper_sweep" / "*.json")))
+    pattern = str(ART / "paper_sweep" / "*.json")
+    files = sorted(glob.glob(pattern))
     if not files:
+        # an existing-but-empty artifacts/paper_sweep/ (e.g. a killed sweep)
+        # takes the same path as a missing one: run the reduced live sweep,
+        # then glob AGAIN — and fail with a clear message rather than
+        # crashing downstream if the live sweep produced nothing either
         print("# no paper_sweep artifacts; running a reduced live sweep "
               "(synth-citation, 4 combos, Q=20)")
         from benchmarks.paper_sweep import sweep_dataset
         sweep_dataset("synth-citation", queries=20,
                       combos=[(0.10, 1, 0.01), (0.20, 1, 0.10),
                               (0.30, 0, 0.90), (0.30, 1, 0.90)])
-        files = sorted(glob.glob(str(ART / "paper_sweep" / "*.json")))
+        files = sorted(glob.glob(pattern))
+        if not files:
+            raise SystemExit(
+                f"paper_summary: the reduced live sweep left no artifacts "
+                f"matching {pattern} — run `python -m benchmarks.paper_sweep`"
+                f" manually and check its output for errors")
     print("\n# paper protocol: dataset,combo,vertex_ratio,edge_ratio,"
           "rbo_mean,rbo_final,speedup_mean,speedup_min,fallbacks")
     best = {}

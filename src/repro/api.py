@@ -54,6 +54,19 @@ and the default ``"auto"`` resolves per device (TPU → pallas) with
 runs over is the *algorithm's* declaration (``StreamingAlgorithm.semiring``
 / ``layout_specs``), not a session knob — see :mod:`repro.core.backend` and
 :mod:`repro.core.semiring`.
+
+Sharded execution is one more config override: pass a device mesh and the
+engine partitions its cached edge layouts into one locally-sorted shard
+per device and runs every O(E) sweep — exact, summarized boundary, fused —
+as a shard_map partial push + semiring all-reduce::
+
+    mesh = jax.make_mesh((jax.device_count(),), ("shards",))
+    veilgraph.session((src, dst), algorithm="pagerank", mesh=mesh)
+
+``mesh_axes`` optionally restricts which mesh axes the shard dimension
+spans (default: all of them).  Results match the single-device engine —
+bitwise for the min-semiring workloads, to f32 summation order for the
+ranking family; see :mod:`repro.graph.partition`.
 """
 
 from __future__ import annotations

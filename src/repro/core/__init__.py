@@ -11,8 +11,9 @@ from repro.core.algorithm import (Action, AlgoState,
                                   SSSPAlgorithm, StreamingAlgorithm,
                                   algorithm_factory, available_algorithms,
                                   make_algorithm, register_algorithm)
-from repro.core.backend import (EdgeLayout, build_layout, push, push_coo,
-                                resolve_backend, summary_layout)
+from repro.core.backend import (EdgeLayout, ShardedEdgeLayout, build_layout,
+                                push, push_coo, resolve_backend,
+                                summary_layout)
 from repro.core.engine import (EngineConfig, QueryStats, VeilGraphEngine)
 from repro.core.hits import hits, summarized_hits
 from repro.core.hotset import HotSetStats, select_hot_set

@@ -39,23 +39,46 @@ environment variable overrides (values: ``pallas``, ``segment_sum``,
 ``auto``), and every sweep/engine entry point takes an explicit ``backend=``
 knob that overrides both.  Resolution happens at trace time; a changed
 environment variable does not invalidate already-compiled sweeps.
+
+Sharded execution
+-----------------
+``push`` is mesh-aware: hand it a :class:`ShardedEdgeLayout` (built by
+:func:`repro.graph.partition.build_sharded_layout` — the edge stream cut
+into contiguous shards, each destination-sorted *locally* so no sort ever
+crosses a shard boundary) and the same primitive runs as a
+``shard_map``-ed partial push per shard followed by one semiring
+all-reduce of the dense node vector (``psum``/``pmin``/``pmax`` per the
+(⊕, ⊗) pair — min/max reductions stay bitwise identical to the
+single-device result, sums differ only by f32 summation order).  Either
+backend runs *inside* each shard, so the Pallas MXU kernels lower under
+GSPMD too.  Without a mesh attached the same layout runs as a sequential
+per-shard loop on one device — the reference semantics the parity tests
+pin the distributed path against.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import os
-from typing import Optional, Union
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.semiring import Semiring, resolve_semiring
 from repro.graph.csr import SortedEdges, gather_push, sort_by_dst
 from repro.graph.graph import GraphState, inv_out_degree
 from repro.kernels.spmv.kernel import (CHUNK, TILE_N, spmv_push,
                                        spmv_reduce_push)
+
+# jax promoted shard_map out of jax.experimental across 0.4.x/0.5.x
+if hasattr(jax, "shard_map"):  # pragma: no cover - version-dependent
+    _shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
 
 BACKENDS = ("segment_sum", "pallas")
 
@@ -140,14 +163,107 @@ class EdgeLayout:
         return self.row_offsets.shape[0] - 1
 
 
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("src", "dst", "weight", "valid", "row_offsets", "order"),
+    meta_fields=("weight_mode", "reverse", "pad_chunk", "semiring", "mesh",
+                 "axes"),
+)
+@dataclasses.dataclass(frozen=True)
+class ShardedEdgeLayout:
+    """Edge-partitioned sibling of :class:`EdgeLayout`: one locally
+    destination-sorted stream per shard, stacked along a leading shard axis.
+
+    Built by :func:`repro.graph.partition.build_sharded_layout`: the COO
+    buffer is cut into ``num_shards`` contiguous slot ranges (so a
+    1-D-edge-sharded buffer reshapes onto the shard axis with zero
+    communication) and each shard is sorted by receiving endpoint
+    *independently* — the amortized sort never crosses a shard boundary,
+    which is what makes the cached-layout backend viable under GSPMD where
+    a global pod-scale argsort would defeat the edge sharding.
+
+    Every per-shard row carries the same invariants as a single
+    :class:`EdgeLayout` (baked ⊗-operand, ⊕-identity padding, per-receiver
+    ``row_offsets`` over the full ``num_segments`` node space, ≥ one chunk
+    of slack), so :func:`push` runs the ordinary single-shard kernel inside
+    each shard and completes the ⊕ with one collective.
+
+    ``mesh``/``axes`` are static metadata naming where the shard axis
+    lives: ``mesh=None`` means no device mapping — :func:`push` then loops
+    shards sequentially and merges partials on one device (the reference
+    semantics).  With a mesh, the leading axis is ``shard_map``-ed over
+    ``axes`` (``num_shards`` must be a multiple of the axes' total device
+    count; the per-device surplus shards loop locally).
+    """
+
+    src: jax.Array          # int32[S, E_pad] emitting endpoint (sorted)
+    dst: jax.Array          # int32[S, E_pad] receiving endpoint (sentinel=N)
+    weight: jax.Array       # dtype[S, E_pad] per-edge operand (⊕-id invalid)
+    valid: jax.Array        # bool[S, E_pad]
+    row_offsets: jax.Array  # int32[S, num_segments + 1]
+    #: original edge slot per (shard, sorted position); sentinel =
+    #: edge_capacity in padding — the partition certificate (each live slot
+    #: appears in exactly one shard) and the lengths back-map.
+    order: Optional[jax.Array] = None
+    weight_mode: str = "inv_out"
+    reverse: bool = False
+    pad_chunk: int = CHUNK
+    semiring: str = "plus_times"
+    mesh: Optional[Mesh] = None
+    axes: Tuple[str, ...] = ()
+
+    @property
+    def num_shards(self) -> int:
+        return self.row_offsets.shape[0]
+
+    @property
+    def num_segments(self) -> int:
+        return self.row_offsets.shape[1] - 1
+
+
+#: layout kinds push() accepts
+AnyEdgeLayout = Union[EdgeLayout, ShardedEdgeLayout]
+
+
+def padded_length(e: int, chunk: int) -> int:
+    """Stream length after chunk-slack padding — the next chunk multiple
+    plus one spare chunk, so the kernel's fixed-size dynamic loads never
+    run past the buffer.  The one definition every layout builder (single
+    and sharded) pads with."""
+    return (e // chunk + 2) * chunk
+
+
+def bake_weights(s: Semiring, weight: str, valid: jax.Array,
+                 src: jax.Array, *, inv_deg=None,
+                 lengths=None) -> jax.Array:
+    """The per-edge ⊗-operand for a stream, per weight mode — the single
+    definition of what ``inv_out``/``unit``/``length`` bake, shared by the
+    single and sharded layout builders so the two cannot drift.
+
+    ``valid``/``src``/``lengths`` are aligned to the caller's stream order
+    (sorted or slot order — the caller gathers); ``inv_deg`` is the
+    node-space ``1/d_out`` vector for ``inv_out``.  ``lengths=None`` under
+    ``weight="length"`` means unit hop counts.  Invalid slots bake the
+    semiring's ⊕-identity so they never contribute.
+    """
+    dtype = jnp.dtype(s.dtype)
+    zero = jnp.asarray(s.zero, dtype)
+    if weight == "inv_out":
+        return jnp.where(valid, inv_deg[src], 0.0)
+    if weight == "unit":
+        return jnp.where(valid, jnp.asarray(s.one, dtype), zero)
+    per_edge = (jnp.asarray(1, dtype) if lengths is None
+                else lengths.astype(dtype))
+    return jnp.where(valid, per_edge, zero)
+
+
 def _pad_stream(src, dst, weight, valid, *, sentinel: int, chunk: int,
                 zero=0.0):
     """Pad the sorted stream to a chunk multiple plus one spare chunk;
     padded weight slots hold ``zero`` (the consuming semiring's
     ⊕-identity) so they never contribute."""
     e = src.shape[0]
-    e_pad = (e // chunk + 2) * chunk
-    pad = e_pad - e
+    pad = padded_length(e, chunk) - e
     return (
         jnp.pad(src, (0, pad)),
         jnp.pad(dst, (0, pad), constant_values=sentinel),
@@ -223,16 +339,10 @@ def build_layout(
                              lengths=lengths,
                              edge_capacity=state.edge_capacity)
     se = sort_by_dst(state, reverse=reverse)
-    dtype = jnp.dtype(s.dtype)
-    zero = jnp.asarray(s.zero, dtype)
-    if weight == "inv_out":
-        w = jnp.where(se.valid, inv_out_degree(state)[se.src], 0.0)
-    elif weight == "unit":
-        w = jnp.where(se.valid, jnp.asarray(s.one, dtype), zero)
-    else:  # "length"
-        per_edge = (jnp.ones((state.edge_capacity,), dtype)
-                    if lengths is None else lengths.astype(dtype))
-        w = jnp.where(se.valid, per_edge[se.order], zero)
+    w = bake_weights(
+        s, weight, se.valid, se.src, inv_deg=inv_out_degree(state),
+        # slot-order lengths follow the sort through se.order
+        lengths=None if lengths is None else lengths[se.order])
     src, dst, w, valid = _pad_stream(
         se.src, se.dst, w, se.valid,
         sentinel=state.node_capacity, chunk=chunk, zero=s.zero)
@@ -274,13 +384,14 @@ def summary_layout(summary, *, chunk: int = CHUNK,
                       semiring=s.name)
 
 
-def require_layout(layout: Optional[EdgeLayout], *, weight: str,
+def require_layout(layout: Optional[AnyEdgeLayout], *, weight: str,
                    reverse: bool, who: str,
                    semiring: str = "plus_times") -> None:
-    """Trace-time guard: a cached layout must match the weighting,
-    orientation and semiring the sweep was built for, else its baked
-    weights silently mis-weight the propagation (e.g. an algorithm
-    overriding ``layout_specs`` without overriding the consuming method).
+    """Trace-time guard: a cached layout (single or sharded — both carry
+    the same static metadata) must match the weighting, orientation and
+    semiring the sweep was built for, else its baked weights silently
+    mis-weight the propagation (e.g. an algorithm overriding
+    ``layout_specs`` without overriding the consuming method).
     ``None`` passes — sweeps fall back to building/unsorted paths."""
     want_s = resolve_semiring(semiring).name
     if layout is not None and (layout.weight_mode != weight
@@ -309,7 +420,7 @@ def normalize_layout_spec(spec) -> tuple:
 
 def push(
     values: jax.Array,
-    layout: EdgeLayout,
+    layout: AnyEdgeLayout,
     *,
     semiring: Union[str, Semiring] = "plus_times",
     backend: Optional[str] = None,
@@ -330,15 +441,25 @@ def push(
     masked-reduce kernel variant (or XLA segment-min/max on the
     ``segment_sum`` backend).
 
+    ``layout`` may be a single :class:`EdgeLayout` or a
+    :class:`ShardedEdgeLayout` — the sharded form runs one partial push
+    per shard (the same per-shard kernel, either backend) completed by the
+    semiring's all-reduce, ``shard_map``-ed over the layout's mesh when it
+    carries one and looped on-device otherwise.
+
     ``values`` lives in the layout's *node* space (global ids for full-graph
     layouts, local hot ids for summary layouts); the result has
     ``layout.num_segments`` entries.  Receivers with no (unmasked) in-edge
     get the semiring's ⊕-identity (0 / +∞ / −∞).  ``mask`` optionally
-    filters edges in the layout's sorted order (e.g. the E_B selection in
-    the big-vertex pass).  Traced inline — call from inside jitted sweeps;
+    filters edges in the layout's sorted order (shape ``[E_pad]``, or
+    ``[S, E_pad]`` for sharded layouts — e.g. the E_B selection in the
+    big-vertex pass).  Traced inline — call from inside jitted sweeps;
     ``backend``/``semiring`` must be Python values at trace time.
     """
     s = resolve_semiring(semiring)
+    if isinstance(layout, ShardedEdgeLayout):
+        return _push_sharded(values, layout, s=s, backend=backend, mask=mask,
+                             tile_n=tile_n, chunk=chunk, interpret=interpret)
     if layout.semiring != s.name:
         raise ValueError(
             f"push(semiring={s.name!r}) over a layout built for "
@@ -394,6 +515,109 @@ def push(
     return out[:num_segments]
 
 
+def _shard_view(layout: ShardedEdgeLayout, i, src, dst, w, valid,
+                ro) -> EdgeLayout:
+    """Shard ``i`` of the stacked arrays as a plain :class:`EdgeLayout`
+    (same static metadata), ready for the single-shard :func:`push`."""
+    return EdgeLayout(
+        src[i], dst[i], w[i], valid[i], ro[i], None,
+        weight_mode=layout.weight_mode, reverse=layout.reverse,
+        pad_chunk=layout.pad_chunk, semiring=layout.semiring)
+
+
+def _push_sharded(
+    values: jax.Array,
+    layout: ShardedEdgeLayout,
+    *,
+    s: Semiring,
+    backend: Optional[str],
+    mask: Optional[jax.Array],
+    tile_n: int,
+    chunk: int,
+    interpret: Optional[bool],
+) -> jax.Array:
+    """Sharded form of :func:`push`: per-shard partial push + ⊕ all-reduce.
+
+    Each shard's stream is locally destination-sorted, so the shard-local
+    reduce is the ordinary single-shard push (either backend, including
+    the Pallas kernels); shard partials are dense ``[num_segments]``
+    vectors merged by the semiring's ⊕ — ``lax.psum``/``pmin``/``pmax``
+    across the mesh axes when the layout carries a mesh, an on-device
+    merge loop otherwise.  min/max semirings are reassociation-exact, so
+    the sharded result is *bitwise* equal to the single-layout push; sum
+    semirings differ only by f32 summation order.
+    """
+    if layout.semiring != s.name:
+        raise ValueError(
+            f"push(semiring={s.name!r}) over a sharded layout built for "
+            f"{layout.semiring!r}; rebuild the layout for this semiring")
+    backend = resolve_backend(backend)
+    num_shards = layout.num_shards
+    if mask is not None and mask.shape != layout.dst.shape:
+        raise ValueError(
+            f"sharded push mask must cover the sharded sorted stream "
+            f"{layout.dst.shape}; got {mask.shape}")
+
+    def local_push(values, src, dst, w, valid, ro, m, lo, hi):
+        """⊕-merge of shards [lo, hi) resident on this device."""
+        part = None
+        for i in range(lo, hi):
+            one = push(values, _shard_view(layout, i, src, dst, w, valid, ro),
+                       semiring=s, backend=backend,
+                       mask=None if m is None else m[i],
+                       tile_n=tile_n, chunk=chunk, interpret=interpret)
+            part = one if part is None else s.merge(part, one)
+        return part
+
+    if layout.mesh is None:
+        return local_push(values, layout.src, layout.dst, layout.weight,
+                          layout.valid, layout.row_offsets, mask,
+                          0, num_shards)
+
+    mesh, axes = layout.mesh, layout.axes
+    n_dev = 1
+    for a in axes:
+        n_dev *= mesh.shape[a]
+    if num_shards % n_dev:
+        raise ValueError(
+            f"sharded layout has {num_shards} shards over {n_dev} devices "
+            f"(mesh axes {axes}); shards must divide evenly")
+    per_dev = num_shards // n_dev
+
+    def mapped(values, src, dst, w, valid, ro, *rest):
+        m = rest[0] if rest else None
+        part = local_push(values, src, dst, w, valid, ro, m, 0, per_dev)
+        return s.all_reduce(part, axes)
+
+    args = [values, layout.src, layout.dst, layout.weight, layout.valid,
+            layout.row_offsets]
+    in_specs = [P()] + [P(axes)] * 5
+    if mask is not None:
+        args.append(mask)
+        in_specs.append(P(axes))
+    # check_rep=False: the pallas kernels inside each shard have no
+    # replication rule, but the all-reduce makes the output replicated by
+    # construction
+    fn = _shard_map(mapped, mesh=mesh, in_specs=tuple(in_specs),
+                    out_specs=P(), check_rep=False)
+    return fn(*args)
+
+
+#: trace-time invocation counters (``push_coo`` today) — observability for
+#: "the compiled program contains zero unsorted pushes": counters tick when
+#: a Python call traces the primitive, so lowering a program fresh and
+#: reading the counter delta tells whether the unsorted fallback is in it.
+_TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+def trace_count(name: str) -> int:
+    return _TRACE_COUNTS[name]
+
+
+def reset_trace_counts() -> None:
+    _TRACE_COUNTS.clear()
+
+
 def push_coo(
     values: jax.Array,
     src: jax.Array,
@@ -406,13 +630,15 @@ def push_coo(
 ) -> jax.Array:
     """Unsorted-COO fallback for callers with no layout at hand.
 
-    A plain XLA segment-sum/min/max — today's cost model when no cached
-    layout exists (e.g. the sharded dry-run lowering, where a pod-scale
-    argsort would defeat GSPMD's edge sharding).  ``weight`` is the raw
-    ⊗-operand per edge in the caller's (unsorted) edge order; masked edges
+    A plain XLA segment-sum/min/max over the caller's (unsorted) edge
+    order.  ``weight`` is the raw ⊗-operand per edge; masked edges
     contribute the semiring's ⊕-identity.  Prefer :func:`push` with a
-    cached layout everywhere else.
+    cached (possibly sharded) layout everywhere else — since the sharded
+    layouts landed, no engine/dry-run hot loop goes through here
+    (:func:`trace_count` ``("push_coo")`` is how tests and the dry-run
+    assert that).
     """
+    _TRACE_COUNTS["push_coo"] += 1
     s = resolve_semiring(semiring)
     contrib = values[src]
     if weight is not None:
@@ -426,12 +652,18 @@ __all__ = [
     "BACKENDS",
     "BACKEND_ENV_VAR",
     "WEIGHT_MODES",
+    "AnyEdgeLayout",
     "EdgeLayout",
     "Semiring",
+    "bake_weights",
+    "padded_length",
+    "ShardedEdgeLayout",
     "SortedEdges",
     "build_layout",
     "default_interpret",
     "normalize_layout_spec",
+    "reset_trace_counts",
+    "trace_count",
     "validate_weight_spec",
     "push",
     "push_coo",

@@ -74,6 +74,13 @@ class EngineConfig:
     # or "auto" (per device, overridable via $VEILGRAPH_BACKEND) — see
     # repro.core.backend
     backend: str = "auto"
+    # device mesh for sharded execution: edge layouts are cut into one
+    # locally-sorted shard per device over `mesh_axes` (default: every mesh
+    # axis) and every O(E) sweep runs as a shard_map partial push + semiring
+    # all-reduce; None = single-layout execution.  See
+    # repro.graph.partition.build_sharded_layout
+    mesh: Optional["jax.sharding.Mesh"] = None
+    mesh_axes: Optional[Tuple[str, ...]] = None
 
 
 @dataclass
@@ -282,12 +289,31 @@ class VeilGraphEngine:
         return self._pending_count
 
     # ---- internals -----------------------------------------------------------
-    def edge_layouts(self) -> Tuple[B.EdgeLayout, ...]:
+    def edge_layouts(self) -> Tuple[B.AnyEdgeLayout, ...]:
         """Sorted edge layouts per ``algorithm.layout_specs`` — built at most
-        once per applied update batch (graph mutations invalidate them)."""
+        once per applied update batch (graph mutations invalidate them).
+
+        With ``config.mesh`` set, each cached entry is a
+        :class:`~repro.core.backend.ShardedEdgeLayout` — one locally-sorted
+        stream *per shard*, so the amortized sort cost is paid (and cached)
+        per shard, never across shards — and every consuming sweep runs
+        through the shard_map-ed push automatically.
+        """
         if self._edge_layouts is None:
+            if self.config.mesh is not None:
+                from repro.graph.partition import (build_sharded_layout,
+                                                   place_sharded_layout)
+
+                build = lambda w, rev, s: place_sharded_layout(
+                    build_sharded_layout(
+                        self.state, mesh=self.config.mesh,
+                        axes=self.config.mesh_axes, weight=w, reverse=rev,
+                        semiring=s))
+            else:
+                build = lambda w, rev, s: B.build_layout(
+                    self.state, weight=w, reverse=rev, semiring=s)
             self._edge_layouts = tuple(
-                B.build_layout(self.state, weight=w, reverse=rev, semiring=s)
+                build(w, rev, s)
                 for (w, rev, s) in map(B.normalize_layout_spec,
                                        self.algorithm.layout_specs)
             )

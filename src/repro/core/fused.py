@@ -9,12 +9,18 @@ multi-pod dry-run lowers for the `veilgraph-pagerank` workload:
 Differences vs the unfused engine path:
 - one XLA program per query (no host round-trips between selection, summary
   construction and power iterations);
-- the overflow fallback (|K| or |E_K| over capacity -> exact recompute) is a
-  ``lax.cond`` so the decision stays on device;
-- with ``sharded=True`` callers pjit this function over a mesh with edge
-  arrays sharded along the flattened mesh axes; node vectors stay replicated
-  (the TPU analogue of Pregel's vertex-cut message exchange — the
-  per-iteration segment-sum lowers to a local partial sum + one all-reduce).
+- the overflow fallback (|K| or |E_K| over capacity -> exact recompute)
+  stays a device-side flag: the summarized result is computed
+  unconditionally and the caller discards it and recomputes exactly when
+  ``used_fallback`` reads back True (the engine does this on host);
+- the algorithm-generic :func:`fused_query_step` is mesh-aware: pass
+  cached :class:`~repro.core.backend.ShardedEdgeLayout` s (the engine
+  does when configured with a mesh) or ``mesh=``/``mesh_axes=`` to build
+  them inline, and every O(E) pass — the frozen big-vertex boundary and
+  the exact sweeps — runs as a shard_map partial push + semiring
+  all-reduce over per-shard locally-sorted edge streams, with node
+  vectors replicated (the TPU analogue of Pregel's vertex-cut message
+  exchange).  No unsorted ``push_coo`` remains in the lowered hot loop.
 """
 
 from __future__ import annotations
@@ -120,6 +126,7 @@ def approximate_query_step(
     static_argnames=(
         "algo", "hot_node_capacity", "hot_edge_capacity",
         "n", "delta_hop_cap", "degree_mode", "expand_both", "backend",
+        "mesh", "mesh_axes",
     ),
 )
 def fused_query_step(
@@ -139,6 +146,8 @@ def fused_query_step(
     expand_both: bool = False,
     layouts=None,
     backend: str | None = None,
+    mesh=None,
+    mesh_axes=None,
 ):
     """One summarized query for *any* :class:`StreamingAlgorithm`.
 
@@ -148,19 +157,37 @@ def fused_query_step(
     restricted power sweep compile to a single XLA program per
     (algorithm, capacities) pair — the PageRank-specific
     :func:`approximate_query_step` above is the ``algo=PageRankAlgorithm``
-    specialization of this (kept for the dry-run/bench harnesses that lower
-    it directly).
+    specialization of this (kept for the bench harnesses that lower it
+    directly).
 
     ``layouts`` is the cached edge-layout tuple matching
     ``algo.layout_specs`` (the engine builds it once per applied update
-    batch); ``backend`` picks the propagation implementation for the
-    summarized sweep and the frozen big-vertex pass.
+    batch) — single :class:`~repro.core.backend.EdgeLayout` s or, under a
+    mesh-configured engine, :class:`~repro.core.backend.ShardedEdgeLayout`
+    s, which route the frozen big-vertex pass through the shard_map-ed
+    partial push.  ``mesh``/``mesh_axes`` (static) cover the cache-less
+    caller — the multi-pod dry-run: with ``layouts=None`` and a mesh, the
+    per-shard locally-sorted layouts are built inline (S independent
+    axis-1 sorts, communication-free under GSPMD edge sharding), so the
+    whole query step compiles sharded with zero unsorted ``push_coo``
+    calls.  ``backend`` picks the propagation implementation inside each
+    shard for the summarized sweep and the frozen big-vertex pass.
 
     Returns ``(new_algo_state, QueryStepStats)``.  Like the specialized
     path, overflow does not branch on device — the caller discards
     ``new_algo_state`` and recomputes exactly when ``used_fallback`` is set.
     """
     from repro.core.algorithm import summaries_overflow
+    from repro.core.backend import normalize_layout_spec
+
+    if layouts is None and mesh is not None:
+        from repro.graph.partition import build_sharded_layout
+
+        layouts = tuple(
+            build_sharded_layout(state, mesh=mesh, axes=mesh_axes,
+                                 weight=w, reverse=rev, semiring=s)
+            for (w, rev, s) in map(normalize_layout_spec,
+                                   algo.layout_specs))
 
     scores = algo.selection_view(algo_state)
     hot, hstats = select_hot_set(

@@ -55,6 +55,12 @@ import numpy as np
 ADD_OPS = ("sum", "min", "max")
 #: ⊗ combine kinds.
 MUL_OPS = ("times", "plus", "min")
+#: ⊕ reduce → cross-device collective.  The sharded push backend computes a
+#: per-shard partial reduce and merges partials with this collective — the
+#: all-reduce is the distributed half of the same ⊕, so semirings whose
+#: reduce is reassociation-exact (min/max) stay *bitwise* identical under
+#: sharding while sum semirings differ only by f32 summation order.
+COLLECTIVES = {"sum": "psum", "min": "pmin", "max": "pmax"}
 
 
 def _identity(op: str, dtype: np.dtype, *, lower: bool):
@@ -131,6 +137,30 @@ class Semiring:
         return op(contrib, segments, num_segments=num_segments,
                   indices_are_sorted=indices_are_sorted)
 
+    # ---- distributed ⊕ ---------------------------------------------------
+    @property
+    def collective(self) -> str:
+        """Name of the all-reduce that completes a sharded ⊕
+        (``psum``/``pmin``/``pmax`` — see :data:`COLLECTIVES`)."""
+        return COLLECTIVES[self.add]
+
+    def merge(self, x: jax.Array, y: jax.Array) -> jax.Array:
+        """⊕ of two partial reduces (elementwise, traced inline) — how two
+        shards' partial push results combine on one device."""
+        if self.add == "sum":
+            return x + y
+        if self.add == "min":
+            return jnp.minimum(x, y)
+        return jnp.maximum(x, y)
+
+    def all_reduce(self, x: jax.Array, axis_name) -> jax.Array:
+        """⊕ all-reduce across mapped mesh axes (inside ``shard_map``):
+        the cross-device merge of per-shard partial pushes.  ``axis_name``
+        is a mesh axis name or tuple of names.  Resolves through
+        :attr:`collective`, so :data:`COLLECTIVES` is the single ⊕ →
+        collective mapping."""
+        return getattr(jax.lax, self.collective)(x, axis_name)
+
 
 # ---------------------------------------------------------------------------
 # Registry
@@ -173,6 +203,7 @@ MAX_TIMES = register_semiring(Semiring("max_times", "max", "times",
 
 __all__ = [
     "ADD_OPS",
+    "COLLECTIVES",
     "MUL_OPS",
     "MAX_TIMES",
     "MIN_MIN",

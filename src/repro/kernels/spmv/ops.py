@@ -17,11 +17,12 @@ layout amortizes away.
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 
-from repro.core.backend import EdgeLayout, build_layout, push
+from repro.core.backend import (AnyEdgeLayout, EdgeLayout, build_layout,
+                                push)
 from repro.graph.graph import GraphState
 from repro.kernels.spmv.kernel import CHUNK, TILE_N  # noqa: F401  (re-export)
 
@@ -44,6 +45,32 @@ def semiring_push(state: GraphState, values: jax.Array, *,
         layout = build_layout(state, weight=weight, semiring=semiring,
                               chunk=chunk)
     return push(values, layout, semiring=semiring, backend="pallas",
+                tile_n=tile_n, chunk=chunk, interpret=interpret)
+
+
+def sharded_semiring_push(state: GraphState, values: jax.Array, *,
+                          mesh=None,
+                          axes: Optional[Tuple[str, ...]] = None,
+                          num_shards: Optional[int] = None,
+                          semiring: str = "plus_times",
+                          weight: str = "unit",
+                          backend: Optional[str] = "pallas",
+                          interpret: Optional[bool] = True,
+                          layout: Optional[AnyEdgeLayout] = None,
+                          tile_n: int = TILE_N,
+                          chunk: int = CHUNK) -> jax.Array:
+    """:func:`semiring_push` over a device mesh: builds (or accepts) a
+    per-shard destination-sorted :class:`ShardedEdgeLayout` and runs the
+    shard_map-ed partial-push + semiring all-reduce.  ``mesh=None`` with
+    ``num_shards`` runs the same partition as an on-device loop (the
+    reference semantics / bench path).  Not jitted — layout construction
+    happens per call; repeated pushes should build the layout once."""
+    if layout is None:
+        from repro.graph.partition import build_sharded_layout
+        layout = build_sharded_layout(
+            state, mesh=mesh, axes=axes, num_shards=num_shards,
+            weight=weight, semiring=semiring, chunk=chunk)
+    return push(values, layout, semiring=semiring, backend=backend,
                 tile_n=tile_n, chunk=chunk, interpret=interpret)
 
 

@@ -100,11 +100,23 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
     return rec
 
 
-def run_veilgraph_cell(mesh, mesh_name: str, *, nodes=2**25, edges=2**30) -> dict:
+def run_veilgraph_cell(mesh, mesh_name: str, *, nodes=2**25, edges=2**30,
+                       backend: str = "auto") -> dict:
     """The paper-representative workload: one fused summarized-PageRank query
-    over a pod-scale streaming graph (edges sharded over the whole mesh)."""
+    over a pod-scale streaming graph, through the *sharded plugin path* —
+    ``fused_query_step`` with ``mesh=`` builds one locally-sorted edge shard
+    per device inline (a contiguous reshape of the 1-D edge sharding, then S
+    independent axis-1 sorts) and runs every O(E) pass as a shard_map
+    partial push + all-reduce.  The lowering is asserted to trace **zero**
+    unsorted ``push_coo`` calls — the pre-sharded cost model this replaced.
+
+    ``backend`` picks the per-shard propagation kernels ("auto" resolves
+    per device: TPU → the Pallas MXU/VPU kernels inside each shard,
+    otherwise the sorted segment-sum path)."""
     import jax.numpy as jnp
-    from repro.core.fused import approximate_query_step
+    from repro.core import backend as B
+    from repro.core.algorithm import PageRankAlgorithm
+    from repro.core.fused import fused_query_step
     from repro.graph.graph import GraphState
     from repro.sharding.rules import guarded_pspec
 
@@ -126,25 +138,34 @@ def run_veilgraph_cell(mesh, mesh_name: str, *, nodes=2**25, edges=2**30) -> dic
     state_ps = GraphState(
         src=e_spec, dst=e_spec, edge_alive=e_spec, num_edges=P(),
         out_deg=n_spec, in_deg=n_spec, node_active=n_spec)
-    ranks_sds = jax.ShapeDtypeStruct((nodes,), jnp.float32)
+    algo_sds = {"ranks": jax.ShapeDtypeStruct((nodes,), jnp.float32)}
     deg_sds = jax.ShapeDtypeStruct((nodes,), jnp.int32)
     act_sds = jax.ShapeDtypeStruct((nodes,), jnp.bool_)
     scal = jax.ShapeDtypeStruct((), jnp.float32)
+    algo = PageRankAlgorithm(num_iters=30, tol=1e-6)
+    backend_r = B.resolve_backend(backend)
 
     t0 = time.time()
     try:
         with mesh:
             with axis_rules(rules):
-                fn = lambda st, r, dp, ap, rr, dd: approximate_query_step(
-                    st, r, dp, ap, rr, dd,
-                    hot_node_capacity=2**21, hot_edge_capacity=2**26,
-                    num_iters=30, tol=1e-6, n=1)
+                fn = lambda st, a, dp, ap, rr, dd: fused_query_step(
+                    st, a, dp, ap, rr, dd, algo=algo,
+                    hot_node_capacity=2**21, hot_edge_capacity=2**26, n=1,
+                    backend=backend_r, mesh=mesh)
                 jitted = jax.jit(
                     fn,
                     in_shardings=(_ns(mesh, state_ps), None, None, None, None, None),
                 )
-                lowered = jitted.lower(state_sds, ranks_sds, deg_sds, act_sds,
+                B.reset_trace_counts()
+                lowered = jitted.lower(state_sds, algo_sds, deg_sds, act_sds,
                                        scal, scal)
+                push_coo_traces = B.trace_count("push_coo")
+                if push_coo_traces:
+                    raise AssertionError(
+                        f"sharded plugin path traced {push_coo_traces} "
+                        f"unsorted push_coo call(s); the lowered hot loop "
+                        f"must be cached-layout pushes only")
                 t_lower = time.time() - t0
                 compiled = lowered.compile()
                 t_compile = time.time() - t0 - t_lower
@@ -163,6 +184,7 @@ def run_veilgraph_cell(mesh, mesh_name: str, *, nodes=2**25, edges=2**30) -> dic
         useful = 2.0 * (6 * edges + 30 * 2**26)
         rec.update(status="ok", lower_s=round(t_lower, 1),
                    compile_s=round(t_compile, 1),
+                   backend=backend_r, push_coo_traces=push_coo_traces,
                    roofline={
                        "arch": "veilgraph-pagerank", "shape": rec["shape"],
                        "mesh": mesh_name, "chips": chips,
@@ -199,6 +221,10 @@ def main(argv=None):
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--workload", type=str, default="lm",
                     choices=["lm", "veilgraph"])
+    ap.add_argument("--backend", type=str, default="auto",
+                    choices=["auto", "pallas", "segment_sum"],
+                    help="per-shard propagation kernels for the veilgraph "
+                    "workload (auto: TPU → pallas)")
     args = ap.parse_args(argv)
 
     mesh = make_production_mesh(multi_pod=args.mesh == "multi")
@@ -208,7 +234,7 @@ def main(argv=None):
           f"({mesh.devices.size} devices)")
 
     if args.workload == "veilgraph":
-        rec = run_veilgraph_cell(mesh, args.mesh)
+        rec = run_veilgraph_cell(mesh, args.mesh, backend=args.backend)
         (out_dir / "veilgraph__pagerank.json").write_text(json.dumps(rec, indent=1))
         print(json.dumps({k: rec[k] for k in ("arch", "status")}, indent=1))
         return 0 if rec["status"] == "ok" else 1

@@ -1,0 +1,76 @@
+"""Pin the fused query step's overflow fallback contract.
+
+``approximate_query_step`` computes the summarized result unconditionally
+and reports capacity overflow in ``stats.used_fallback`` — the caller's
+side of the contract (the engine's) is to *discard* the summarized ranks
+and recompute exactly.  No test exercised the overflow leg of the fused
+path before; both legs are pinned here against exact PageRank.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fused import approximate_query_step
+from repro.core.pagerank import pagerank
+from repro.graph import from_edges
+from repro.graph.generators import gnm_edges
+
+TOL = dict(rtol=1e-5, atol=1e-6)
+
+
+def _fixture(n=300, m=2000, seed=0):
+    src, dst = gnm_edges(n, m, seed=seed)
+    g = from_edges(src, dst, n, m + 64)
+    ranks, _ = pagerank(g, num_iters=8)
+    return g, ranks, jnp.copy(g.out_deg), jnp.copy(g.node_active)
+
+
+def test_overflow_sets_used_fallback_and_caller_recomputes_exact():
+    g, ranks, deg, act = _fixture()
+    # a zero degree snapshot marks every active vertex as changed
+    # -> |K| = all active >> capacity 16
+    new_ranks, stats = approximate_query_step(
+        g, ranks, jnp.zeros_like(deg), act, jnp.float32(0.0),
+        jnp.float32(0.1), hot_node_capacity=16, hot_edge_capacity=64,
+        num_iters=8)
+    assert bool(stats.used_fallback)
+    assert int(stats.num_hot) > 16
+    # the summarized ranks were still computed (overflow does not branch on
+    # device) and stay well-formed — but the caller must discard them and
+    # serve the exact recompute (the engine leg below pins that end to end)
+    assert new_ranks.shape == ranks.shape
+    assert bool(jnp.all(jnp.isfinite(new_ranks)))
+
+
+def test_no_overflow_with_full_capacities_matches_exact():
+    """At full coverage (hot set = every active vertex, r=0) the summarized
+    sweep must reproduce exact PageRank — the non-overflow leg."""
+    g, ranks, deg, act = _fixture(seed=1)
+    new_ranks, stats = approximate_query_step(
+        g, ranks, jnp.zeros_like(deg), act, jnp.float32(0.0),
+        jnp.float32(0.1), hot_node_capacity=g.node_capacity,
+        hot_edge_capacity=g.edge_capacity, num_iters=30, tol=1e-7)
+    assert not bool(stats.used_fallback)
+    assert int(stats.num_hot) == int(g.num_active_nodes())
+    exact, _ = pagerank(g, num_iters=30, tol=1e-7)
+    np.testing.assert_allclose(np.asarray(new_ranks), np.asarray(exact),
+                               **TOL)
+
+
+def test_engine_discards_summarized_state_on_fused_overflow():
+    """Engine-side of the contract through the fused path: capacities
+    exceeded -> overflow_fallback recorded and the served ranks are the
+    exact recomputation, not the truncated summarized state."""
+    import repro
+
+    src, dst = gnm_edges(250, 1500, seed=2)
+    with repro.session((src, dst), algorithm="pagerank", num_iters=12,
+                       hot_node_capacity=8, hot_edge_capacity=32,
+                       r=0.0, delta=1e-6, fused=True) as s:
+        assert s.engine.config.fused
+        s.add_edges([0, 1, 2], [3, 4, 5])
+        res = s.query()
+        assert res.stats.overflow_fallback
+        assert res.action == "compute-approximate"
+        exact, _ = pagerank(s.engine.state, num_iters=12)
+        np.testing.assert_allclose(res.scores, np.asarray(exact), **TOL)

@@ -1,0 +1,124 @@
+"""Property-based tests for the edge partition behind sharded layouts.
+
+On random graphs (including empty graphs, singleton shards and more shards
+than edges) the partition must be exactly that — a partition:
+
+- every live edge slot lands in exactly one shard (and padding in none);
+- each shard's stream is destination-sorted *locally*, with per-shard
+  ``row_offsets`` consistent with it;
+- the ⊕-merge of the per-shard partial pushes equals the unsorted
+  ``push_coo`` reference over the whole edge set.
+
+Runs with the real ``hypothesis`` when installed, or the deterministic
+shim from ``tests/_hypothesis_compat.py`` otherwise.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import backend as B
+from repro.core.semiring import resolve_semiring
+from repro.graph import from_edges
+from repro.graph.partition import build_sharded_layout, shard_slots
+
+
+def _random_graph(rng, n, m, e_extra):
+    src = rng.integers(0, n, m).astype(np.int32)
+    dst = rng.integers(0, n, m).astype(np.int32)
+    return from_edges(src, dst, n, m + e_extra)
+
+
+def test_shard_slots_partition_the_slot_space():
+    for e_cap, s in [(10, 3), (8, 8), (5, 12), (1, 1), (7, 1)]:
+        slots = shard_slots(e_cap, s)
+        assert slots.shape[0] == s
+        real = slots[slots < e_cap]
+        np.testing.assert_array_equal(np.sort(real), np.arange(e_cap))
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(2, 60), m=st.integers(0, 150),
+       num_shards=st.integers(1, 12), seed=st.integers(0, 10_000),
+       semiring=st.sampled_from(["plus_times", "min_plus", "min_min",
+                                 "max_times"]))
+def test_every_edge_lands_in_exactly_one_shard(n, m, num_shards, seed,
+                                               semiring):
+    rng = np.random.default_rng(seed)
+    g = _random_graph(rng, n, m, e_extra=5)
+    weight = "inv_out" if semiring == "plus_times" else "unit"
+    lay = build_sharded_layout(g, num_shards=num_shards, weight=weight,
+                               semiring=semiring)
+    order = np.asarray(lay.order)
+    valid = np.asarray(lay.valid)
+    # the valid positions' original slots are exactly the live slots, once
+    live = np.flatnonzero(np.asarray(g.edge_mask()))
+    np.testing.assert_array_equal(np.sort(order[valid]), live)
+    # padding/invalid positions never alias a live slot into a second shard
+    assert not np.isin(order[~valid], live).any()
+    # shard_slots is the oracle for the partition the layout actually
+    # applied: per shard, the layout's (sort-permuted) slot set equals it
+    slots = shard_slots(g.edge_capacity, num_shards)
+    e_cap = g.edge_capacity
+    for s_i in range(num_shards):
+        np.testing.assert_array_equal(
+            np.unique(order[s_i][order[s_i] < e_cap]),
+            np.unique(slots[s_i][slots[s_i] < e_cap]))
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(2, 60), m=st.integers(0, 150),
+       num_shards=st.integers(1, 12), seed=st.integers(0, 10_000))
+def test_each_shard_is_destination_sorted(n, m, num_shards, seed):
+    rng = np.random.default_rng(seed)
+    g = _random_graph(rng, n, m, e_extra=3)
+    lay = build_sharded_layout(g, num_shards=num_shards, weight="unit",
+                               semiring="min_min")
+    dst = np.asarray(lay.dst)
+    valid = np.asarray(lay.valid)
+    ro = np.asarray(lay.row_offsets)
+    assert (np.diff(dst, axis=1) >= 0).all()  # sentinel N sorts last
+    assert (dst[~valid] == g.node_capacity).all()
+    for s in range(dst.shape[0]):
+        assert ro[s, 0] == 0 and ro[s, -1] == int(valid[s].sum())
+        for v in (0, n // 2, n - 1):
+            assert (dst[s, ro[s, v]:ro[s, v + 1]] == v).all()
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(2, 50), m=st.integers(0, 120),
+       num_shards=st.integers(1, 10), seed=st.integers(0, 10_000),
+       semiring=st.sampled_from(["plus_times", "min_plus", "min_min",
+                                 "max_times"]))
+def test_merged_shard_pushes_equal_push_coo(n, m, num_shards, seed,
+                                            semiring):
+    """⊕ over per-shard partials == one unsorted reduce over all edges —
+    the single-device anchor the distributed all-reduce is pinned to
+    (bitwise for the min semirings, f32-order tolerance for sums)."""
+    s = resolve_semiring(semiring)
+    rng = np.random.default_rng(seed)
+    g = _random_graph(rng, n, m, e_extra=4)
+    weight = "inv_out" if semiring == "plus_times" else "unit"
+    if np.issubdtype(s.np_dtype, np.floating):
+        values = jnp.asarray(rng.random(n).astype(s.np_dtype))
+    else:
+        values = jnp.asarray(rng.integers(0, n, n).astype(s.np_dtype))
+    lay = build_sharded_layout(g, num_shards=num_shards, weight=weight,
+                               semiring=semiring)
+    out = B.push(values, lay, semiring=semiring, backend="segment_sum")
+
+    mask = g.edge_mask()
+    if weight == "inv_out":
+        from repro.graph.graph import inv_out_degree
+        w = jnp.where(mask, inv_out_degree(g)[g.src], 0.0)
+    else:
+        w = jnp.where(mask, jnp.asarray(s.one, s.dtype),
+                      jnp.asarray(s.zero, s.dtype))
+    ref = B.push_coo(values, g.src, g.dst, n, weight=w, mask=mask,
+                     semiring=semiring)
+    assert out.dtype == ref.dtype
+    if s.add == "min":
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    else:
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-6)
