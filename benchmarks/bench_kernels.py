@@ -119,15 +119,77 @@ def _sharded_cases(g, ranks, live_edges, *, iters, shard_counts=(2, 4, 8)):
     return cases
 
 
+def _sharded_summary_cases(g, ranks, *, iters, sweep_iters, num_shards=8):
+    """Sharded-summary + rebalance rows: the distributed-bucket-sort
+    ``build_summary`` (vs the replicated compaction, same hot mask), the
+    summarized sweep over the resulting per-shard E_K layout, and the
+    rebalance recut (counts + imbalance + balanced re-deal).  Mesh path
+    when the process has the devices, the shard-loop reference otherwise —
+    the tag records which, mirroring the sharded-push rows."""
+    from jax.sharding import Mesh
+    from repro.core.pagerank import build_summary, summarized_pagerank
+    from repro.graph.partition import (balanced_shard_slots,
+                                       build_sharded_layout,
+                                       place_sharded_layout,
+                                       rebalance_sharded_layout)
+
+    nodes = g.node_capacity
+    mesh = None
+    if jax.device_count() >= num_shards:
+        mesh = Mesh(np.asarray(jax.devices()[:num_shards]), ("shards",))
+    tag = "mesh" if mesh is not None else "loop"
+    layout_s = place_sharded_layout(build_sharded_layout(
+        g, mesh=mesh, num_shards=num_shards, weight="inv_out"))
+    hot = jnp.asarray(np.random.default_rng(0).random(nodes) < 0.15)
+    caps = dict(hot_node_capacity=8192, hot_edge_capacity=65536)
+
+    cases = []
+    build_rep = jax.jit(lambda s, r, h: build_summary(s, r, h, **caps))
+    us = _bench(build_rep, g, ranks, hot, iters=iters, warmup=1)
+    cases.append(("build_summary_replicated", us, "E-space compaction"))
+    build_sh = jax.jit(lambda s, r, h, lay: build_summary(
+        s, r, h, **caps, layout=lay))
+    us = _bench(build_sh, g, ranks, hot, layout_s, iters=iters, warmup=1)
+    cases.append((f"build_summary_sharded_s{num_shards}_{tag}", us,
+                  "distributed bucket sort"))
+
+    summary_s = build_summary(g, ranks, hot, **caps, layout=layout_s)
+    fn = jax.jit(lambda s, r: summarized_pagerank(
+        s, r, num_iters=sweep_iters)[0])
+    us = _bench(fn, summary_s, ranks, iters=iters, warmup=1)
+    cases.append((f"summarized_sweep_sharded_s{num_shards}_{tag}_"
+                  f"{sweep_iters}it", us,
+                  f"|K|={int(summary_s.num_hot)},"
+                  f"|E_K|={int(summary_s.num_ek)}"))
+
+    recut = jax.jit(lambda s: balanced_shard_slots(s, num_shards=num_shards))
+    us = _bench(recut, g, iters=iters, warmup=1)
+    cases.append((f"rebalance_recut_s{num_shards}", us,
+                  "balanced_shard_slots deal"))
+    # the full detect-and-recut front door, host round-trip included (what
+    # the engine pays once per applied update batch); warm up once so the
+    # row measures steady state, not jit compilation, like every other row
+    rebalance_sharded_layout(g, num_shards=num_shards, threshold=0.0)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        _, rebalanced, imb = rebalance_sharded_layout(
+            g, num_shards=num_shards, threshold=0.0)
+    us = (time.perf_counter() - t0) / iters * 1e6
+    cases.append((f"rebalance_detect_s{num_shards}", us,
+                  f"imbalance={imb:.3f},recut={rebalanced}"))
+    return cases
+
+
 def bench_sweep_backends(*, smoke: bool = False, nodes=50_000, edges=500_000):
     """Backend-vs-backend rows: a plus_times push + summarized PageRank
     sweep, and a min_plus push + summarized SSSP sweep, per backend on the
     500k-edge reference graph, plus sharded-push rows over 2/4/8 host
-    shards.  The pallas rows run in interpret mode off-TPU — they track
-    kernel-logic cost trajectory, not TPU wall time (the dry-run covers
-    that); the min_plus rows exercise the masked-reduce kernel variant
-    instead of the one-hot matmul.  Returns (rows, records); the records
-    feed BENCH_sweeps.json.
+    shards and the sharded-summary / rebalance rows (distributed bucket
+    sort vs replicated compaction, recut cost).  The pallas rows run in
+    interpret mode off-TPU — they track kernel-logic cost trajectory, not
+    TPU wall time (the dry-run covers that); the min_plus rows exercise
+    the masked-reduce kernel variant instead of the one-hot matmul.
+    Returns (rows, records); the records feed BENCH_sweeps.json.
     """
     from repro.core import backend as B
     from repro.core.pagerank import summarized_pagerank
@@ -166,6 +228,8 @@ def bench_sweep_backends(*, smoke: bool = False, nodes=50_000, edges=500_000):
                       f"|K|={int(mp_summary.num_hot)},"
                       f"|E_K|={int(mp_summary.num_ek)}"))
     cases.extend(_sharded_cases(g, ranks, live_edges, iters=iters))
+    cases.extend(_sharded_summary_cases(g, ranks, iters=iters,
+                                        sweep_iters=sweep_iters))
     records = [
         {"name": name, "us_per_call": round(us, 1), "derived": derived}
         for name, us, derived in cases

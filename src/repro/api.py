@@ -154,6 +154,8 @@ class VeilGraphSession:
     # ---- convenience views ----------------------------------------------
     @property
     def algorithm(self) -> StreamingAlgorithm:
+        """The resolved :class:`StreamingAlgorithm` instance the engine
+        runs (frozen dataclass — its knobs are readable fields)."""
         return self.engine.algorithm
 
     @property
@@ -163,9 +165,15 @@ class VeilGraphSession:
 
     @property
     def stats_log(self):
+        """Engine-accumulated :class:`~repro.core.engine.QueryStats`, one
+        row per served query (index -1 = the initial exact compute)."""
         return self.engine.stats_log
 
     def top(self, k: int = 10) -> np.ndarray:
+        """Ids of the k best-ranked vertices under the *current* scores
+        (without serving a query): descending for score algorithms,
+        ascending for distances/labels; sentinel and inactive vertices are
+        dropped, so fewer than ``k`` ids may come back."""
         scores = self.scores
         return _top_ids(
             scores, k,
@@ -175,14 +183,25 @@ class VeilGraphSession:
 
     # ---- streaming -------------------------------------------------------
     def add_edges(self, src, dst) -> "VeilGraphSession":
+        """Buffer edge additions (int 1-D ``src``/``dst`` of equal length,
+        ids < ``node_capacity``); applied at the next :meth:`query`.
+        Returns ``self`` for chaining."""
         self.engine.register_add_edges(np.asarray(src), np.asarray(dst))
         return self
 
     def remove_edges(self, src, dst) -> "VeilGraphSession":
+        """Buffer edge removals (resolved to live buffer slots at apply
+        time; a removal matching no live edge is counted as requested but
+        never resolved).  Returns ``self`` for chaining."""
         self.engine.register_remove_edges(np.asarray(src), np.asarray(dst))
         return self
 
     def query(self, msg: Optional[Dict] = None) -> QueryResult:
+        """Serve one query (Alg. 1 lines 6-21): apply buffered updates, let
+        the OnQuery policy pick repeat/approximate/exact, run it, and wrap
+        the answer.  Returns a :class:`QueryResult` whose ``scores`` is the
+        algorithm's ``result_view`` (dtype[node_capacity]) with ``stats``
+        the engine's row for this query."""
         scores, stats = self.engine.query(msg)
         return QueryResult(
             scores=scores, stats=stats,
@@ -202,6 +221,7 @@ class VeilGraphSession:
 
     # ---- lifecycle -------------------------------------------------------
     def close(self):
+        """Fire the OnStop UDF (also called by ``with``-block exit)."""
         self.engine.stop()
 
     def __enter__(self) -> "VeilGraphSession":

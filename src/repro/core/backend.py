@@ -160,6 +160,7 @@ class EdgeLayout:
 
     @property
     def num_segments(self) -> int:
+        """Size of the receiver/node space this layout pushes into."""
         return self.row_offsets.shape[0] - 1
 
 
@@ -214,10 +215,12 @@ class ShardedEdgeLayout:
 
     @property
     def num_shards(self) -> int:
+        """Number of edge shards stacked along the leading axis."""
         return self.row_offsets.shape[0]
 
     @property
     def num_segments(self) -> int:
+        """Size of the receiver/node space (shared by every shard)."""
         return self.row_offsets.shape[1] - 1
 
 
@@ -354,12 +357,19 @@ def build_layout(
 
 
 def summary_layout(summary, *, chunk: int = CHUNK,
-                   semiring: str = "plus_times") -> EdgeLayout:
+                   semiring: str = "plus_times") -> AnyEdgeLayout:
     """Propagation layout over a summary's compacted, pre-sorted E_K buffer.
 
     :func:`repro.core.pagerank.build_summary` already emits E_K sorted by
     local destination with ``ek_row_offsets``; this only derives validity
-    (sorted buffers keep valid edges first) and pads for the kernel.
+    and pads for the kernel — flat summaries keep valid edges first, and
+    the stacked per-shard form (a summary built through a
+    :class:`ShardedEdgeLayout`) marks padding with the ``K_cap`` sentinel
+    destination.  A sharded summary yields a :class:`ShardedEdgeLayout`
+    carrying the summary's ``mesh``/``axes``, so the consuming sweep's
+    :func:`push` runs shard_map-ed per-shard partial pushes + the
+    semiring's all-reduce with no further changes.
+
     ``semiring`` must match the one the summary's ``ek_w``/``b_in`` were
     baked for (checked at trace time against the summary's recorded
     metadata — a ``plus_times`` reduce over +∞-baked min-semiring buffers
@@ -373,6 +383,18 @@ def summary_layout(summary, *, chunk: int = CHUNK,
             f"summary_layout(semiring={s.name!r}) over a summary baked for "
             f"{baked!r}; rebuild the summary for this semiring")
     k_cap = summary.hot_ids.shape[0]
+    if summary.ek_src.ndim == 2:  # stacked per-shard E_K form
+        h_s = summary.ek_src.shape[1]
+        extra = padded_length(h_s, chunk) - h_s
+        pad2 = lambda x, cval: jnp.pad(x, ((0, 0), (0, extra)),
+                                       constant_values=cval)
+        valid = summary.ek_dst < k_cap
+        return ShardedEdgeLayout(
+            pad2(summary.ek_src, 0), pad2(summary.ek_dst, k_cap),
+            pad2(summary.ek_w, s.zero), pad2(valid, False),
+            summary.ek_row_offsets, None,
+            weight_mode="summary", pad_chunk=chunk, semiring=s.name,
+            mesh=summary.mesh, axes=summary.axes)
     h_cap = summary.ek_src.shape[0]
     valid = jnp.arange(h_cap, dtype=jnp.int32) < jnp.minimum(
         summary.num_ek, h_cap)
@@ -611,10 +633,13 @@ _TRACE_COUNTS: collections.Counter = collections.Counter()
 
 
 def trace_count(name: str) -> int:
+    """Times primitive ``name`` (e.g. ``"push_coo"``) traced since the last
+    :func:`reset_trace_counts` — see the counter note above."""
     return _TRACE_COUNTS[name]
 
 
 def reset_trace_counts() -> None:
+    """Zero every trace counter (call before lowering a program fresh)."""
     _TRACE_COUNTS.clear()
 
 

@@ -47,6 +47,12 @@ from repro.graph import graph as G
 
 @dataclass
 class EngineConfig:
+    """Static engine configuration: buffer capacities, the paper's hot-set
+    model knobs (r, n, Δ), and execution selection (backend, mesh,
+    sharding, rebalancing).  Capacities are jit-static — changing them
+    recompiles; everything the engine can vary per query is runtime state
+    instead.  Field groups are commented inline below."""
+
     node_capacity: int
     edge_capacity: int
     hot_node_capacity: int
@@ -81,10 +87,29 @@ class EngineConfig:
     # repro.graph.partition.build_sharded_layout
     mesh: Optional["jax.sharding.Mesh"] = None
     mesh_axes: Optional[Tuple[str, ...]] = None
+    # shard count for the mesh layouts: None = one shard per device on
+    # `mesh_axes`; a multiple of the device count runs surplus shards as a
+    # per-device loop (how a 1-device dev box exercises S-way partitioning
+    # and rebalancing)
+    num_shards: Optional[int] = None
+    # shard-rebalancing trigger (mesh engines only): after each applied
+    # update batch the engine measures per-shard live-edge imbalance
+    # ((max - min) / mean, see repro.graph.partition.shard_imbalance) and
+    # recuts the slot partition when it exceeds this threshold — streaming
+    # appends land at the high-water mark, so the contiguous cut fills
+    # tail-heavy without it.  None disables rebalancing (the pre-rebalance
+    # contiguous-cut behaviour); rebalances are counted in
+    # `engine.rebalances`.
+    rebalance_threshold: Optional[float] = 1.0
 
 
 @dataclass
 class QueryStats:
+    """One row of engine observability per served query: the action taken,
+    wall time, graph/hot-set/summary sizes (the paper's model statistics —
+    ``vertex_ratio``/``edge_ratio`` are Figs. 4/8's axes), update
+    accounting, and the overflow/rebalance flags."""
+
     query_id: int
     action: str
     wall_time_s: float
@@ -104,6 +129,9 @@ class QueryStats:
     pending_applied: int = 0
     removals_requested: int = 0
     removals_resolved: int = 0
+    # True when this query's applied updates pushed per-shard live-edge
+    # imbalance past the threshold and the edge partition was recut
+    rebalanced: bool = False
     algorithm: str = "pagerank"
 
     @property
@@ -120,10 +148,12 @@ class QueryStats:
 
 
 def default_before_updates(pending: int, stats: Dict) -> bool:
+    """Default BeforeUpdates UDF: always integrate pending updates."""
     return True
 
 
 def default_on_query(query_id: int, view: Dict) -> Action:
+    """Default OnQuery UDF: always take the summarized fast path."""
     return Action.APPROXIMATE
 
 
@@ -148,6 +178,13 @@ class VeilGraphEngine:
         on_stop: Optional[Callable] = None,
     ):
         self.config = config
+        if config.mesh is None and config.num_shards is not None:
+            # the field is only consumed by the mesh layout/rebalance path;
+            # accepting it meshless would silently run unsharded
+            raise ValueError(
+                "EngineConfig.num_shards requires mesh= (sharding and "
+                "rebalancing are mesh-engine features; a 1-device box can "
+                "pass a 1-device mesh with num_shards=S)")
         self.backend = B.resolve_backend(config.backend)
         if algorithm is None:
             # legacy shim: PageRank from the config's scalar knobs
@@ -167,6 +204,12 @@ class VeilGraphEngine:
         # reused across queries and by every sweep in between
         self._edge_layouts: Optional[Tuple[B.EdgeLayout, ...]] = None
         self.layout_builds = 0  # observability: how many sorts actually ran
+        # shard-rebalancing state (mesh engines): the current slot→shard
+        # assignment (None = the contiguous cut), how many recuts have
+        # happened, and the last measured imbalance
+        self._shard_slots = None
+        self.rebalances = 0
+        self.last_imbalance = 0.0
         self.deg_prev = jnp.zeros((config.node_capacity,), jnp.int32)
         self.active_prev = jnp.zeros((config.node_capacity,), bool)
         self._pending_src: List[np.ndarray] = []
@@ -237,6 +280,7 @@ class VeilGraphEngine:
         return st
 
     def stop(self):
+        """OnStop: fire the shutdown UDF (no device state is torn down)."""
         if self._on_stop:
             self._on_stop(self)
 
@@ -264,6 +308,8 @@ class VeilGraphEngine:
                 f"[0, node_capacity={self.config.node_capacity})")
 
     def register_add_edges(self, src: np.ndarray, dst: np.ndarray):
+        """Alg. 1 RegisterAddEdge: buffer an edge-addition chunk (validated
+        host-side) until the next query's ApplyUpdates stage."""
         src = np.asarray(src, np.int32)
         dst = np.asarray(dst, np.int32)
         self._check_ids(src, dst)
@@ -286,6 +332,7 @@ class VeilGraphEngine:
 
     @property
     def pending_updates(self) -> int:
+        """Buffered updates (additions + removals) not yet applied."""
         return self._pending_count
 
     # ---- internals -----------------------------------------------------------
@@ -307,8 +354,10 @@ class VeilGraphEngine:
                 build = lambda w, rev, s: place_sharded_layout(
                     build_sharded_layout(
                         self.state, mesh=self.config.mesh,
-                        axes=self.config.mesh_axes, weight=w, reverse=rev,
-                        semiring=s))
+                        axes=self.config.mesh_axes,
+                        num_shards=self.config.num_shards,
+                        weight=w, reverse=rev,
+                        semiring=s, slots=self._shard_slots))
             else:
                 build = lambda w, rev, s: B.build_layout(
                     self.state, weight=w, reverse=rev, semiring=s)
@@ -322,6 +371,37 @@ class VeilGraphEngine:
 
     def _invalidate_layouts(self):
         self._edge_layouts = None
+
+    def _maybe_rebalance(self) -> bool:
+        """Recut the edge partition when streaming has skewed per-shard
+        live-edge counts past ``config.rebalance_threshold``.
+
+        Runs once per applied update batch (never in the query hot loop),
+        only on mesh-configured engines.  On a recut the cached layouts are
+        invalidated so the next :meth:`edge_layouts` build migrates every
+        stream to the balanced assignment with one static-shaped gather;
+        ``engine.rebalances`` counts the recuts and
+        ``engine.last_imbalance`` records the most recent measurement.
+        """
+        cfg = self.config
+        if cfg.mesh is None or cfg.rebalance_threshold is None:
+            return False
+        from repro.graph.partition import (mesh_shard_count,
+                                           rebalance_sharded_layout)
+
+        num_shards = (cfg.num_shards if cfg.num_shards is not None
+                      else mesh_shard_count(cfg.mesh, cfg.mesh_axes))
+        slots, rebalanced, imbalance = rebalance_sharded_layout(
+            self.state,
+            num_shards=num_shards,
+            slots=self._shard_slots,
+            threshold=cfg.rebalance_threshold)
+        self.last_imbalance = imbalance
+        if rebalanced:
+            self._shard_slots = slots
+            self.rebalances += 1
+            self._invalidate_layouts()
+        return rebalanced
 
     def _degree_snapshot(self) -> jax.Array:
         # NOTE: must copy — add_edges donates the state buffers, so an alias
@@ -400,9 +480,12 @@ class VeilGraphEngine:
         cfg = self.config
 
         applied = removals_requested = removals_resolved = 0
+        rebalanced = False
         view = self._stats_view(self._pending_count, 0)
         if self._before_updates(self._pending_count, view):
             applied, removals_requested, removals_resolved = self._apply_pending()
+            if applied:
+                rebalanced = self._maybe_rebalance()
             # the OnQuery policy must see the post-update graph: refresh the
             # node/edge counts snapshotted before _apply_pending
             view = self._stats_view(self._pending_count, applied)
@@ -418,6 +501,7 @@ class VeilGraphEngine:
             pending_applied=applied,
             removals_requested=removals_requested,
             removals_resolved=removals_resolved,
+            rebalanced=rebalanced,
             algorithm=self.algorithm.name,
         )
 

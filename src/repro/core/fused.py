@@ -20,7 +20,12 @@ Differences vs the unfused engine path:
   the exact sweeps — runs as a shard_map partial push + semiring
   all-reduce over per-shard locally-sorted edge streams, with node
   vectors replicated (the TPU analogue of Pregel's vertex-cut message
-  exchange).  No unsorted ``push_coo`` remains in the lowered hot loop.
+  exchange).  Summary construction itself is mesh-native too: with
+  sharded layouts, ``build_summary`` runs the distributed bucket sort
+  (per-shard E_K selection, capacity-padded all-to-all, shard-local row
+  offsets — see :func:`repro.core.pagerank._build_summary_sharded`), so
+  the lowered program contains no replicated edge-space gathers and no
+  unsorted ``push_coo``.
 """
 
 from __future__ import annotations

@@ -30,12 +30,18 @@ from repro.graph.graph import GraphState
 
 
 class HotSetParams(NamedTuple):
+    """The paper's hot-set model knobs (r, n, Δ) bundled as a pytree —
+    r and Δ are runtime scalars, n is a static hop count."""
+
     r: jax.Array       # update-ratio threshold (f32 scalar)
     n: int             # neighborhood diameter (static: 0, 1, 2, …)
     delta: jax.Array   # Δ score-dilution bound (f32 scalar)
 
 
 class HotSetStats(NamedTuple):
+    """Device-side sizes of the three selection stages (K_r, K_n, K_Δ)
+    and their union |K| — one host transfer per query."""
+
     num_kr: jax.Array
     num_kn: jax.Array
     num_kdelta: jax.Array

@@ -185,7 +185,7 @@ def compact_indices(mask: jax.Array, size: int, *, rows: int = 64) -> jax.Array:
     jax.tree_util.register_dataclass,
     data_fields=("hot_ids", "num_hot", "ek_src", "ek_dst", "ek_w",
                  "ek_row_offsets", "num_ek", "b_in", "num_eb", "overflow"),
-    meta_fields=("weight_mode", "semiring"),
+    meta_fields=("weight_mode", "semiring", "mesh", "axes"),
 )
 @dataclasses.dataclass(frozen=True)
 class SummaryBuffers:
@@ -212,20 +212,215 @@ class SummaryBuffers:
                        a consumer running the wrong algebra at trace time
                        (a ``plus_times`` sweep over +∞-baked ``min_plus``
                        buffers would silently produce NaNs).
+
+    **Sharded form** (built by :func:`build_summary` when handed a
+    :class:`~repro.core.backend.ShardedEdgeLayout`): the ``ek_*`` buffers
+    gain a leading shard axis — ``ek_src/dst/w`` become ``[S, H_s]`` and
+    ``ek_row_offsets`` ``[S, K_cap + 1]``, one *locally* destination-sorted
+    E_K shard per device, with shard ``j`` owning the contiguous local-id
+    range ``[j·⌈K_cap/S⌉, (j+1)·⌈K_cap/S⌉)``.  ``hot_ids``/``b_in`` and the
+    counters stay replicated node-space vectors/scalars.  ``mesh``/``axes``
+    carry the device mapping (static, mirroring ``ShardedEdgeLayout``);
+    :func:`repro.core.backend.summary_layout` then emits a sharded layout so
+    every summarized sweep runs as a shard_map partial push + all-reduce.
     """
 
     hot_ids: jax.Array   # int32[K_cap]
     num_hot: jax.Array   # int32
-    ek_src: jax.Array    # int32[H_cap] (local ids, dst-sorted)
-    ek_dst: jax.Array    # int32[H_cap] (local ids, sorted; K_cap = padding)
-    ek_w: jax.Array      # dtype[H_cap] (the consuming semiring's dtype)
-    ek_row_offsets: jax.Array  # int32[K_cap + 1]
+    ek_src: jax.Array    # int32[H_cap] | int32[S, H_s] (local ids, dst-sorted)
+    ek_dst: jax.Array    # int32[H_cap] | int32[S, H_s] (sorted; K_cap = padding)
+    ek_w: jax.Array      # dtype[H_cap] | dtype[S, H_s] (semiring dtype)
+    ek_row_offsets: jax.Array  # int32[K_cap + 1] | int32[S, K_cap + 1]
     num_ek: jax.Array    # int32
     b_in: jax.Array      # dtype[K_cap]
     num_eb: jax.Array    # int32  (size of E_B, for the paper's edge-ratio stat)
     overflow: jax.Array  # bool
     weight_mode: str = "inv_out"
     semiring: str = "plus_times"
+    mesh: Optional["jax.sharding.Mesh"] = None
+    axes: Tuple[str, ...] = ()
+
+    @property
+    def sharded(self) -> bool:
+        """True for the stacked per-shard E_K form (see class docstring)."""
+        return self.ek_src.ndim == 2
+
+    @property
+    def num_shards(self) -> Optional[int]:
+        """Shard count of the sharded form, ``None`` for flat summaries."""
+        return self.ek_src.shape[0] if self.sharded else None
+
+
+def _build_summary_sharded(
+    state: GraphState,
+    ranks_prev: jax.Array,
+    hot_mask: jax.Array,
+    *,
+    hot_node_capacity: int,
+    hot_edge_capacity: int,
+    weight: str,
+    layout: "B.ShardedEdgeLayout",
+    backend: Optional[str],
+    s,
+) -> SummaryBuffers:
+    """Mesh-native summary construction: a distributed bucket sort over the
+    shard axis, so no stage ever materializes a replicated O(E) buffer.
+
+    The replicated construction compacts E_K with full-edge-space gathers
+    (``e_src[ek_idx]`` over the whole COO buffer) — under GSPMD edge
+    sharding those gathers lower to all-gathers of the edge stream, the
+    pod-scale wall-clock ceiling this path removes.  Stages, all shard-local
+    except the one exchange:
+
+    1. **local selection** — each shard masks its own locally-sorted stream
+       for E_K / E_B membership and relabels endpoints through the
+       replicated ``local_of`` node vector (O(N) node state stays
+       replicated; O(E) edge state never leaves its shard);
+    2. **local dst sort** — one axis-1 argsort per shard by *local
+       destination* groups each shard's E_K edges into ``S`` contiguous
+       destination buckets (bucket ``j`` = local ids ``[j·W, (j+1)·W)``,
+       ``W = ⌈K_cap/S⌉``) and destination-sorts within each bucket in the
+       same pass;
+    3. **capacity-padded all-to-all** — each (source shard, bucket) block is
+       padded to ``C = ⌈H_cap/S⌉`` slots and the ``[S_in, S_out, C]`` stack
+       is transposed on its leading axes, which under GSPMD *is* the
+       all-to-all collective; shard ``j`` now owns every E_K edge whose
+       destination falls in its bucket;
+    4. **local merge** — one axis-1 argsort per shard merges its ``S``
+       sorted incoming blocks; ``ek_row_offsets`` derive shard-locally by
+       ``searchsorted`` (never a global sort).
+
+    A block exceeding ``C`` raises the ``overflow`` flag (alongside the
+    usual ``|K|``/``|E_K|`` capacity checks) and the caller falls back to
+    exact recomputation — ``compact_indices``'s order-scrambled local ids
+    spread destinations across buckets, so balanced blocks are the common
+    case.  ``b_in`` runs through the sharded :func:`repro.core.backend.push`
+    with the E_B mask, exactly like the flat path with a cached layout.
+    """
+    n_cap = state.node_capacity
+    k_cap = hot_node_capacity
+    h_cap = hot_edge_capacity
+    num_shards = layout.num_shards
+    e_pad = layout.dst.shape[1]
+    bucket_cap = -(-h_cap // num_shards)   # C: per (src-shard, bucket) slots
+    bucket_w = -(-k_cap // num_shards)     # W: local-dst ids per bucket
+    w_dtype = jnp.dtype(s.dtype)
+    s_zero = jnp.asarray(s.zero, w_dtype)
+
+    # ---- hot-vertex relabelling (replicated node space, same as flat) ----
+    hot_ids = compact_indices(hot_mask, k_cap)
+    num_hot = jnp.sum(hot_mask.astype(jnp.int32))
+    local_valid = jnp.arange(k_cap, dtype=jnp.int32) < num_hot
+    local_of = jnp.zeros((n_cap,), jnp.int32).at[hot_ids].set(
+        jnp.arange(k_cap, dtype=jnp.int32), mode="drop")
+
+    # ---- per-shard E_K / E_B selection over the sorted streams -----------
+    dst_c = jnp.minimum(layout.dst, n_cap - 1)  # clip the n_cap sentinel
+    src_hot = hot_mask[layout.src]
+    dst_hot = hot_mask[dst_c]
+    ek_mask = layout.valid & src_hot & dst_hot
+    eb_mask = layout.valid & (~src_hot) & dst_hot
+    num_ek = jnp.sum(ek_mask.astype(jnp.int32))
+    num_eb = jnp.sum(eb_mask.astype(jnp.int32))
+
+    # ---- frozen big-vertex boundary: sharded push over the E_B mask ------
+    b_in_global = B.push(ranks_prev, layout, backend=backend, mask=eb_mask,
+                         semiring=s)
+    b_in = jnp.where(local_valid, b_in_global[hot_ids], s_zero)
+
+    # ---- stage 2: shard-local relabel + destination sort -----------------
+    # layout.weight already holds the baked ⊗-operand in stream order (the
+    # single bake both paths share), so E_K weights are a masked copy
+    lsrc = jnp.where(ek_mask, local_of[layout.src], 0)
+    ldst = jnp.where(ek_mask, local_of[dst_c], k_cap)  # sentinel sorts last
+    ek_w = jnp.where(ek_mask, layout.weight, s_zero)
+    perm = jnp.argsort(ldst, axis=1, stable=True)
+    take = lambda x: jnp.take_along_axis(x, perm, axis=1)
+    lsrc, ldst, ek_w = take(lsrc), take(ldst), take(ek_w)
+
+    # ---- stage 3: capacity-padded blocks + all-to-all exchange -----------
+    bounds = jnp.minimum(
+        jnp.arange(num_shards + 1, dtype=jnp.int32) * bucket_w, k_cap)
+    off = jax.vmap(lambda d: jnp.searchsorted(
+        d, bounds, side="left").astype(jnp.int32))(ldst)
+    n_block = off[:, 1:] - off[:, :-1]              # [S_in, S_out] counts
+    block_overflow = jnp.any(n_block > bucket_cap)
+    lane = jnp.arange(bucket_cap, dtype=jnp.int32)
+    idx = jnp.minimum(
+        off[:, :-1, None] + lane[None, None, :], e_pad - 1
+    ).reshape(num_shards, num_shards * bucket_cap)
+    block_valid = lane[None, None, :] < jnp.minimum(n_block,
+                                                    bucket_cap)[:, :, None]
+
+    if layout.mesh is not None:
+        # explicit collective: shard_map + lax.all_to_all.  (Left to GSPMD,
+        # the leading-axes transpose of the block stack lowers as an
+        # all-gather of the whole [S, S, C] array — 64 GiB/device at the
+        # pod-scale dry-run shape — instead of the O(C·S) exchange.)
+        from jax.sharding import PartitionSpec as _P
+
+        def _swap(b):
+            # per device: [S_loc, S, C] -> split buckets across devices,
+            # concat source shards -> [S, S_loc, C] -> local transpose
+            b = jax.lax.all_to_all(b, layout.axes, split_axis=1,
+                                   concat_axis=0, tiled=True)
+            return jnp.swapaxes(b, 0, 1)
+
+        transpose_blocks = B._shard_map(
+            _swap, mesh=layout.mesh, in_specs=_P(layout.axes),
+            out_specs=_P(layout.axes), check_rep=False)
+    else:
+        transpose_blocks = lambda b: jnp.swapaxes(b, 0, 1)
+
+    def exchange(x, fill):
+        """[S_in, E_pad] stream -> [S_out, S_in·C] received blocks: gather
+        the per-bucket blocks shard-locally, then exchange the leading
+        (source shard, bucket) axes — ``lax.all_to_all`` under a mesh, a
+        plain transpose on the single-device reference path."""
+        g = jnp.take_along_axis(x, idx, axis=1).reshape(
+            num_shards, num_shards, bucket_cap)
+        g = jnp.where(block_valid, g, fill)
+        return transpose_blocks(g).reshape(
+            num_shards, num_shards * bucket_cap)
+
+    ek_src2 = exchange(lsrc, 0)
+    ek_dst2 = exchange(ldst, k_cap)
+    ek_w2 = exchange(ek_w, s_zero)
+
+    # ---- stage 4: shard-local merge sort + row offsets -------------------
+    perm2 = jnp.argsort(ek_dst2, axis=1, stable=True)
+    take2 = lambda x: jnp.take_along_axis(x, perm2, axis=1)
+    ek_src2, ek_dst2, ek_w2 = take2(ek_src2), take2(ek_dst2), take2(ek_w2)
+    ek_row_offsets = jax.vmap(lambda d: jnp.searchsorted(
+        d, jnp.arange(k_cap + 1, dtype=jnp.int32),
+        side="left").astype(jnp.int32))(ek_dst2)
+
+    if layout.mesh is not None:
+        # pin the summary shards to the layout's mesh placement so the
+        # consuming shard_map never redistributes them (and the partitioner
+        # keeps every stage above shard-local)
+        from jax.sharding import NamedSharding, PartitionSpec
+        sh = NamedSharding(layout.mesh, PartitionSpec(layout.axes))
+        pin = lambda x: jax.lax.with_sharding_constraint(x, sh)
+        ek_src2, ek_dst2, ek_w2, ek_row_offsets = map(
+            pin, (ek_src2, ek_dst2, ek_w2, ek_row_offsets))
+
+    return SummaryBuffers(
+        hot_ids=hot_ids,
+        num_hot=num_hot,
+        ek_src=ek_src2,
+        ek_dst=ek_dst2,
+        ek_w=ek_w2,
+        ek_row_offsets=ek_row_offsets,
+        num_ek=num_ek,
+        b_in=b_in,
+        num_eb=num_eb,
+        overflow=(num_hot > k_cap) | (num_ek > h_cap) | block_overflow,
+        weight_mode=weight,
+        semiring=s.name,
+        mesh=layout.mesh,
+        axes=layout.axes,
+    )
 
 
 @functools.partial(
@@ -279,12 +474,29 @@ def build_summary(
     ``ranks_prev`` is whatever state vector the frozen big-vertex
     contribution should be computed from (previous PageRank ranks, previous
     hub scores, previous distances/labels, …).
+
+    Handed a :class:`~repro.core.backend.ShardedEdgeLayout` (the engine does
+    when configured with a mesh), construction itself runs sharded — a
+    distributed bucket sort over the shard axis producing the stacked
+    per-shard E_K form of :class:`SummaryBuffers` (see
+    :func:`_build_summary_sharded`), with zero replicated edge-space
+    gathers; the consuming summarized sweeps then run through the sharded
+    push automatically.
     """
     s = B.validate_weight_spec(weight, reverse=reverse, semiring=semiring,
                                lengths=lengths,
                                edge_capacity=state.edge_capacity)
     B.require_layout(layout, weight=weight, reverse=reverse,
                      who="build_summary", semiring=s)
+    if isinstance(layout, B.ShardedEdgeLayout):
+        # sharded construction: the layout's baked weights are the single
+        # source of truth (like the flat path's layout.order back-map), so
+        # an explicit `lengths` array never overrides them
+        return _build_summary_sharded(
+            state, ranks_prev, hot_mask,
+            hot_node_capacity=hot_node_capacity,
+            hot_edge_capacity=hot_edge_capacity,
+            weight=weight, layout=layout, backend=backend, s=s)
     n_cap = state.node_capacity
     k_cap = hot_node_capacity
     h_cap = hot_edge_capacity

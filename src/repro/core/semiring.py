@@ -104,6 +104,8 @@ class Semiring:
     # ---- dtype / identities ---------------------------------------------
     @property
     def np_dtype(self) -> np.dtype:
+        """The element dtype as a ``np.dtype`` (``dtype`` is stored as a
+        string so instances stay hashable/jit-static)."""
         return np.dtype(self.dtype)
 
     @property
@@ -176,6 +178,7 @@ def register_semiring(s: Semiring) -> Semiring:
 
 
 def available_semirings() -> tuple:
+    """Sorted names of every registered semiring."""
     return tuple(sorted(_REGISTRY))
 
 

@@ -34,7 +34,7 @@ class SyntheticLMData:
 
     The task is a lag-k repeat-with-noise language: predictable enough that a
     few hundred steps of a ~100M model show a clearly decreasing loss (used
-    by examples/train_lm.py), random enough not to be trivial.
+    by repro.launch.train), random enough not to be trivial.
     """
 
     def __init__(self, cfg: DataConfig, *, host_batch: Optional[int] = None):

@@ -144,6 +144,9 @@ def community_ego_edges(
 
 @dataclass(frozen=True)
 class DatasetSpec:
+    """A named synthetic dataset: generator id + kwargs, scaled to the
+    paper's Table 1 families (hashable, so specs can key caches)."""
+
     name: str
     family: str        # web | social | citation | ego | random
     nodes: int

@@ -43,10 +43,12 @@ class GraphState(NamedTuple):
     # ---- static-shape helpers -------------------------------------------
     @property
     def node_capacity(self) -> int:
+        """Static node-space size (vertex ids are < node_capacity)."""
         return self.out_deg.shape[0]
 
     @property
     def edge_capacity(self) -> int:
+        """Static COO buffer size (live + tombstoned + padding slots)."""
         return self.src.shape[0]
 
     def edge_mask(self) -> jax.Array:
@@ -55,12 +57,15 @@ class GraphState(NamedTuple):
         return in_use & self.edge_alive
 
     def num_live_edges(self) -> jax.Array:
+        """int32 scalar: edges that are in use and not tombstoned."""
         return jnp.sum(self.edge_mask().astype(jnp.int32))
 
     def num_active_nodes(self) -> jax.Array:
+        """int32 scalar: vertices that have appeared in any edge."""
         return jnp.sum(self.node_active.astype(jnp.int32))
 
     def total_deg(self) -> jax.Array:
+        """int32[N_cap]: out-degree + in-degree per vertex."""
         return self.out_deg + self.in_deg
 
 

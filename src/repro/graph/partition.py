@@ -13,7 +13,16 @@ plus one all-reduce of the dense rank vector.  Two layers live here:
   contiguous shards, each destination-sorted *locally* — the cached-sort
   story of :mod:`repro.core.backend` carried to the distributed setting
   without ever running a sort across shards (a pod-scale global argsort
-  would defeat GSPMD's edge sharding; S independent local sorts do not).
+  would defeat GSPMD's edge sharding; S independent local sorts do not);
+- **shard rebalancing** (:func:`rebalance_sharded_layout` and friends):
+  streaming appends land at the high-water mark, so the contiguous cut
+  fills tail-heavy and removals hollow out arbitrary shards; the engine
+  tracks per-shard live-edge counts after each applied update batch and,
+  past ``EngineConfig.rebalance_threshold``, recuts the partition with a
+  live-balanced slot assignment (:func:`balanced_shard_slots`) that the
+  next layout build migrates to with one static-shaped gather.  Any valid
+  partition yields the same push result (bitwise for min semirings), so
+  rebalancing is purely a load-balance decision.
 """
 
 from __future__ import annotations
@@ -33,6 +42,8 @@ from repro.sharding.rules import guarded_pspec, rules_for_mesh
 
 
 def edge_sharding(mesh: Mesh, edge_capacity: int) -> NamedSharding:
+    """The 1-D GSPMD sharding for an edge-capacity buffer: the ``edges``
+    logical axis laid over the mesh per its sharding rules."""
     rules = rules_for_mesh(mesh)
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     return NamedSharding(mesh, guarded_pspec((edge_capacity,), ("edges",),
@@ -87,9 +98,17 @@ def _build_shards(
     chunk: int,
     semiring: str,
     lengths: Optional[jax.Array] = None,
+    slots: Optional[jax.Array] = None,
 ) -> B.ShardedEdgeLayout:
     """The jitted core of :func:`build_sharded_layout` (no mesh metadata —
-    the partition and the S local sorts are pure array work)."""
+    the partition and the S local sorts are pure array work).
+
+    ``slots`` (int32[S, ⌈E_cap/S⌉], sentinel ``E_cap`` for padding)
+    overrides the default contiguous cut with an explicit slot→shard
+    assignment — the rebalancing path: the stacked streams are then built
+    by one static-shaped gather per buffer (the slot *migration*) instead
+    of the communication-free pad+reshape.
+    """
     s = B.validate_weight_spec(weight, reverse=reverse, semiring=semiring,
                                lengths=lengths,
                                edge_capacity=state.edge_capacity)
@@ -102,14 +121,25 @@ def _build_shards(
     w = B.bake_weights(s, weight, mask, e_src,
                        inv_deg=inv_out_degree(state), lengths=lengths)
 
-    # contiguous slot partition: pad the slot space to S·E_s and reshape —
-    # on a 1-D edge-sharded buffer this is communication-free under GSPMD
     e_s = -(-e_cap // num_shards)
-    pad = num_shards * e_s - e_cap
+    if slots is None:
+        # contiguous slot partition: pad the slot space to S·E_s and
+        # reshape — on a 1-D edge-sharded buffer this is communication-free
+        # under GSPMD
+        pad = num_shards * e_s - e_cap
 
-    def cut(x, cval):
-        return jnp.pad(x, (0, pad), constant_values=cval).reshape(
-            num_shards, e_s)
+        def cut(x, cval):
+            return jnp.pad(x, (0, pad), constant_values=cval).reshape(
+                num_shards, e_s)
+    else:
+        # rebalanced partition: migrate slots with one static-shaped gather
+        # per buffer (a one-off resharding under GSPMD, amortized exactly
+        # like the sort — once per applied update batch)
+        ok = slots < e_cap
+        sl = jnp.minimum(slots, e_cap - 1)
+
+        def cut(x, cval):
+            return jnp.where(ok, x[sl], jnp.asarray(cval, x.dtype))
 
     src2 = cut(e_src, 0)
     dst2 = cut(jnp.where(mask, e_dst, n_cap), n_cap)  # invalid sorts last
@@ -151,29 +181,46 @@ def build_sharded_layout(
     chunk: Optional[int] = None,
     semiring: str = "plus_times",
     lengths: Optional[jax.Array] = None,
+    slots: Optional[jax.Array] = None,
 ) -> B.ShardedEdgeLayout:
     """Edge-partitioned, per-shard destination-sorted propagation layout.
 
     The sharded sibling of :func:`repro.core.backend.build_layout` — same
     ``weight``/``reverse``/``semiring``/``lengths`` spec space (validated
     by the same :func:`~repro.core.backend.validate_weight_spec`), but the
-    edge stream is first cut into ``num_shards`` contiguous slot ranges
-    and each shard sorted independently, so no sort ever crosses a shard
-    boundary.  :func:`repro.core.backend.push` consumes the result as a
+    edge stream is first cut into ``num_shards`` slot ranges and each
+    shard sorted independently, so no sort ever crosses a shard boundary.
+    :func:`repro.core.backend.push` consumes the result as a
     ``shard_map``-ed partial push + semiring all-reduce.
 
-    ``mesh`` attaches the device mapping: the shard axis is laid over
-    ``axes`` (default: every mesh axis, flattened).  ``num_shards``
-    defaults to the total device count of those axes and must stay a
-    multiple of it.  With ``mesh=None`` (``num_shards`` required) the
-    layout runs as an on-device loop — the reference semantics sharded
-    parity tests compare against, and a way to exercise S-way partitioning
-    without S devices.
+    Parameters
+    ----------
+    mesh / axes
+        Device mapping: the shard axis is laid over ``axes`` (default:
+        every mesh axis, flattened).  With ``mesh=None`` (``num_shards``
+        required) the layout runs as an on-device loop — the reference
+        semantics sharded parity tests compare against, and a way to
+        exercise S-way partitioning without S devices.
+    num_shards
+        Defaults to the total device count of ``axes`` and must stay a
+        multiple of it.
+    weight / reverse / semiring / lengths
+        The baked ⊗-operand spec — see
+        :func:`repro.core.backend.build_layout`.
+    slots
+        Optional explicit slot→shard assignment
+        (int32[num_shards, ⌈E_cap/num_shards⌉], sentinel ``E_cap`` in
+        padding positions; every live slot must appear exactly once).
+        Default is the contiguous cut of :func:`shard_slots`; pass
+        :func:`balanced_shard_slots` output (or any custom partition) to
+        *rebalance* — the streams are then gathered per the assignment
+        instead of reshaped.  See :func:`rebalance_sharded_layout`.
 
-    Traced inline-compatible: callable from inside jit (the fused query
-    step builds sharded layouts on the fly when handed a mesh but no
-    cache), with the engine caching built instances per applied update
-    batch exactly like single layouts.
+    Returns a :class:`~repro.core.backend.ShardedEdgeLayout` of stacked
+    ``[num_shards, E_pad]`` streams.  Traced inline-compatible: callable
+    from inside jit (the fused query step builds sharded layouts on the
+    fly when handed a mesh but no cache), with the engine caching built
+    instances per applied update batch exactly like single layouts.
     """
     if mesh is not None:
         axes = tuple(axes) if axes is not None else tuple(mesh.axis_names)
@@ -181,9 +228,7 @@ def build_sharded_layout(
             if a not in mesh.axis_names:
                 raise ValueError(
                     f"mesh axis {a!r} not in mesh {tuple(mesh.axis_names)}")
-        n_dev = 1
-        for a in axes:
-            n_dev *= mesh.shape[a]
+        n_dev = mesh_shard_count(mesh, axes)
         if num_shards is None:
             num_shards = n_dev
         if num_shards % n_dev:
@@ -194,13 +239,120 @@ def build_sharded_layout(
         raise ValueError("build_sharded_layout needs mesh= or num_shards=")
     else:
         axes = ()
+    if slots is not None:
+        want = (num_shards, -(-state.edge_capacity // num_shards))
+        if tuple(slots.shape) != want:
+            raise ValueError(
+                f"slots assignment shape {tuple(slots.shape)} does not "
+                f"match {want} for num_shards={num_shards}, "
+                f"edge_capacity={state.edge_capacity}")
+        slots = jnp.asarray(slots, jnp.int32)
     layout = _build_shards(
         state, num_shards=num_shards, weight=weight, reverse=reverse,
         chunk=B.CHUNK if chunk is None else chunk, semiring=semiring,
-        lengths=lengths)
+        lengths=lengths, slots=slots)
     if mesh is not None:
         layout = dataclasses.replace(layout, mesh=mesh, axes=axes)
     return layout
+
+
+# ---------------------------------------------------------------------------
+# Shard rebalancing (streaming keeps the contiguous cut tail-heavy)
+# ---------------------------------------------------------------------------
+
+
+def mesh_shard_count(mesh: Mesh, axes: Optional[Tuple[str, ...]]) -> int:
+    """Total device count over ``axes`` (default: every mesh axis) — the
+    shard count a mesh-configured engine partitions its layouts into.
+    The single definition :func:`build_sharded_layout` and the engine's
+    rebalance path both resolve through, so the rebalanced ``slots`` shape
+    can never drift from the layout's shard count."""
+    names = tuple(axes) if axes is not None else tuple(mesh.axis_names)
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n
+
+
+@jax.jit
+def shard_live_counts(state: GraphState, slots: jax.Array) -> jax.Array:
+    """int32[S]: live (non-padding, non-tombstone) edges per shard under a
+    slot assignment — the balance signal the engine tracks after
+    ``add_edges``/``remove_edges`` batches apply."""
+    e_cap = state.edge_capacity
+    mask = state.edge_mask()
+    ok = slots < e_cap
+    live = ok & mask[jnp.minimum(slots, e_cap - 1)]
+    return jnp.sum(live.astype(jnp.int32), axis=1)
+
+
+def shard_imbalance(counts: jax.Array) -> jax.Array:
+    """Scalar imbalance of per-shard live counts:
+    ``(max − min) / max(mean, 1)``.  0 for a perfectly even partition;
+    ``≈ S`` when one shard holds everything.  Dimensionless, so one
+    threshold works across graph sizes."""
+    c = counts.astype(jnp.float32)
+    return (jnp.max(c) - jnp.min(c)) / jnp.maximum(jnp.mean(c), 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("num_shards",))
+def balanced_shard_slots(state: GraphState, *,
+                         num_shards: int) -> jax.Array:
+    """A live-balanced slot→shard assignment (int32[S, ⌈E_cap/S⌉]).
+
+    Live slots are dealt round-robin across shards in slot order (shard
+    counts differ by at most one), then dead/padding slots continue the
+    same deal — so the slot ids a streaming ``add_edges`` will fill next
+    (consecutive ids above the high-water mark) are also pre-spread across
+    shards, keeping post-rebalance appends balanced instead of refilling
+    one tail shard.  Pure prefix-sum work, jit-compatible; feed the result
+    to :func:`build_sharded_layout` via ``slots=``.
+    """
+    e_cap = state.edge_capacity
+    e_s = -(-e_cap // num_shards)
+    mask = state.edge_mask()
+    m = mask.astype(jnp.int32)
+    live_rank = jnp.cumsum(m) - m           # exclusive prefix over lives
+    dead_rank = jnp.cumsum(1 - m) - (1 - m)
+    seq = jnp.where(mask, live_rank, jnp.sum(m) + dead_rank)
+    flat = (seq % num_shards) * e_s + seq // num_shards
+    out = jnp.full((num_shards * e_s,), e_cap, jnp.int32)
+    out = out.at[flat].set(jnp.arange(e_cap, dtype=jnp.int32), mode="drop")
+    return out.reshape(num_shards, e_s)
+
+
+def rebalance_sharded_layout(
+    state: GraphState,
+    *,
+    num_shards: int,
+    slots: Optional[jax.Array] = None,
+    threshold: float = 1.0,
+) -> Tuple[jax.Array, bool, float]:
+    """Recut the edge partition when live-edge imbalance exceeds
+    ``threshold``.
+
+    ``slots`` is the current assignment (default: the contiguous
+    :func:`shard_slots` cut — what a mesh engine starts from).  Returns
+    ``(slots', rebalanced, imbalance)``: the assignment to build the next
+    layouts with, whether it changed, and the imbalance that was measured
+    (:func:`shard_imbalance` of :func:`shard_live_counts`, read back to
+    host — this runs between jitted steps, once per applied update batch,
+    never in the query hot loop).
+
+    The recut itself is :func:`balanced_shard_slots`; the *migration*
+    happens at the next :func:`build_sharded_layout` call, which gathers
+    the streams per the new assignment (static shapes — one O(E) gather,
+    amortized exactly like the per-shard sorts).  The engine drives this
+    loop: it invalidates its cached layouts and counts the event in
+    ``engine.rebalances``.
+    """
+    if slots is None:
+        slots = jnp.asarray(shard_slots(state.edge_capacity, num_shards))
+    imbalance = float(shard_imbalance(shard_live_counts(state, slots)))
+    if imbalance <= threshold:
+        return slots, False, imbalance
+    return (balanced_shard_slots(state, num_shards=num_shards), True,
+            imbalance)
 
 
 def place_sharded_layout(layout: B.ShardedEdgeLayout) -> B.ShardedEdgeLayout:
@@ -224,10 +376,15 @@ def place_sharded_layout(layout: B.ShardedEdgeLayout) -> B.ShardedEdgeLayout:
 
 
 __all__ = [
+    "balanced_shard_slots",
     "build_sharded_layout",
     "edge_sharding",
     "graph_shardings",
     "host_edge_slice",
+    "mesh_shard_count",
     "place_sharded_layout",
+    "rebalance_sharded_layout",
+    "shard_imbalance",
+    "shard_live_counts",
     "shard_slots",
 ]

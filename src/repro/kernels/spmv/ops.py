@@ -57,19 +57,29 @@ def sharded_semiring_push(state: GraphState, values: jax.Array, *,
                           backend: Optional[str] = "pallas",
                           interpret: Optional[bool] = True,
                           layout: Optional[AnyEdgeLayout] = None,
+                          slots: Optional[jax.Array] = None,
                           tile_n: int = TILE_N,
                           chunk: int = CHUNK) -> jax.Array:
     """:func:`semiring_push` over a device mesh: builds (or accepts) a
-    per-shard destination-sorted :class:`ShardedEdgeLayout` and runs the
-    shard_map-ed partial-push + semiring all-reduce.  ``mesh=None`` with
-    ``num_shards`` runs the same partition as an on-device loop (the
-    reference semantics / bench path).  Not jitted — layout construction
-    happens per call; repeated pushes should build the layout once."""
+    per-shard destination-sorted
+    :class:`~repro.core.backend.ShardedEdgeLayout` and runs the
+    shard_map-ed partial-push + semiring all-reduce.
+
+    ``mesh=None`` with ``num_shards`` runs the same partition as an
+    on-device loop (the reference semantics / bench path).  ``slots``
+    optionally overrides the contiguous slot cut with an explicit (e.g.
+    rebalanced) slot→shard assignment — see
+    :func:`repro.graph.partition.balanced_shard_slots`.  Not jitted —
+    layout construction happens per call; repeated pushes should build the
+    layout once and pass it via ``layout=``.
+
+    Returns the dense ``semiring.dtype[node_capacity]`` result vector.
+    """
     if layout is None:
         from repro.graph.partition import build_sharded_layout
         layout = build_sharded_layout(
             state, mesh=mesh, axes=axes, num_shards=num_shards,
-            weight=weight, semiring=semiring, chunk=chunk)
+            weight=weight, semiring=semiring, chunk=chunk, slots=slots)
     return push(values, layout, semiring=semiring, backend=backend,
                 tile_n=tile_n, chunk=chunk, interpret=interpret)
 

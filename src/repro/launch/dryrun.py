@@ -107,8 +107,17 @@ def run_veilgraph_cell(mesh, mesh_name: str, *, nodes=2**25, edges=2**30,
     ``fused_query_step`` with ``mesh=`` builds one locally-sorted edge shard
     per device inline (a contiguous reshape of the 1-D edge sharding, then S
     independent axis-1 sorts) and runs every O(E) pass as a shard_map
-    partial push + all-reduce.  The lowering is asserted to trace **zero**
-    unsorted ``push_coo`` calls — the pre-sharded cost model this replaced.
+    partial push + all-reduce.  Summary construction is the mesh-native
+    distributed bucket sort (per-shard E_K selection + dst-sorted
+    compaction, one capacity-padded all-to-all, shard-local row offsets).
+
+    Two gates are asserted on the lowered/compiled program:
+
+    - it traces **zero** unsorted ``push_coo`` calls (the pre-sharded cost
+      model this replaced);
+    - it contains **zero** all-gathers of a full edge-space buffer (the
+      pre-sharded E_K compaction replicated ``e_src``/``e_dst`` that way —
+      the wall-clock ceiling the sharded summary removes).
 
     ``backend`` picks the per-shard propagation kernels ("auto" resolves
     per device: TPU → the Pallas MXU/VPU kernels inside each shard,
@@ -177,6 +186,21 @@ def run_veilgraph_cell(mesh, mesh_name: str, *, nodes=2**25, edges=2**30,
         cost = {"flops": hc.flops, "bytes accessed": hc.bytes}
         coll = dict(hc.coll)
         counts = dict(hc.coll_counts)
+        # the sharded summary construction must never materialize a
+        # replicated full-edge-space buffer: with 4-byte endpoints, an
+        # all-gather at least edge-buffer-sized means some stage (the
+        # pre-sharded E_K compaction gathered e_src/e_dst this way, ~9 GiB
+        # per device at this shape) replicated the stream.  The bucket
+        # exchange is an all-to-all of capacity-padded hot blocks — orders
+        # of magnitude smaller.
+        edge_buffer_bytes = 4 * edges
+        ag_max = hc.coll_max.get("all-gather", 0.0)
+        if ag_max >= edge_buffer_bytes:
+            raise AssertionError(
+                f"summarized path traced an all-gather of {ag_max:.3e} B "
+                f">= one full edge buffer ({edge_buffer_bytes:.3e} B); "
+                f"the sharded summary construction must keep E-space "
+                f"buffers sharded")
         mem = compiled.memory_analysis()
         # "model flops" for the graph query: the paper's useful work = selection
         # + summary + 30 iterations over the hot subgraph; approximate with
@@ -185,6 +209,8 @@ def run_veilgraph_cell(mesh, mesh_name: str, *, nodes=2**25, edges=2**30,
         rec.update(status="ok", lower_s=round(t_lower, 1),
                    compile_s=round(t_compile, 1),
                    backend=backend_r, push_coo_traces=push_coo_traces,
+                   replicated_edge_buffer_gathers=0,
+                   max_all_gather_bytes=ag_max,
                    roofline={
                        "arch": "veilgraph-pagerank", "shape": rec["shape"],
                        "mesh": mesh_name, "chips": chips,

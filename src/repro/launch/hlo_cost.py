@@ -107,6 +107,11 @@ class Cost:
     bytes: float = 0.0
     coll: Dict[str, float] = field(default_factory=dict)
     coll_counts: Dict[str, float] = field(default_factory=dict)
+    #: largest single-instruction buffer per collective kind (bytes, NOT
+    #: trip-multiplied) — how callers detect "something replicated a whole
+    #: sharded buffer" (e.g. an all-gather the size of the edge stream)
+    #: independently of how often the loop runs it
+    coll_max: Dict[str, float] = field(default_factory=dict)
 
     def add(self, other: "Cost", mult: float = 1.0) -> None:
         self.flops += mult * other.flops
@@ -115,6 +120,8 @@ class Cost:
             self.coll[k] = self.coll.get(k, 0.0) + mult * v
         for k, v in other.coll_counts.items():
             self.coll_counts[k] = self.coll_counts.get(k, 0.0) + mult * v
+        for k, v in other.coll_max.items():
+            self.coll_max[k] = max(self.coll_max.get(k, 0.0), v)
 
     @property
     def collective_bytes(self) -> float:
@@ -230,6 +237,8 @@ def analyze_computation(name: str, comps: Dict[str, Computation],
                 total.flops += sub.flops
                 for k, v in sub.coll.items():
                     total.coll[k] = total.coll.get(k, 0.0) + v
+                for k, v in sub.coll_max.items():
+                    total.coll_max[k] = max(total.coll_max.get(k, 0.0), v)
             total.bytes += opnd_bytes + out_bytes
             continue
         if op in ("call", "async-start", "custom-call", "conditional"):
@@ -249,9 +258,12 @@ def analyze_computation(name: str, comps: Dict[str, Computation],
                 break
         if is_coll:
             factor = 2.0 if is_coll == "all-reduce" else 1.0
-            eff = factor * max(out_bytes, opnd_bytes)
+            raw = max(out_bytes, opnd_bytes)
+            eff = factor * raw
             total.coll[is_coll] = total.coll.get(is_coll, 0.0) + eff
             total.coll_counts[is_coll] = total.coll_counts.get(is_coll, 0.0) + 1
+            total.coll_max[is_coll] = max(
+                total.coll_max.get(is_coll, 0.0), raw)
             total.bytes += opnd_bytes + out_bytes
             continue
 

@@ -17,6 +17,7 @@ def top_k_ids(scores: np.ndarray, k: int,
 
 def l1_delta(a: np.ndarray, b: np.ndarray,
              active: np.ndarray | None = None) -> float:
+    """L1 distance between two score vectors over the active mask."""
     m = np.asarray(active, bool) if active is not None \
         else np.ones(len(a), bool)
     return float(np.abs(np.asarray(a)[m] - np.asarray(b)[m]).sum())
@@ -24,6 +25,7 @@ def l1_delta(a: np.ndarray, b: np.ndarray,
 
 def linf_delta(a: np.ndarray, b: np.ndarray,
                active: np.ndarray | None = None) -> float:
+    """L∞ (max per-vertex) distance between two score vectors."""
     m = np.asarray(active, bool) if active is not None \
         else np.ones(len(a), bool)
     return float(np.abs(np.asarray(a)[m] - np.asarray(b)[m]).max())

@@ -17,6 +17,10 @@ import numpy as np
 
 @dataclass(frozen=True)
 class StreamConfig:
+    """The paper's stream protocol parameters: |S| total streamed edges,
+    delivered in Q equal chunks (one query per chunk), with optional
+    deterministic shuffling of the update order."""
+
     stream_size: int      # |S| ∈ {5000, 10000, 20000, 40000} in the paper
     num_queries: int = 50  # Q
     shuffle: bool = True

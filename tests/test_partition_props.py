@@ -7,7 +7,11 @@ than edges) the partition must be exactly that — a partition:
 - each shard's stream is destination-sorted *locally*, with per-shard
   ``row_offsets`` consistent with it;
 - the ⊕-merge of the per-shard partial pushes equals the unsorted
-  ``push_coo`` reference over the whole edge set.
+  ``push_coo`` reference over the whole edge set;
+- *rebalanced* partitions (:func:`balanced_shard_slots`, the streaming
+  load-balance recut) are partitions too, spread live edges within one of
+  perfectly even, and preserve push results — **bitwise** for the
+  min-reduce semirings, whose ⊕ is reassociation-exact.
 
 Runs with the real ``hypothesis`` when installed, or the deterministic
 shim from ``tests/_hypothesis_compat.py`` otherwise.
@@ -20,7 +24,12 @@ from hypothesis import given, settings, strategies as st
 from repro.core import backend as B
 from repro.core.semiring import resolve_semiring
 from repro.graph import from_edges
-from repro.graph.partition import build_sharded_layout, shard_slots
+from repro.graph.graph import remove_edges_by_slot
+from repro.graph.partition import (balanced_shard_slots,
+                                   build_sharded_layout,
+                                   rebalance_sharded_layout,
+                                   shard_imbalance, shard_live_counts,
+                                   shard_slots)
 
 
 def _random_graph(rng, n, m, e_extra):
@@ -122,3 +131,103 @@ def test_merged_shard_pushes_equal_push_coo(n, m, num_shards, seed,
     else:
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Rebalanced partitions (the streaming load-balance recut)
+# ---------------------------------------------------------------------------
+
+
+def _churned_graph(rng, n, m, e_extra, removals):
+    """A graph with streaming damage: tombstones sprinkled over the buffer
+    (what hollows out shards) plus append headroom (what fills tail-heavy)."""
+    g = _random_graph(rng, n, m, e_extra)
+    if m and removals:
+        slots = rng.choice(m, size=min(removals, m), replace=False)
+        g = remove_edges_by_slot(g, jnp.asarray(slots, jnp.int32))
+    return g
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(2, 50), m=st.integers(0, 120),
+       e_extra=st.integers(0, 200), removals=st.integers(0, 40),
+       num_shards=st.integers(1, 10), seed=st.integers(0, 10_000))
+def test_balanced_slots_is_an_even_partition(n, m, e_extra, removals,
+                                             num_shards, seed):
+    """balanced_shard_slots is a partition of the slot space whose
+    per-shard live counts differ by at most one (a perfect deal)."""
+    rng = np.random.default_rng(seed)
+    g = _churned_graph(rng, n, m, e_extra, removals)
+    slots = np.asarray(balanced_shard_slots(g, num_shards=num_shards))
+    e_cap = g.edge_capacity
+    real = slots[slots < e_cap]
+    np.testing.assert_array_equal(np.sort(real), np.arange(e_cap))
+    counts = np.asarray(shard_live_counts(g, jnp.asarray(slots)))
+    assert counts.sum() == int(g.num_live_edges())
+    assert counts.max() - counts.min() <= 1
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(2, 50), m=st.integers(1, 120),
+       e_extra=st.integers(0, 200), removals=st.integers(0, 40),
+       num_shards=st.integers(1, 10), seed=st.integers(0, 10_000),
+       semiring=st.sampled_from(["plus_times", "min_plus", "min_min",
+                                 "max_times"]))
+def test_rebalanced_layout_preserves_push(n, m, e_extra, removals,
+                                          num_shards, seed, semiring):
+    """A layout built over the rebalanced assignment pushes identically to
+    the unsorted reference — **bitwise** for the min-reduce semirings
+    (rebalancing is a pure load-balance decision, never a semantics one)."""
+    s = resolve_semiring(semiring)
+    rng = np.random.default_rng(seed)
+    g = _churned_graph(rng, n, m, e_extra, removals)
+    weight = "inv_out" if semiring == "plus_times" else "unit"
+    if np.issubdtype(s.np_dtype, np.floating):
+        values = jnp.asarray(rng.random(n).astype(s.np_dtype))
+    else:
+        values = jnp.asarray(rng.integers(0, n, n).astype(s.np_dtype))
+    slots = balanced_shard_slots(g, num_shards=num_shards)
+    lay = build_sharded_layout(g, num_shards=num_shards, weight=weight,
+                               semiring=semiring, slots=slots)
+    out = B.push(values, lay, semiring=semiring, backend="segment_sum")
+
+    mask = g.edge_mask()
+    if weight == "inv_out":
+        from repro.graph.graph import inv_out_degree
+        w = jnp.where(mask, inv_out_degree(g)[g.src], 0.0)
+    else:
+        w = jnp.where(mask, jnp.asarray(s.one, s.dtype),
+                      jnp.asarray(s.zero, s.dtype))
+    ref = B.push_coo(values, g.src, g.dst, n, weight=w, mask=mask,
+                     semiring=semiring)
+    assert out.dtype == ref.dtype
+    if s.add == "min":
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    else:
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(4, 40), m=st.integers(8, 100),
+       num_shards=st.integers(2, 8), seed=st.integers(0, 10_000))
+def test_rebalance_trigger_thresholds(n, m, num_shards, seed):
+    """rebalance_sharded_layout recuts exactly when imbalance exceeds the
+    threshold: a front-loaded buffer (huge append headroom) trips it, and
+    the recut assignment measures (near-)zero imbalance afterwards."""
+    rng = np.random.default_rng(seed)
+    g = _random_graph(rng, n, m, e_extra=8 * m)  # lives in the head only
+    slots0 = jnp.asarray(shard_slots(g.edge_capacity, num_shards))
+    imb0 = float(shard_imbalance(shard_live_counts(g, slots0)))
+    # below threshold: assignment unchanged
+    same, rebalanced, measured = rebalance_sharded_layout(
+        g, num_shards=num_shards, threshold=imb0 + 1.0)
+    assert not rebalanced and measured == imb0
+    np.testing.assert_array_equal(np.asarray(same), np.asarray(slots0))
+    # above threshold: recut to (near-)even
+    new, rebalanced, measured = rebalance_sharded_layout(
+        g, num_shards=num_shards, threshold=imb0 / 2)
+    if imb0 > imb0 / 2:
+        assert rebalanced
+        counts = np.asarray(shard_live_counts(g, new))
+        assert counts.max() - counts.min() <= 1

@@ -11,9 +11,16 @@ The contract:
 - sharded ``push`` == single-layout ``push`` for every registered semiring
   × weight mode — **bitwise** for the min-reduce semirings (min/pmin is
   reassociation-exact), to f32 summation order for sum/max-of-products;
+- sharded ``build_summary`` (the distributed bucket sort) == the
+  replicated construction: same counters, identical E_K edge multiset,
+  same ``b_in`` boundary and the same summarized-sweep answers (bitwise
+  for min semirings);
 - sharded ``fused_query_step`` == the unsharded engine answer for every
   registered algorithm (bitwise for the min-semiring workloads at full
   hot-set coverage);
+- a mesh-configured engine under a forced-imbalance stream *rebalances*
+  (recuts its slot partition) and keeps answering identically to the
+  single-device engine;
 - the sharded plugin path traces **zero** unsorted ``push_coo`` calls.
 """
 
@@ -154,6 +161,192 @@ def test_sharded_push_trace_time_guards():
     if jax.device_count() >= 2:  # with 1 device every shard count divides
         with pytest.raises(ValueError, match="multiple"):
             build_sharded_layout(g, mesh=_mesh(2), num_shards=3)
+
+
+# -------------------------------------------- sharded build_summary parity
+def _ek_triples(summary):
+    """The valid (src, dst, w) E_K triples of a summary, order-normalized —
+    flat and sharded buffers store the same multiset in different shapes."""
+    k_cap = summary.hot_ids.shape[0]
+    src = np.asarray(summary.ek_src)
+    dst = np.asarray(summary.ek_dst)
+    w = np.asarray(summary.ek_w)
+    if src.ndim == 1:
+        valid = np.arange(src.shape[0]) < int(summary.num_ek)
+    else:
+        valid = dst < k_cap
+    t = np.stack([src[valid].astype(np.float64),
+                  dst[valid].astype(np.float64),
+                  w[valid].astype(np.float64)])
+    return t[:, np.lexsort(t)]
+
+
+#: (algorithm summary spec) -> the build_summary kwargs it exercises
+SUMMARY_SPECS = [
+    ("inv_out", False, "plus_times"),   # PageRank
+    ("unit", False, "plus_times"),      # HITS fwd / Katz
+    ("unit", True, "plus_times"),       # HITS rev
+    ("unit", False, "min_min"),         # CC fwd
+    ("unit", True, "min_min"),          # CC rev
+    ("length", False, "min_plus"),      # SSSP
+]
+
+
+@pytest.mark.parametrize("weight,reverse,semiring", SUMMARY_SPECS)
+def test_sharded_build_summary_matches_replicated(weight, reverse, semiring):
+    """The distributed bucket sort builds the same summary the replicated
+    compaction does: identical relabelling, counters and boundary, the same
+    E_K edge multiset, and identical summarized pushes (bitwise for min)."""
+    from repro.core.pagerank import build_summary
+
+    g = _graph(n=280, m=1800, seed=21)
+    values = _values(semiring, g.node_capacity, seed=22)
+    hot = jnp.asarray(
+        np.random.default_rng(23).random(g.node_capacity) < 0.3)
+    caps = dict(hot_node_capacity=128, hot_edge_capacity=1024)
+    kw = dict(weight=weight, reverse=reverse, semiring=semiring)
+    ref = build_summary(g, values, hot, **caps, **kw)
+    sharded_layout = build_sharded_layout(g, mesh=_mesh(), **kw)
+    sh = build_summary(g, values, hot, **caps, layout=sharded_layout, **kw)
+
+    assert sh.sharded and not ref.sharded
+    assert sh.num_shards == sharded_layout.num_shards
+    for field in ("num_hot", "num_ek", "num_eb", "overflow"):
+        assert int(getattr(sh, field)) == int(getattr(ref, field)), field
+    np.testing.assert_array_equal(np.asarray(sh.hot_ids),
+                                  np.asarray(ref.hot_ids))
+    _assert_matches(sh.b_in, ref.b_in, semiring)
+    np.testing.assert_array_equal(_ek_triples(sh), _ek_triples(ref))
+    # the summarized sweep consumes both forms through summary_layout/push
+    local = _values(semiring, 128, seed=24)
+    out_ref = B.push(local, B.summary_layout(ref, semiring=semiring),
+                     semiring=semiring, backend="segment_sum")
+    out_sh = B.push(local, B.summary_layout(sh, semiring=semiring),
+                    semiring=semiring, backend="segment_sum")
+    _assert_matches(out_sh, out_ref, semiring)
+
+
+def test_sharded_summarized_sweeps_match_replicated():
+    """End-to-end over the summarized kernels: PageRank (f32 tolerance) and
+    SSSP (bitwise) answers agree between the two summary forms."""
+    from repro.core.pagerank import (build_summary, pagerank,
+                                     summarized_pagerank)
+    from repro.core.traversal import sssp, summarized_sssp
+
+    g = _graph(n=260, m=1600, seed=25)
+    hot = jnp.asarray(
+        np.random.default_rng(26).random(g.node_capacity) < 0.4)
+    caps = dict(hot_node_capacity=160, hot_edge_capacity=2048)
+    ranks, _ = pagerank(g, num_iters=5)
+    ref = build_summary(g, ranks, hot, **caps)
+    sh = build_summary(
+        g, ranks, hot, **caps,
+        layout=build_sharded_layout(g, mesh=_mesh(), weight="inv_out"))
+    r_ref, _ = summarized_pagerank(ref, ranks, num_iters=10)
+    r_sh, _ = summarized_pagerank(sh, ranks, num_iters=10)
+    np.testing.assert_allclose(np.asarray(r_sh), np.asarray(r_ref), **TOL)
+
+    source = jnp.zeros((g.node_capacity,), bool).at[0].set(True)
+    dist, _ = sssp(g, source, num_iters=5)
+    kw = dict(weight="length", semiring="min_plus")
+    ref_m = build_summary(g, dist, hot, **caps, **kw)
+    sh_m = build_summary(
+        g, dist, hot, **caps, **kw,
+        layout=build_sharded_layout(g, mesh=_mesh(), **kw))
+    d_ref, _ = summarized_sssp(ref_m, dist, source, num_iters=10)
+    d_sh, _ = summarized_sssp(sh_m, dist, source, num_iters=10)
+    np.testing.assert_array_equal(np.asarray(d_sh), np.asarray(d_ref))
+
+
+def test_sharded_summary_bucket_overflow_flags():
+    """A destination bucket past its ⌈H_cap/S⌉ capacity raises ``overflow``
+    even when |E_K| fits globally (the caller falls back to exact), and a
+    roomy H_cap over the same skewed graph stays clean."""
+    from repro.core.pagerank import build_summary
+
+    # a star whose edges all sit in the FIRST slot shard (huge append
+    # headroom) and all land on vertex 0: one (source shard, bucket) block
+    # must carry every E_K edge
+    n, m = 64, 20
+    src = np.arange(1, m + 1, dtype=np.int32)
+    dst = np.zeros(m, np.int32)
+    g = from_edges(src, dst, n, 512)  # E_s = 64 -> all lives in shard 0
+    hot = jnp.ones((n,), bool)
+    ranks = jnp.ones((n,), jnp.float32)
+    layout = build_sharded_layout(g, num_shards=8, weight="inv_out")
+    # H_cap = 64 -> per-block capacity ⌈64/8⌉ = 8 < 20 edges in one block,
+    # even though |E_K| = 20 fits H_cap globally
+    tight = build_summary(g, ranks, hot, hot_node_capacity=n,
+                          hot_edge_capacity=64, layout=layout)
+    assert int(tight.num_ek) == m <= 64
+    assert bool(tight.overflow)
+    # same graph, H_cap sized so the block fits -> clean flag, full E_K
+    roomy = build_summary(g, ranks, hot, hot_node_capacity=n,
+                          hot_edge_capacity=8 * m, layout=layout)
+    assert not bool(roomy.overflow)
+    assert int(roomy.num_ek) == m
+
+
+# --------------------------------------------------- engine shard rebalance
+@pytest.mark.parametrize("name", ["sssp", "connected-components", "pagerank"])
+def test_forced_imbalance_stream_triggers_rebalance(name):
+    """A stream over a front-loaded edge buffer (huge append headroom ->
+    every live slot in the head shards) must trip the engine's rebalance
+    threshold exactly once, recut to an even partition, and keep the
+    answers equal to the single-device engine — bitwise for the
+    min-semiring workloads."""
+    src, dst = gnm_edges(220, 1300, seed=31)
+    kw = {"sssp": dict(sources=(0,))}.get(name, {})
+    common = dict(algorithm=name, num_iters=8, edge_capacity=16384, **kw)
+    with repro.session((src, dst), **common) as ref, \
+         repro.session((src, dst), mesh=_mesh(), num_shards=8,
+                       **common) as sh:
+        assert sh.engine.config.rebalance_threshold == 1.0  # on by default
+        assert sh.engine.rebalances == 0  # nothing measured before a query
+        for s in (ref, sh):
+            s.add_edges(np.arange(50), np.arange(50) + 100)
+        r_ref = ref.query()
+        r_sh = sh.query()
+        assert sh.engine.rebalances == 1
+        assert r_sh.stats.rebalanced
+        assert sh.engine.last_imbalance > 1.0
+        _assert_matches(np.asarray(r_sh.scores), np.asarray(r_ref.scores),
+                        sh.algorithm.semiring)
+        # the recut assignment is (near-)even and further balanced appends
+        # do not re-trigger (dead slots were dealt round-robin too)
+        from repro.graph.partition import shard_live_counts
+        counts = np.asarray(
+            shard_live_counts(sh.engine.state, sh.engine._shard_slots))
+        assert counts.max() - counts.min() <= 1
+        for s in (ref, sh):
+            s.add_edges(np.arange(60), np.arange(60) + 30)
+        r2_ref = ref.query()
+        r2_sh = sh.query()
+        assert sh.engine.rebalances == 1
+        assert not r2_sh.stats.rebalanced
+        _assert_matches(np.asarray(r2_sh.scores), np.asarray(r2_ref.scores),
+                        sh.algorithm.semiring)
+
+
+def test_num_shards_without_mesh_rejected():
+    """num_shards only feeds the mesh layout/rebalance path; accepting it
+    meshless would silently run unsharded."""
+    src, dst = gnm_edges(40, 150, seed=33)
+    with pytest.raises(ValueError, match="num_shards requires mesh"):
+        repro.session((src, dst), algorithm="pagerank", num_shards=8)
+
+
+def test_rebalance_disabled_and_threshold_none():
+    """rebalance_threshold=None restores the contiguous-cut behaviour (the
+    pre-rebalance engine) without touching results."""
+    src, dst = gnm_edges(150, 800, seed=32)
+    with repro.session((src, dst), algorithm="pagerank", num_iters=6,
+                       edge_capacity=8192, mesh=_mesh(), num_shards=8,
+                       rebalance_threshold=None) as s:
+        s.add_edges([1, 2, 3], [4, 5, 6])
+        s.query()
+        assert s.engine.rebalances == 0
+        assert s.engine._shard_slots is None
 
 
 # ------------------------------------------------- fused query step parity
