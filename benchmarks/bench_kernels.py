@@ -180,15 +180,74 @@ def _sharded_summary_cases(g, ranks, *, iters, sweep_iters, num_shards=8):
     return cases
 
 
+def _serving_cases(g, ranks, live_edges, *, iters, batch_sizes=(1, 8, 32)):
+    """Multi-tenant serving rows: the batched ``[B, N]`` push vs the B-way
+    loop of single pushes over the same layout, per batch size, plus one
+    end-to-end serving-engine throughput row.  The derived column is
+    queries per second (B pushes answered per call for the push rows;
+    completed queries over wave wall time for the engine row) — the
+    continuous-batching engine's case rests on the batched rows beating
+    the looped ones at B >= 8.
+    """
+    from repro.core import backend as B
+
+    layout = B.build_layout(g, weight="inv_out")
+    nodes = g.node_capacity
+    rng = np.random.default_rng(7)
+
+    cases = []
+    for bsz in batch_sizes:
+        vals = jnp.asarray(rng.random((bsz, nodes), np.float32))
+        batched = jax.jit(lambda v, lay: B.push(v, lay,
+                                                backend="segment_sum"))
+        us = _bench(batched, vals, layout, iters=iters, warmup=1)
+        cases.append((f"serving_push_batched_b{bsz}", us,
+                      f"{bsz / (us / 1e6):.0f}q/s"))
+        looped = jax.jit(lambda v, lay, n=bsz: jnp.stack(
+            [B.push(v[i], lay, backend="segment_sum") for i in range(n)]))
+        us = _bench(looped, vals, layout, iters=iters, warmup=1)
+        cases.append((f"serving_push_looped_b{bsz}", us,
+                      f"{bsz / (us / 1e6):.0f}q/s"))
+
+    # end-to-end: a slot-4 serving engine draining 8 PPR + 4 SSSP queries
+    # over a smaller graph (full waves, refill, harvest — wall time is
+    # dominated by trace/compile on the first wave, so report steady state
+    # by timing a second drain on the warm engine)
+    from repro.api import serve_session
+    from repro.graph.generators import gnm_edges
+
+    s_src, s_dst = gnm_edges(2_000, 16_000, seed=3)
+    srv = serve_session((s_src, s_dst), slots=4,
+                        hot_node_capacity=2_048, hot_edge_capacity=32_768)
+    def _drain():
+        for s in range(8):
+            srv.submit("personalized-pagerank", seeds=(s,))
+        for s in range(4):
+            srv.submit("sssp", sources=(s,))
+        srv.run()
+    _drain()  # warm: traces the two lane programs
+    waves0, wall0 = srv.stats.waves, srv.stats.wall_s
+    t0 = time.perf_counter()
+    _drain()
+    us = (time.perf_counter() - t0) * 1e6
+    waves = srv.stats.waves - waves0
+    cases.append(("serving_engine_slots4_12q", us,
+                  f"{12 / (us / 1e6):.1f}q/s,{waves}waves"))
+    srv.close()
+    return cases
+
+
 def bench_sweep_backends(*, smoke: bool = False, nodes=50_000, edges=500_000):
     """Backend-vs-backend rows: a plus_times push + summarized PageRank
     sweep, and a min_plus push + summarized SSSP sweep, per backend on the
     500k-edge reference graph, plus sharded-push rows over 2/4/8 host
-    shards and the sharded-summary / rebalance rows (distributed bucket
-    sort vs replicated compaction, recut cost).  The pallas rows run in
-    interpret mode off-TPU — they track kernel-logic cost trajectory, not
-    TPU wall time (the dry-run covers that); the min_plus rows exercise
-    the masked-reduce kernel variant instead of the one-hot matmul.
+    shards, the sharded-summary / rebalance rows (distributed bucket
+    sort vs replicated compaction, recut cost), and the serving rows
+    (batched [B, N] push vs the B-way loop, engine throughput).  The
+    pallas rows run in interpret mode off-TPU — they track kernel-logic
+    cost trajectory, not TPU wall time (the dry-run covers that); the
+    min_plus rows exercise the masked-reduce kernel variant instead of
+    the one-hot matmul.
     Returns (rows, records); the records feed BENCH_sweeps.json.
     """
     from repro.core import backend as B
@@ -230,6 +289,7 @@ def bench_sweep_backends(*, smoke: bool = False, nodes=50_000, edges=500_000):
     cases.extend(_sharded_cases(g, ranks, live_edges, iters=iters))
     cases.extend(_sharded_summary_cases(g, ranks, iters=iters,
                                         sweep_iters=sweep_iters))
+    cases.extend(_serving_cases(g, ranks, live_edges, iters=iters))
     records = [
         {"name": name, "us_per_call": round(us, 1), "derived": derived}
         for name, us, derived in cases

@@ -5,8 +5,8 @@ are re-exported lazily here so ``import repro`` stays cheap for the
 subpackages (models/kernels/launch) that never touch the graph engine.
 """
 
-_API_NAMES = ("session", "VeilGraphSession", "QueryResult", "Action",
-              "available_algorithms")
+_API_NAMES = ("session", "serve_session", "VeilGraphSession", "QueryResult",
+              "Action", "available_algorithms")
 
 
 def __getattr__(name):

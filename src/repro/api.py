@@ -350,10 +350,47 @@ def session(
     return VeilGraphSession(engine, stream)
 
 
+def serve_session(
+    graph_source: GraphSource,
+    config: Optional[EngineConfig] = None,
+    *,
+    slots: int = 4,
+    algorithm: Union[StreamingAlgorithm, str] = "pagerank",
+    **overrides,
+):
+    """Build a started session and wrap it for multi-tenant serving.
+
+    The sibling of :func:`session` for concurrent query workloads: one
+    shared graph/engine, a
+    :class:`~repro.serve.graph.GraphServingEngine` front door with
+    ``slots`` static batch slots per algorithm lane::
+
+        srv = veilgraph.serve_session((src, dst), slots=4)
+        t1 = srv.submit("personalized-pagerank", seeds=(3,))
+        t2 = srv.submit("sssp", sources=(17,))
+        srv.run()
+        t1.result, srv.stats.queries_per_s
+
+    ``algorithm``/``config``/``overrides`` configure the underlying
+    engine exactly as in :func:`session` (capacities, hot-set knobs,
+    backend, mesh) — ``algorithm`` only sets the engine's base workload
+    for the initial exact compute; served queries each carry their own.
+    The underlying :class:`VeilGraphSession` stays reachable at
+    ``.session`` and is closed by the serving engine's ``with``-exit.
+    """
+    from repro.serve.graph import GraphServingEngine
+
+    base = session(graph_source, algorithm, config, **overrides)
+    srv = GraphServingEngine(base.engine, slots=slots)
+    srv.session = base
+    return srv
+
+
 __all__ = [
     "Action",
     "QueryResult",
     "VeilGraphSession",
     "available_algorithms",
+    "serve_session",
     "session",
 ]

@@ -12,6 +12,8 @@ everything rank-computation-specific lives behind :class:`StreamingAlgorithm`:
     exact(state, graph)          -> (state', iterations)        # ground truth
     build_summaries(state, graph, hot, caps) -> (SummaryBuffers, ...)
     summarized(state, graph, summaries)      -> (state', iterations)
+    summarized_batched(batch_state, graph, summaries, row_mask)
+                                 -> (batch', iters, row_delta)  # serving
     result_view(state)           -> dtype[N_cap]  # the query answer
     selection_view(state)        -> f32[N_cap]    # drives the hot-set Δ
                                     policy (defaults to result_view as f32)
@@ -68,18 +70,26 @@ import jax.numpy as jnp
 
 from repro.core.hits import hits as _hits
 from repro.core.hits import summarized_hits as _summarized_hits
+from repro.core.hits import summarized_hits_batched as _summarized_hits_batched
 from repro.core.katz import katz as _katz
 from repro.core.katz import summarized_katz as _summarized_katz
+from repro.core.katz import summarized_katz_batched as _summarized_katz_batched
 from repro.core.pagerank import SummaryBuffers
 from repro.core.pagerank import build_summary as _build_summary
 from repro.core.pagerank import pagerank as _pagerank
 from repro.core.pagerank import summarized_pagerank as _summarized_pagerank
+from repro.core.pagerank import \
+    summarized_pagerank_batched as _summarized_pagerank_batched
 from repro.core.traversal import LABEL_SENTINEL
 from repro.core.traversal import connected_components as _cc
 from repro.core.traversal import sssp as _sssp
 from repro.core.traversal import \
     summarized_connected_components as _summarized_cc
+from repro.core.traversal import \
+    summarized_connected_components_batched as _summarized_cc_batched
 from repro.core.traversal import summarized_sssp as _summarized_sssp
+from repro.core.traversal import \
+    summarized_sssp_batched as _summarized_sssp_batched
 from repro.graph.graph import GraphState
 
 #: Algorithm state is a flat dict of device arrays — a JAX pytree, so the
@@ -131,6 +141,13 @@ class StreamingAlgorithm(abc.ABC):
     #: Empty (the default) declares nothing: legacy plugins with arbitrary
     #: state keys construct unchecked.
     state_dtypes: Dict[str, str] = {}
+    #: constructor knobs whose whole effect is captured by
+    #: :meth:`init_state` (seed sets, source sets) — the per-query
+    #: *identity* as opposed to numeric sweep knobs.  The serving engine
+    #: batches requests that differ only in these into one slot lane (the
+    #: identity rides in the ``[B, ...]`` batch state; the batched sweep
+    #: never reads it from ``self``).
+    per_query_params: Tuple[str, ...] = ()
     #: full-graph edge layouts the sweeps consume, as
     #: (weight, reverse, semiring) triples — the engine builds and caches
     #: one EdgeLayout per entry (once per applied update batch) and passes
@@ -165,6 +182,7 @@ class StreamingAlgorithm(abc.ABC):
         hot_edge_capacity: int,
         layouts=None,
         backend: Optional[str] = None,
+        shard_bucket_capacity: Optional[int] = None,
     ) -> Tuple[SummaryBuffers, ...]:
         """Compacted summary graph(s) the summarized step consumes.
 
@@ -174,6 +192,17 @@ class StreamingAlgorithm(abc.ABC):
         Algorithms needing different frozen vectors or both orientations
         (HITS, connected components) override.  ``layouts`` matches
         :attr:`layout_specs` and accelerates the frozen big-vertex pass.
+        ``shard_bucket_capacity`` tightens the mesh-sharded construction's
+        per-(shard, bucket) slot count (see
+        :func:`repro.core.pagerank.build_summary`); the engine only
+        forwards it when set, so legacy overrides without the keyword
+        keep working.
+
+        Handed a *batched* ``[B, ...]`` state (serving lanes), the frozen
+        vector :meth:`result_view` returns is ``[B, N]`` and the summary
+        comes back with a per-query ``b_in [B, K_cap]`` over one shared
+        E_K structure — hot ids, compacted edges and weights depend only
+        on the graph and hot mask, never on per-query scores.
         """
         return (
             _build_summary(
@@ -186,6 +215,7 @@ class StreamingAlgorithm(abc.ABC):
                 semiring=self.semiring,
                 layout=layouts[0] if layouts else None,
                 backend=backend,
+                shard_bucket_capacity=shard_bucket_capacity,
             ),
         )
 
@@ -199,6 +229,84 @@ class StreamingAlgorithm(abc.ABC):
         backend: Optional[str] = None,
     ) -> Tuple[AlgoState, jax.Array]:
         """Approximate update restricted to the hot set (§3.1)."""
+
+    def summarized_batched(
+        self,
+        batch_state: AlgoState,
+        graph: GraphState,
+        summaries: Tuple[SummaryBuffers, ...],
+        *,
+        row_mask: Optional[jax.Array] = None,
+        backend: Optional[str] = None,
+    ) -> Tuple[AlgoState, jax.Array, jax.Array]:
+        """Batched summarized sweep for B concurrent queries (serving).
+
+        ``batch_state`` is the :meth:`init_state` pytree with a leading
+        batch axis on every leaf (``[B, ...]``, see
+        :meth:`validate_batch_state`); ``summaries`` shares one E_K
+        structure across all rows, with ``b_in`` either ``[K_cap]``
+        (identical frozen boundary) or ``[B, K_cap]`` (per-query
+        boundary from a batched :meth:`build_summaries`).  ``row_mask``
+        (bool[B], True = live) freezes converged/vacant serving slots:
+        masked rows carry through unchanged and report zero delta.
+
+        Returns ``(batch_state', iterations, row_delta f32[B])`` where
+        ``row_delta`` is the per-row convergence signal of the *last*
+        inner iteration (L1 change for the ranking family, changed-entry
+        count for the min-semiring relaxations).  The shipped algorithms
+        all implement this; plugins that don't are rejected by the
+        serving engine at submit time.
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} does not implement summarized_batched; "
+            "multi-tenant serving needs the batched [B, N] sweep")
+
+    def validate_batch_state(self, batch_state: AlgoState,
+                             batch: int) -> None:
+        """Validate a serving slot bank against :attr:`state_dtypes`.
+
+        Every declared key must be present with its declared dtype and a
+        leading axis of exactly ``batch`` rows.  Algorithms with an empty
+        ``state_dtypes`` declaration (legacy plugins) validate nothing.
+        """
+        if not self.state_dtypes:
+            return
+        missing = sorted(set(self.state_dtypes) - set(batch_state))
+        if missing:
+            raise ValueError(
+                f"{self.name}: batch state is missing declared keys "
+                f"{missing}")
+        for key, want in self.state_dtypes.items():
+            arr = batch_state[key]
+            if jnp.dtype(arr.dtype) != jnp.dtype(want):
+                raise ValueError(
+                    f"{self.name}: batch state[{key!r}] has dtype "
+                    f"{arr.dtype}, declared {want}")
+            if arr.ndim < 2 or arr.shape[0] != batch:
+                raise ValueError(
+                    f"{self.name}: batch state[{key!r}] must have a "
+                    f"leading batch axis of {batch} rows; got shape "
+                    f"{tuple(arr.shape)}")
+
+    def batched_selection_scores(
+        self,
+        batch_state: AlgoState,
+        row_mask: Optional[jax.Array] = None,
+    ) -> jax.Array:
+        """Aggregate f32[N_cap] hot-set signal for a ``[B, ...]`` bank.
+
+        The serving engine picks *one* shared hot set per wave, so the B
+        per-query :meth:`selection_view` signals collapse to their
+        element-wise maximum — a vertex volatile for any live query stays
+        hot for the whole wave.  ``row_mask`` rows that are False (vacant
+        or finished slots) are excluded; if every row is masked the
+        signal is all-zero.
+        """
+        scores = jax.vmap(self.selection_view)(batch_state)
+        if row_mask is not None:
+            scores = jnp.where(row_mask[:, None], scores, -jnp.inf)
+        agg = jnp.max(scores, axis=0)
+        return jnp.where(jnp.isfinite(agg), agg, 0.0)
 
     def __init_subclass__(cls, **kwargs):
         """Legacy-plugin dispatch, resolved once at class creation.
@@ -341,6 +449,20 @@ class PageRankAlgorithm(StreamingAlgorithm):
         )
         return {"ranks": ranks}, iters
 
+    def summarized_batched(self, batch_state, graph, summaries, *,
+                           row_mask=None, backend=None):
+        (summary,) = summaries
+        ranks, iters, row_delta = _summarized_pagerank_batched(
+            summary,
+            batch_state["ranks"],
+            beta=self.beta,
+            num_iters=self.num_iters,
+            tol=self.tol,
+            row_mask=row_mask,
+            backend=backend,
+        )
+        return {"ranks": ranks}, iters, row_delta
+
     def result_view(self, state):
         return state["ranks"]
 
@@ -371,6 +493,7 @@ class PersonalizedPageRankAlgorithm(StreamingAlgorithm):
     name = "personalized-pagerank"
     normalize_selection_scores = True
     state_dtypes = {"ranks": "float32", "teleport": "float32"}
+    per_query_params = ("seeds",)  # identity lives in state["teleport"]
 
     def __post_init__(self):
         if not self.seeds:
@@ -416,6 +539,24 @@ class PersonalizedPageRankAlgorithm(StreamingAlgorithm):
         )
         return {"ranks": ranks, "teleport": state["teleport"]}, iters
 
+    def summarized_batched(self, batch_state, graph, summaries, *,
+                           row_mask=None, backend=None):
+        # one engine lane serves B different seed sets: the teleport
+        # vectors ride in the batch state ([B, N]), not in `self`
+        (summary,) = summaries
+        ranks, iters, row_delta = _summarized_pagerank_batched(
+            summary,
+            batch_state["ranks"],
+            beta=self.beta,
+            num_iters=self.num_iters,
+            tol=self.tol,
+            teleport_v=batch_state["teleport"],
+            row_mask=row_mask,
+            backend=backend,
+        )
+        return {"ranks": ranks, "teleport": batch_state["teleport"]}, \
+            iters, row_delta
+
     def result_view(self, state):
         return state["ranks"]
 
@@ -429,10 +570,14 @@ class PersonalizedPageRankAlgorithm(StreamingAlgorithm):
 class HITSAlgorithm(StreamingAlgorithm):
     """Kleinberg's HITS with per-iteration L1 normalization.
 
-    State carries both vectors; :meth:`result_view` exposes authorities (the
-    usual query answer — swap for hubs with ``rank_by="hub"``).  The
-    summarized path freezes cold contributions in *both* directions, which
-    needs the forward and the reverse (transposed) big-vertex summary.
+    State carries both vectors plus the tracked global-σ estimate
+    (``sigma`` — ``f32[2]``, one per direction); :meth:`result_view`
+    exposes authorities (the usual query answer — swap for hubs with
+    ``rank_by="hub"``).  The summarized path freezes cold contributions in
+    *both* directions, which needs the forward and the reverse (transposed)
+    big-vertex summary; its normalization is anchored to ``sigma``, which
+    exact computations measure and summarized sweeps refresh (see
+    :func:`repro.core.hits.summarized_hits`).
 
     EXACT actions warm-start from the previous vectors: HITS converges to
     the principal singular pair from any positive start, so unlike
@@ -447,7 +592,7 @@ class HITSAlgorithm(StreamingAlgorithm):
     name = "hits"
     normalize_selection_scores = True
     summary_weight = "unit"
-    state_dtypes = {"auth": "float32", "hub": "float32"}
+    state_dtypes = {"auth": "float32", "hub": "float32", "sigma": "float32"}
     layout_specs = (("unit", False, "plus_times"), ("unit", True, "plus_times"))
 
     def __post_init__(self):
@@ -458,10 +603,11 @@ class HITSAlgorithm(StreamingAlgorithm):
     def init_state(self, graph: GraphState) -> AlgoState:
         n = jnp.maximum(graph.num_active_nodes().astype(jnp.float32), 1.0)
         uniform = jnp.where(graph.node_active, 1.0 / n, 0.0).astype(jnp.float32)
-        return {"auth": uniform, "hub": uniform}
+        return {"auth": uniform, "hub": uniform,
+                "sigma": jnp.ones((2,), jnp.float32)}
 
     def exact(self, state, graph, *, layouts=None, backend=None):
-        auth, hub, iters = _hits(
+        auth, hub, iters, sigma = _hits(
             graph,
             state["auth"],
             state["hub"],
@@ -471,11 +617,11 @@ class HITSAlgorithm(StreamingAlgorithm):
             rev_layout=layouts[1] if layouts else None,
             backend=backend,
         )
-        return {"auth": auth, "hub": hub}, iters
+        return {"auth": auth, "hub": hub, "sigma": sigma}, iters
 
     def build_summaries(
         self, state, graph, hot_mask, *, hot_node_capacity, hot_edge_capacity,
-        layouts=None, backend=None,
+        layouts=None, backend=None, shard_bucket_capacity=None,
     ):
         fwd = _build_summary(
             graph, state["hub"], hot_mask,
@@ -484,6 +630,7 @@ class HITSAlgorithm(StreamingAlgorithm):
             weight="unit",
             layout=layouts[0] if layouts else None,
             backend=backend,
+            shard_bucket_capacity=shard_bucket_capacity,
         )
         rev = _build_summary(
             graph, state["auth"], hot_mask,
@@ -492,17 +639,29 @@ class HITSAlgorithm(StreamingAlgorithm):
             weight="unit", reverse=True,
             layout=layouts[1] if layouts else None,
             backend=backend,
+            shard_bucket_capacity=shard_bucket_capacity,
         )
         return (fwd, rev)
 
     def summarized(self, state, graph, summaries, *, backend=None):
         fwd, rev = summaries
-        auth, hub, iters = _summarized_hits(
-            fwd, rev, state["auth"], state["hub"],
+        auth, hub, iters, sigma = _summarized_hits(
+            fwd, rev, state["auth"], state["hub"], state["sigma"],
             num_iters=self.num_iters, tol=self.tol,
             backend=backend,
         )
-        return {"auth": auth, "hub": hub}, iters
+        return {"auth": auth, "hub": hub, "sigma": sigma}, iters
+
+    def summarized_batched(self, batch_state, graph, summaries, *,
+                           row_mask=None, backend=None):
+        fwd, rev = summaries
+        auth, hub, iters, row_delta, sigma = _summarized_hits_batched(
+            fwd, rev, batch_state["auth"], batch_state["hub"],
+            batch_state["sigma"],
+            num_iters=self.num_iters, tol=self.tol,
+            row_mask=row_mask, backend=backend,
+        )
+        return {"auth": auth, "hub": hub, "sigma": sigma}, iters, row_delta
 
     def result_view(self, state):
         return state["auth"] if self.rank_by == "auth" else state["hub"]
@@ -569,6 +728,21 @@ class KatzAlgorithm(StreamingAlgorithm):
             backend=backend,
         )
         return {"katz": c}, iters
+
+    def summarized_batched(self, batch_state, graph, summaries, *,
+                           row_mask=None, backend=None):
+        (summary,) = summaries
+        c, iters, row_delta = _summarized_katz_batched(
+            summary,
+            batch_state["katz"],
+            alpha=self.alpha,
+            beta=self.beta,
+            num_iters=self.num_iters,
+            tol=self.tol,
+            row_mask=row_mask,
+            backend=backend,
+        )
+        return {"katz": c}, iters, row_delta
 
     def result_view(self, state):
         return state["katz"]
@@ -639,11 +813,12 @@ class ConnectedComponentsAlgorithm(StreamingAlgorithm):
 
     def build_summaries(
         self, state, graph, hot_mask, *, hot_node_capacity, hot_edge_capacity,
-        layouts=None, backend=None,
+        layouts=None, backend=None, shard_bucket_capacity=None,
     ):
         common = dict(hot_node_capacity=hot_node_capacity,
                       hot_edge_capacity=hot_edge_capacity,
-                      weight="unit", semiring="min_min", backend=backend)
+                      weight="unit", semiring="min_min", backend=backend,
+                      shard_bucket_capacity=shard_bucket_capacity)
         fwd = _build_summary(
             graph, state["labels"], hot_mask,
             layout=layouts[0] if layouts else None, **common)
@@ -662,6 +837,17 @@ class ConnectedComponentsAlgorithm(StreamingAlgorithm):
                 "churn": (labels != state["labels"]).astype(jnp.float32)}, \
             iters
 
+    def summarized_batched(self, batch_state, graph, summaries, *,
+                           row_mask=None, backend=None):
+        fwd, rev = summaries
+        labels, iters, changed = _summarized_cc_batched(
+            fwd, rev, batch_state["labels"],
+            num_iters=self.num_iters, row_mask=row_mask, backend=backend,
+        )
+        churn = (labels != batch_state["labels"]).astype(jnp.float32)
+        return {"labels": labels, "churn": churn}, iters, \
+            changed.astype(jnp.float32)
+
     def result_view(self, state):
         return state["labels"]
 
@@ -679,10 +865,11 @@ class SSSPAlgorithm(StreamingAlgorithm):
     """Streaming single-source shortest paths (Bellman-Ford on min-plus).
 
     ``sources`` is a (hashable) tuple of vertex ids whose distances are
-    pinned to 0; unreachable vertices hold +∞.  Edge lengths are the unit
-    hop count (the engine's streamed edges carry no length attribute; bake
-    explicit lengths into a ``weight="length"`` layout for the standalone
-    sweeps in :mod:`repro.core.traversal`).  :meth:`selection_view` is the
+    pinned to 0; unreachable vertices hold +∞.  Edge lengths default to
+    the unit hop count; streams that register edges with a per-edge
+    ``weights`` column (``GraphState.edge_len``) feed real lengths into
+    every ``weight="length"`` layout automatically.  :meth:`selection_view`
+    is the
     distance-*delta* indicator of the last sweep, so the Δ-expansion
     follows shortest-path churn instead of raw distance magnitude.
 
@@ -703,6 +890,7 @@ class SSSPAlgorithm(StreamingAlgorithm):
     summary_weight = "length"
     state_dtypes = {"dist": "float32", "source": "bool",
                     "delta": "float32"}
+    per_query_params = ("sources",)  # identity lives in state["source"]
     layout_specs = (("length", False, "min_plus"),)
 
     def __post_init__(self):
@@ -749,6 +937,19 @@ class SSSPAlgorithm(StreamingAlgorithm):
         )
         return {"dist": dist, "source": state["source"],
                 "delta": _finite_churn(dist, state["dist"])}, iters
+
+    def summarized_batched(self, batch_state, graph, summaries, *,
+                           row_mask=None, backend=None):
+        # one engine lane serves B different source sets: the pinned-0
+        # masks ride in the batch state ([B, N]), not in `self`
+        (summary,) = summaries
+        dist, iters, changed = _summarized_sssp_batched(
+            summary, batch_state["dist"], batch_state["source"],
+            num_iters=self.num_iters, row_mask=row_mask, backend=backend,
+        )
+        return {"dist": dist, "source": batch_state["source"],
+                "delta": _finite_churn(dist, batch_state["dist"])}, \
+            iters, changed.astype(jnp.float32)
 
     def result_view(self, state):
         return state["dist"]

@@ -72,7 +72,8 @@ from repro.core.semiring import Semiring, resolve_semiring
 from repro.graph.csr import SortedEdges, gather_push, sort_by_dst
 from repro.graph.graph import GraphState, inv_out_degree
 from repro.kernels.spmv.kernel import (CHUNK, TILE_N, spmv_push,
-                                       spmv_reduce_push)
+                                       spmv_push_batched, spmv_reduce_push,
+                                       spmv_reduce_push_batched)
 
 # jax promoted shard_map out of jax.experimental across 0.4.x/0.5.x
 if hasattr(jax, "shard_map"):  # pragma: no cover - version-dependent
@@ -328,8 +329,9 @@ def build_layout(
       HITS/Katz — but e.g. +∞ for ``min_min`` so labels pass through
       unchanged);
     - ``"length"``  — per-edge lengths for ``min_plus``-style relaxations:
-      ``lengths`` (dtype[E_cap], indexed by edge slot) if given, else 1
-      per edge (hop counts).
+      ``lengths`` (dtype[E_cap], indexed by edge slot) if given, else the
+      graph's streamed ``state.edge_len`` column if present, else 1 per
+      edge (hop counts).
 
     ``reverse=True`` builds the transposed layout (receivers are original
     sources — the HITS hub direction / CC's symmetric pass).  Invalid and
@@ -338,6 +340,8 @@ def build_layout(
     Degrees are baked into ``weight``, so a layout is valid exactly until
     the next applied update batch — the engine invalidates its cache then.
     """
+    if weight == "length" and lengths is None:
+        lengths = state.edge_len  # streamed per-edge lengths, if any
     s = validate_weight_spec(weight, reverse=reverse, semiring=semiring,
                              lengths=lengths,
                              edge_capacity=state.edge_capacity)
@@ -477,6 +481,14 @@ def push(
     ``[S, E_pad]`` for sharded layouts — e.g. the E_B selection in the
     big-vertex pass).  Traced inline — call from inside jitted sweeps;
     ``backend``/``semiring`` must be Python values at trace time.
+
+    **Batched form**: ``values`` may be a ``[B, N]`` matrix — B independent
+    query vectors pushed through the one shared layout, returning
+    ``[B, num_segments]``.  The pallas sum path runs the batched kernel
+    (a true ``[B, chunk] @ [chunk, tile_n]`` MXU matmul per chunk); min/max
+    reductions are reassociation-exact, so every batch row is bitwise
+    equal to its single-query push.  ``mask`` stays per-edge (shared
+    across the batch).
     """
     s = resolve_semiring(semiring)
     if isinstance(layout, ShardedEdgeLayout):
@@ -488,7 +500,17 @@ def push(
             f"{layout.semiring!r}; rebuild the layout for this semiring")
     backend = resolve_backend(backend)
     num_segments = layout.num_segments
+    batched = values.ndim == 2
+    if values.ndim > 2:
+        raise ValueError(
+            f"push expects values of shape [N] or [B, N]; got {values.shape}")
     if backend == "segment_sum":
+        if batched:
+            # vmap keeps each row's segment-reduce order identical to the
+            # single-query call, so min/max rows stay bitwise equal
+            return jax.vmap(lambda v: gather_push(
+                layout, v, num_segments, weight=layout.weight, mask=mask,
+                semiring=s))(values)
         return gather_push(
             layout, values, num_segments, weight=layout.weight, mask=mask,
             semiring=s)
@@ -518,23 +540,26 @@ def push(
                 f"the pallas sum-reduce is the f32 one-hot-matmul MXU path; "
                 f"semiring {s.name!r} ({s.dtype}) needs "
                 f"backend='segment_sum'")
-        contrib = s.combine(values[layout.src], layout.weight)
+        contrib = s.combine(values[..., layout.src], layout.weight)
         if mask is not None:
             contrib = jnp.where(mask, contrib, 0.0)
-        out = spmv_push(
+        push_fn = spmv_push_batched if batched else spmv_push
+        out = push_fn(
             contrib.astype(jnp.float32), layout.dst, tile_start,
             num_tiles=num_tiles, tile_n=tile_n, chunk=chunk,
             interpret=interpret)
     else:
         dtype = jnp.dtype(s.dtype)
         zero = jnp.asarray(s.zero, dtype)
-        contrib = s.combine(values.astype(dtype)[layout.src], layout.weight)
+        contrib = s.combine(values.astype(dtype)[..., layout.src],
+                            layout.weight)
         keep = layout.valid if mask is None else (layout.valid & mask)
         contrib = jnp.where(keep, contrib, zero)
-        out = spmv_reduce_push(
+        reduce_fn = spmv_reduce_push_batched if batched else spmv_reduce_push
+        out = reduce_fn(
             contrib, layout.dst, tile_start, num_tiles=num_tiles,
             op=s.add, tile_n=tile_n, chunk=chunk, interpret=interpret)
-    return out[:num_segments]
+    return out[..., :num_segments]
 
 
 def _shard_view(layout: ShardedEdgeLayout, i, src, dst, w, valid,
@@ -657,7 +682,9 @@ def push_coo(
 
     A plain XLA segment-sum/min/max over the caller's (unsorted) edge
     order.  ``weight`` is the raw ⊗-operand per edge; masked edges
-    contribute the semiring's ⊕-identity.  Prefer :func:`push` with a
+    contribute the semiring's ⊕-identity.  ``values`` may be ``[N]`` or a
+    batched ``[B, N]`` matrix (→ ``[B, num_segments]``, vmapped so each
+    row matches its single-query call).  Prefer :func:`push` with a
     cached (possibly sharded) layout everywhere else — since the sharded
     layouts landed, no engine/dry-run hot loop goes through here
     (:func:`trace_count` ``("push_coo")`` is how tests and the dry-run
@@ -665,12 +692,19 @@ def push_coo(
     """
     _TRACE_COUNTS["push_coo"] += 1
     s = resolve_semiring(semiring)
-    contrib = values[src]
-    if weight is not None:
-        contrib = s.combine(contrib, weight)
-    if mask is not None:
-        contrib = jnp.where(mask, contrib, jnp.asarray(s.zero, contrib.dtype))
-    return s.segment_reduce(contrib, dst, num_segments=num_segments)
+
+    def one(v):
+        contrib = v[src]
+        if weight is not None:
+            contrib = s.combine(contrib, weight)
+        if mask is not None:
+            contrib = jnp.where(mask, contrib,
+                                jnp.asarray(s.zero, contrib.dtype))
+        return s.segment_reduce(contrib, dst, num_segments=num_segments)
+
+    if values.ndim == 2:
+        return jax.vmap(one)(values)
+    return one(values)
 
 
 __all__ = [

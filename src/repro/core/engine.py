@@ -92,6 +92,14 @@ class EngineConfig:
     # per-device loop (how a 1-device dev box exercises S-way partitioning
     # and rebalancing)
     num_shards: Optional[int] = None
+    # per-(shard, bucket) hot-edge slot cap for the mesh-sharded summary
+    # construction: None keeps the conservative default C = ceil(H_cap/S)
+    # (per-device E_K footprint S*C grows with H_cap even when hot edges
+    # are well spread); a tighter cap shrinks the footprint to
+    # S * shard_hot_edge_capacity and relies on the overflow flag (-> exact
+    # fallback) for the rare skewed batch.  See
+    # repro.core.pagerank._build_summary_sharded.
+    shard_hot_edge_capacity: Optional[int] = None
     # shard-rebalancing trigger (mesh engines only): after each applied
     # update batch the engine measures per-shard live-edge imbalance
     # ((max - min) / mean, see repro.graph.partition.shard_imbalance) and
@@ -214,6 +222,7 @@ class VeilGraphEngine:
         self.active_prev = jnp.zeros((config.node_capacity,), bool)
         self._pending_src: List[np.ndarray] = []
         self._pending_dst: List[np.ndarray] = []
+        self._pending_len: List[Optional[np.ndarray]] = []
         self._pending_removals: List = []
         self._pending_count = 0
         self._pending_removal_count = 0
@@ -307,14 +316,29 @@ class VeilGraphEngine:
                 f"edge endpoint id {lo if lo < 0 else hi} outside "
                 f"[0, node_capacity={self.config.node_capacity})")
 
-    def register_add_edges(self, src: np.ndarray, dst: np.ndarray):
+    def register_add_edges(self, src: np.ndarray, dst: np.ndarray,
+                           weights: Optional[np.ndarray] = None):
         """Alg. 1 RegisterAddEdge: buffer an edge-addition chunk (validated
-        host-side) until the next query's ApplyUpdates stage."""
+        host-side) until the next query's ApplyUpdates stage.
+
+        ``weights`` optionally streams a per-edge length column alongside
+        the endpoints (same 1-D shape); it lands in
+        ``GraphState.edge_len`` and feeds every ``weight="length"`` layout
+        (SSSP).  Omitted, new edges carry unit length — chunks with and
+        without weights can be mixed freely on one stream.
+        """
         src = np.asarray(src, np.int32)
         dst = np.asarray(dst, np.int32)
         self._check_ids(src, dst)
+        if weights is not None:
+            weights = np.asarray(weights, np.float32)
+            if weights.shape != src.shape:
+                raise ValueError(
+                    f"weights must match src/dst shape {src.shape}; got "
+                    f"{weights.shape}")
         self._pending_src.append(src)
         self._pending_dst.append(dst)
+        self._pending_len.append(weights)
         self._pending_count += src.shape[0]
 
     def register_remove_edges(self, src: np.ndarray, dst: np.ndarray):
@@ -436,6 +460,14 @@ class VeilGraphEngine:
             return applied, removals_requested, removals_resolved
         src = np.concatenate(self._pending_src)
         dst = np.concatenate(self._pending_dst)
+        if any(w is not None for w in self._pending_len):
+            # mixed weighted/unweighted chunks: unweighted ones take the
+            # unit length explicitly so the concatenation lines up
+            lens = np.concatenate([
+                w if w is not None else np.ones(s.shape[0], np.float32)
+                for s, w in zip(self._pending_src, self._pending_len)])
+        else:
+            lens = None
         self._invalidate_layouts()
         pad = self.config.update_pad
         k = src.shape[0]
@@ -445,11 +477,13 @@ class VeilGraphEngine:
         for lo in range(0, k, pad):
             hi = min(lo + pad, k)
             self.state = G.add_edges(
-                self.state, jnp.asarray(src[lo:hi]), jnp.asarray(dst[lo:hi])
+                self.state, jnp.asarray(src[lo:hi]), jnp.asarray(dst[lo:hi]),
+                None if lens is None else jnp.asarray(lens[lo:hi]),
             )
             applied += hi - lo
         self._pending_src.clear()
         self._pending_dst.clear()
+        self._pending_len.clear()
         self._pending_count = 0
         return applied, removals_requested, removals_resolved
 
@@ -532,6 +566,7 @@ class VeilGraphEngine:
                 expand_both=cfg.expand_both,
                 layouts=self.edge_layouts(),
                 backend=self.backend,
+                shard_bucket_capacity=cfg.shard_hot_edge_capacity,
             )
             if bool(qs.used_fallback):
                 # capacities exceeded: the summarized state is invalid;
@@ -566,6 +601,10 @@ class VeilGraphEngine:
                 expand_both=cfg.expand_both,
                 normalize_scores=self.algorithm.normalize_selection_scores,
             )
+            # forwarded only when set: legacy plugin build_summaries
+            # overrides may predate the shard_bucket_capacity keyword
+            extra = ({} if cfg.shard_hot_edge_capacity is None else
+                     {"shard_bucket_capacity": cfg.shard_hot_edge_capacity})
             summaries = self.algorithm.build_summaries(
                 self.algo_state,
                 self.state,
@@ -574,6 +613,7 @@ class VeilGraphEngine:
                 hot_edge_capacity=cfg.hot_edge_capacity,
                 layouts=self.edge_layouts(),
                 backend=self.backend,
+                **extra,
             )
             st.num_hot = int(hstats.num_hot)
             st.num_kr = int(hstats.num_kr)

@@ -131,7 +131,7 @@ def approximate_query_step(
     static_argnames=(
         "algo", "hot_node_capacity", "hot_edge_capacity",
         "n", "delta_hop_cap", "degree_mode", "expand_both", "backend",
-        "mesh", "mesh_axes",
+        "mesh", "mesh_axes", "shard_bucket_capacity",
     ),
 )
 def fused_query_step(
@@ -153,6 +153,7 @@ def fused_query_step(
     backend: str | None = None,
     mesh=None,
     mesh_axes=None,
+    shard_bucket_capacity: int | None = None,
 ):
     """One summarized query for *any* :class:`StreamingAlgorithm`.
 
@@ -201,11 +202,15 @@ def fused_query_step(
         degree_mode=degree_mode, expand_both=expand_both,
         normalize_scores=algo.normalize_selection_scores,
     )
+    # only forward the knob when set, so legacy plugin overrides of
+    # build_summaries without the keyword keep working
+    extra = ({} if shard_bucket_capacity is None
+             else {"shard_bucket_capacity": shard_bucket_capacity})
     summaries = algo.build_summaries(
         algo_state, state, hot,
         hot_node_capacity=hot_node_capacity,
         hot_edge_capacity=hot_edge_capacity,
-        layouts=layouts, backend=backend,
+        layouts=layouts, backend=backend, **extra,
     )
     new_state, iters = algo.summarized(
         algo_state, state, summaries, backend=backend)
@@ -224,3 +229,126 @@ def fused_query_step(
         used_fallback=summaries_overflow(summaries),
     )
     return new_state, stats
+
+
+# ---------------------------------------------------------------------------
+# Batched (multi-query) fused step — the serving engine's wave kernel
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "algo", "hot_node_capacity", "hot_edge_capacity",
+        "n", "delta_hop_cap", "degree_mode", "expand_both", "backend",
+        "mesh", "mesh_axes", "shard_bucket_capacity",
+    ),
+)
+def fused_query_step_batched(
+    state: GraphState,
+    batch_state,
+    deg_prev: jax.Array,
+    active_prev: jax.Array,
+    r: jax.Array,
+    delta: jax.Array,
+    row_mask: jax.Array,
+    full_hot: jax.Array | None = None,
+    *,
+    algo,
+    hot_node_capacity: int,
+    hot_edge_capacity: int,
+    n: int = 1,
+    delta_hop_cap: int = 4,
+    degree_mode: str = "out",
+    expand_both: bool = False,
+    layouts=None,
+    backend: str | None = None,
+    mesh=None,
+    mesh_axes=None,
+    shard_bucket_capacity: int | None = None,
+):
+    """One summarized wave for B concurrent queries of one algorithm.
+
+    The multi-tenant analogue of :func:`fused_query_step`:
+    ``batch_state`` carries every slot's per-query state with a leading
+    batch axis (``[B, ...]`` leaves — e.g. B teleport vectors, B source
+    masks), and the whole wave shares ONE hot set, ONE summary structure
+    and ONE edge layout across all B queries:
+
+    - selection reads ``algo.batched_selection_scores`` — the element-wise
+      max of the live rows' volatility signals, so a vertex hot for any
+      query is hot for the wave;
+    - ``algo.build_summaries`` sees the ``[B, N]`` frozen vectors and
+      produces summaries whose compacted E_K structure is row-independent
+      with a per-query ``b_in [B, K_cap]`` (one batched push);
+    - ``algo.summarized_batched`` then runs the restricted sweep as
+      batched ``[B, K_cap]`` pushes, with ``row_mask`` (bool[B], True =
+      live) freezing finished/vacant serving slots so they stop
+      contributing work and report zero delta.
+
+    ``full_hot`` (traced bool scalar, optional) widens the wave's hot
+    set to the whole active vertex set.  The paper's selection is driven
+    by degree churn and score volatility *since the last measurement
+    point* — a freshly seated query has neither (its state is brand
+    new), so its cold-start waves need full coverage, exactly as the
+    single-query protocol computes initial results over all of G before
+    streaming.  The serving engine raises the flag while any live slot
+    has not yet converged once; on a quiet graph this makes the wave a
+    batched full-width sweep (capacities permitting — bounded caps
+    overflow into the exact fallback as usual).
+
+    Returns ``(new_batch_state, QueryStepStats, row_delta f32[B])`` —
+    stats describe the shared wave (hot-set sizes, E_K/E_B, overflow);
+    ``row_delta`` is the per-slot convergence signal the serving engine's
+    harvest step compares against each request's tolerance.  Overflow
+    semantics are unchanged: no device-side branch, the caller discards
+    the batch result and falls back to per-row exact recomputes when
+    ``used_fallback`` reads True.
+    """
+    from repro.core.algorithm import summaries_overflow
+    from repro.core.backend import normalize_layout_spec
+
+    if layouts is None and mesh is not None:
+        from repro.graph.partition import build_sharded_layout
+
+        layouts = tuple(
+            build_sharded_layout(state, mesh=mesh, axes=mesh_axes,
+                                 weight=w, reverse=rev, semiring=s)
+            for (w, rev, s) in map(normalize_layout_spec,
+                                   algo.layout_specs))
+
+    scores = algo.batched_selection_scores(batch_state, row_mask)
+    hot, hstats = select_hot_set(
+        state, deg_prev, scores, r, delta,
+        active_prev=active_prev, n=n, delta_hop_cap=delta_hop_cap,
+        degree_mode=degree_mode, expand_both=expand_both,
+        normalize_scores=algo.normalize_selection_scores,
+    )
+    if full_hot is not None:
+        hot = hot | (state.node_active & full_hot)
+        hstats = hstats._replace(num_hot=jnp.sum(hot.astype(jnp.int32)))
+    extra = ({} if shard_bucket_capacity is None
+             else {"shard_bucket_capacity": shard_bucket_capacity})
+    summaries = algo.build_summaries(
+        batch_state, state, hot,
+        hot_node_capacity=hot_node_capacity,
+        hot_edge_capacity=hot_edge_capacity,
+        layouts=layouts, backend=backend, **extra,
+    )
+    new_state, iters, row_delta = algo.summarized_batched(
+        batch_state, state, summaries, row_mask=row_mask, backend=backend)
+
+    num_eb = summaries[0].num_eb
+    for s in summaries[1:]:
+        num_eb = num_eb + s.num_eb
+    stats = QueryStepStats(
+        num_hot=hstats.num_hot,
+        num_kr=hstats.num_kr,
+        num_kn=hstats.num_kn,
+        num_kdelta=hstats.num_kdelta,
+        num_ek=summaries[0].num_ek,
+        num_eb=num_eb,
+        iterations=iters,
+        used_fallback=summaries_overflow(summaries),
+    )
+    return new_state, stats, row_delta

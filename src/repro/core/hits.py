@@ -26,9 +26,12 @@ against *two* compacted summaries built by the generalized
 - a reverse summary (``weight="unit", reverse=True``) whose ``b_in`` freezes
   the authority mass that hot hubs collect from their non-hot out-neighbors.
 
-Cold scores are carried over unchanged; per-iteration normalization counts
-the frozen cold mass so that with K = V (r = 1.0) the summarized sweep is
-the exact sweep up to f32 reassociation.
+Cold scores are carried over unchanged; per-iteration normalization uses a
+global σ estimate *tracked across sweeps* (measured by exact computations,
+carried in the algorithm state, anchored by the frozen cold mass) so that
+with K = V (r = 1.0) the summarized sweep is the exact sweep up to f32
+reassociation and at partial coverage the hot block's mass stays stationary
+against the frozen boundary.
 """
 
 from __future__ import annotations
@@ -61,8 +64,18 @@ def hits(
     fwd_layout: Optional[B.EdgeLayout] = None,
     rev_layout: Optional[B.EdgeLayout] = None,
     backend: Optional[str] = None,
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Full HITS power iteration.  Returns ``(auth, hub, iterations_run)``.
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Full HITS power iteration.  Returns ``(auth, hub, iterations_run,
+    sigma)``.
+
+    ``sigma`` is ``f32[2]`` — the last half-update's L1 normalizer per
+    direction ``[σ_auth, σ_hub]``.  Because the iterate entering each half
+    step is L1-normalized, that normalizer is the growth rate of the raw
+    update, which converges to the principal singular value σ of the
+    (unit-weight) adjacency operator.  Exact computations are where the
+    engine *measures* σ; the summarized sweeps track it across queries and
+    use it to extrapolate the frozen cold boundary's raw mass (see
+    :func:`summarized_hits`).
 
     With ``tol > 0`` the loop exits early once the L1 change of the
     authority vector drops below ``tol``.  ``auth0``/``hub0`` warm-start the
@@ -106,20 +119,25 @@ def hits(
         return B.push(x, rev_layout, backend=backend_r)
 
     def body(carry):
-        i, a, h, _ = carry
-        a_new = _l1_normalize(jnp.where(active, _push_fwd(h), 0.0))
-        h_new = _l1_normalize(jnp.where(active, _push_rev(a_new), 0.0))
+        i, a, h, _, _, _ = carry
+        a_raw = jnp.where(active, _push_fwd(h), 0.0)
+        sig_a = jnp.sum(jnp.abs(a_raw))
+        a_new = a_raw / jnp.maximum(sig_a, _EPS)
+        h_raw = jnp.where(active, _push_rev(a_new), 0.0)
+        sig_h = jnp.sum(jnp.abs(h_raw))
+        h_new = h_raw / jnp.maximum(sig_h, _EPS)
         delta = jnp.sum(jnp.abs(a_new - a))
-        return i + 1, a_new, h_new, delta
+        return i + 1, a_new, h_new, delta, sig_a, sig_h
 
     def cond(carry):
-        i, _, _, delta = carry
+        i, _, _, delta = carry[:4]
         return (i < num_iters) & (delta > tol)
 
-    i, a, h, _ = jax.lax.while_loop(
-        cond, body, (jnp.int32(0), a0, h0, jnp.float32(jnp.inf))
-    )
-    return a, h, i
+    i, a, h, _, sig_a, sig_h = jax.lax.while_loop(
+        cond, body,
+        (jnp.int32(0), a0, h0, jnp.float32(jnp.inf), jnp.float32(1.0),
+         jnp.float32(1.0)))
+    return a, h, i, jnp.stack([sig_a, sig_h])
 
 
 @functools.partial(jax.jit, static_argnames=("num_iters", "tol", "backend"))
@@ -128,11 +146,12 @@ def summarized_hits(
     rev: SummaryBuffers,
     auth_prev: jax.Array,
     hub_prev: jax.Array,
+    sigma_prev: Optional[jax.Array] = None,
     *,
     num_iters: int = 30,
     tol: float = 0.0,
     backend: Optional[str] = None,
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """HITS power iteration restricted to the hot set K.
 
     ``fwd``/``rev`` are summaries over the same hot mask (so they share
@@ -141,15 +160,35 @@ def summarized_hits(
     to hubs.
 
     Unlike PageRank, HITS is an eigenvector problem: the exact sweep's
-    normalization divides by the global raw-update mass, which converges to
-    the principal singular value σ.  The restricted sweep treats cold scores
-    as a Dirichlet boundary (frozen, injected through ``b_in``) and
-    normalizes each half-update by a *local* σ estimate — the growth rate of
-    the hot block itself, ``σ̂ = Σ|raw| / Σ|prev|``.  With K = V the two
-    normalizations are identical (both make the update sum equal the
-    previous sum, and the previous sum is 1), so the r = 1.0 sweep is the
-    exact sweep up to f32 reassociation.  Returns the updated *global*
-    ``(auth, hub, iterations_run)``.
+    normalization divides by the global raw-update mass, whose growth rate
+    converges to the principal singular value σ.  The restricted sweep
+    treats cold scores as a Dirichlet boundary (frozen, injected through
+    ``b_in``) and normalizes each half-update by a global σ estimate
+    anchored to the *tracked* value ``sigma_prev`` (``f32[2] = [σ_a, σ_h]``,
+    measured by the last exact computation or returned by the last
+    summarized sweep — see :func:`hits`)::
+
+        σ̂ = (Σ|raw_hot| + σ_tracked·cold) / (Σ|prev_hot| + cold)
+
+    with ``cold = Σ|prev_global| − Σ|prev_hot|``.  The cold block never
+    recomputes its raw update, but at the global fixed point that raw mass
+    is exactly ``σ·cold`` — extrapolating it with the tracked σ makes the
+    restricted iteration's equilibrium normalizer *pin to* ``σ_tracked``
+    whenever cold mass is present, so the hot block's L1 mass is stationary
+    against the boundary instead of drifting (the pre-fix estimator used
+    the hot block's own growth rate alone, which pinned the hot/cold mass
+    ratio even when updates genuinely shifted mass into or out of K; a
+    naive ``(Σ|raw|+cold)/(Σ|prev|+cold)`` blend systematically
+    underestimates σ and drifts linearly).  With K = V the cold mass is
+    zero and σ̂ reduces to the exact sweep's normalization, so the r = 1.0
+    sweep is still the exact sweep up to f32 reassociation — and a cold
+    start with an untrusted ``sigma_prev`` under a full-coverage hot set is
+    still properly normalized.  A degenerate half-update (no internal
+    edges, no boundary inflow) keeps the previous scores and estimate.
+
+    Returns the updated *global* ``(auth, hub, iterations_run, sigma)``
+    where ``sigma`` is the sweep's final per-direction σ̂ — the value to
+    track into the next sweep.  ``sigma_prev=None`` starts the track at 1.
 
     Each half-iteration is one :func:`repro.core.backend.push` over its
     summary's pre-sorted E_K layout.
@@ -158,35 +197,131 @@ def summarized_hits(
     k_cap = fwd.hot_ids.shape[0]
     local_valid = jnp.arange(k_cap, dtype=jnp.int32) < fwd.num_hot
 
+    sig0 = (jnp.ones((2,), jnp.float32) if sigma_prev is None
+            else jnp.asarray(sigma_prev, jnp.float32))
     a0 = jnp.where(local_valid, auth_prev[fwd.hot_ids], 0.0)
     h0 = jnp.where(local_valid, hub_prev[fwd.hot_ids], 0.0)
+    # frozen cold L1 mass per direction — constant across the sweep (cold
+    # scores are the Dirichlet boundary), computed once outside the loop
+    cold_a = jnp.maximum(
+        jnp.sum(jnp.abs(auth_prev)) - jnp.sum(jnp.abs(a0)), 0.0)
+    cold_h = jnp.maximum(
+        jnp.sum(jnp.abs(hub_prev)) - jnp.sum(jnp.abs(h0)), 0.0)
     fwd_layout = B.summary_layout(fwd)
     rev_layout = B.summary_layout(rev)
 
-    def half_step(prev, raw):
-        """Normalize a raw half-update by the hot block's growth rate."""
-        growth = jnp.sum(jnp.abs(raw)) / jnp.maximum(jnp.sum(jnp.abs(prev)), _EPS)
+    def half_step(prev, raw, cold, anchor, sigma_last):
+        """Normalize a raw half-update by the anchored global-σ estimate."""
+        mass = jnp.sum(jnp.abs(raw)) + cold
+        growth = ((jnp.sum(jnp.abs(raw)) + anchor * cold)
+                  / jnp.maximum(jnp.sum(jnp.abs(prev)) + cold, _EPS))
         # degenerate hot blocks (no internal edges, no boundary inflow)
-        # keep their previous scores instead of collapsing to zero
-        return jnp.where(growth > _EPS, raw / jnp.maximum(growth, _EPS), prev)
+        # keep their previous scores and carry the last well-defined σ̂
+        ok = mass > _EPS
+        sigma = jnp.where(ok, growth, sigma_last)
+        return (jnp.where(ok, raw / jnp.maximum(sigma, _EPS), prev), sigma)
 
     def body(carry):
-        i, a, h, _ = carry
+        i, a, h, _, sig_a, sig_h = carry
         a_in = B.push(h, fwd_layout, backend=backend_r)
-        a_new = half_step(a, jnp.where(local_valid, a_in + fwd.b_in, 0.0))
+        a_new, sig_a = half_step(
+            a, jnp.where(local_valid, a_in + fwd.b_in, 0.0), cold_a,
+            sig0[0], sig_a)
         h_in = B.push(a_new, rev_layout, backend=backend_r)
-        h_new = half_step(h, jnp.where(local_valid, h_in + rev.b_in, 0.0))
+        h_new, sig_h = half_step(
+            h, jnp.where(local_valid, h_in + rev.b_in, 0.0), cold_h,
+            sig0[1], sig_h)
         delta = jnp.sum(jnp.abs(a_new - a))
-        return i + 1, a_new, h_new, delta
+        return i + 1, a_new, h_new, delta, sig_a, sig_h
 
     def cond(carry):
-        i, _, _, delta = carry
+        i, _, _, delta = carry[:4]
         return (i < num_iters) & (delta > tol)
 
-    i, a_loc, h_loc, _ = jax.lax.while_loop(
-        cond, body, (jnp.int32(0), a0, h0, jnp.float32(jnp.inf))
-    )
+    i, a_loc, h_loc, _, sig_a, sig_h = jax.lax.while_loop(
+        cond, body,
+        (jnp.int32(0), a0, h0, jnp.float32(jnp.inf), sig0[0], sig0[1]))
 
     auth = auth_prev.at[fwd.hot_ids].set(a_loc, mode="drop")
     hub = hub_prev.at[fwd.hot_ids].set(h_loc, mode="drop")
-    return auth, hub, i
+    return auth, hub, i, jnp.stack([sig_a, sig_h])
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "tol", "backend"))
+def summarized_hits_batched(
+    fwd: SummaryBuffers,
+    rev: SummaryBuffers,
+    auth_prev: jax.Array,
+    hub_prev: jax.Array,
+    sigma_prev: Optional[jax.Array] = None,
+    *,
+    num_iters: int = 30,
+    tol: float = 0.0,
+    row_mask: Optional[jax.Array] = None,
+    backend: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Batched :func:`summarized_hits`: ``[B, N]`` auth/hub matrices
+    sharing one fwd/rev summary pair, with the per-row anchored-σ
+    normalization of the single-query sweep (cold mass and σ̂ are ``[B]``
+    vectors; ``sigma_prev`` is the ``[B, 2]`` tracked anchor, None → 1s).
+    ``row_mask`` (bool[B]) freezes finished/vacant slots — their scores
+    *and* their tracked σ.  Returns ``(auth [B, N], hub [B, N],
+    iterations, row_delta [B], sigma [B, 2])``.
+    """
+    backend_r = B.resolve_backend(backend)
+    batch = auth_prev.shape[0]
+    k_cap = fwd.hot_ids.shape[0]
+    local_valid = jnp.arange(k_cap, dtype=jnp.int32) < fwd.num_hot
+
+    sig0 = (jnp.ones((batch, 2), jnp.float32) if sigma_prev is None
+            else jnp.asarray(sigma_prev, jnp.float32))
+    a0 = jnp.where(local_valid, auth_prev[:, fwd.hot_ids], 0.0)
+    h0 = jnp.where(local_valid, hub_prev[:, fwd.hot_ids], 0.0)
+    cold_a = jnp.maximum(
+        jnp.sum(jnp.abs(auth_prev), axis=1) - jnp.sum(jnp.abs(a0), axis=1),
+        0.0)
+    cold_h = jnp.maximum(
+        jnp.sum(jnp.abs(hub_prev), axis=1) - jnp.sum(jnp.abs(h0), axis=1),
+        0.0)
+    live = (jnp.ones((batch,), bool) if row_mask is None else row_mask)
+    keep = live[:, None]
+    fwd_layout = B.summary_layout(fwd)
+    rev_layout = B.summary_layout(rev)
+
+    def half_step(prev, raw, cold, anchor, sigma_last):
+        mass = jnp.sum(jnp.abs(raw), axis=1) + cold
+        growth = ((jnp.sum(jnp.abs(raw), axis=1) + anchor * cold)
+                  / jnp.maximum(jnp.sum(jnp.abs(prev), axis=1) + cold, _EPS))
+        ok = (mass > _EPS) & live
+        sigma = jnp.where(ok, growth, sigma_last)
+        scaled = jnp.where(ok[:, None],
+                           raw / jnp.maximum(sigma, _EPS)[:, None], prev)
+        return jnp.where(keep, scaled, prev), sigma
+
+    def body(carry):
+        i, a, h, _, sig_a, sig_h = carry
+        a_in = B.push(h, fwd_layout, backend=backend_r)
+        a_new, sig_a = half_step(
+            a, jnp.where(local_valid, a_in + fwd.b_in, 0.0), cold_a,
+            sig0[:, 0], sig_a)
+        h_in = B.push(a_new, rev_layout, backend=backend_r)
+        h_new, sig_h = half_step(
+            h, jnp.where(local_valid, h_in + rev.b_in, 0.0), cold_h,
+            sig0[:, 1], sig_h)
+        delta = jnp.sum(jnp.abs(a_new - a), axis=1)
+        return i + 1, a_new, h_new, delta, sig_a, sig_h
+
+    def cond(carry):
+        i, _, _, delta = carry[:4]
+        return (i < num_iters) & (jnp.max(delta) > tol)
+
+    i, a_loc, h_loc, delta, sig_a, sig_h = jax.lax.while_loop(
+        cond, body,
+        (jnp.int32(0), a0, h0, jnp.full((batch,), jnp.inf, jnp.float32),
+         sig0[:, 0], sig0[:, 1]))
+
+    auth = auth_prev.at[:, fwd.hot_ids].set(a_loc, mode="drop")
+    hub = hub_prev.at[:, fwd.hot_ids].set(h_loc, mode="drop")
+    auth = jnp.where(keep, auth, auth_prev)
+    hub = jnp.where(keep, hub, hub_prev)
+    return auth, hub, i, delta, jnp.stack([sig_a, sig_h], axis=1)

@@ -128,3 +128,54 @@ def summarized_katz(
         cond, body, (jnp.int32(0), c0, jnp.float32(jnp.inf)))
     katz_v = katz_prev.at[summary.hot_ids].set(c_loc, mode="drop")
     return katz_v, i
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("alpha", "beta", "num_iters", "tol", "backend"),
+)
+def summarized_katz_batched(
+    summary: SummaryBuffers,
+    katz_prev: jax.Array,
+    *,
+    alpha: float = 0.05,
+    beta: float = 1.0,
+    num_iters: int = 30,
+    tol: float = 0.0,
+    row_mask: Optional[jax.Array] = None,
+    backend: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched :func:`summarized_katz`: a ``[B, N]`` score matrix sharing
+    one summary, relaxed with one batched push per iteration.  ``row_mask``
+    (bool[B]) freezes finished/vacant slots — masked rows carry through
+    unchanged and report zero delta.  Returns
+    ``(katz [B, N], iterations, row_delta f32[B])``.
+    """
+    backend_r = B.resolve_backend(backend)
+    batch = katz_prev.shape[0]
+    k_cap = summary.hot_ids.shape[0]
+    local_valid = jnp.arange(k_cap, dtype=jnp.int32) < summary.num_hot
+    c0 = jnp.where(local_valid, katz_prev[:, summary.hot_ids], 0.0)
+    keep = (jnp.ones((batch,), bool) if row_mask is None
+            else row_mask)[:, None]
+    layout = B.summary_layout(summary)
+
+    def body(carry):
+        i, c, _ = carry
+        incoming = B.push(c, layout, backend=backend_r)
+        new_c = jnp.where(
+            local_valid, beta + alpha * (incoming + summary.b_in), 0.0)
+        new_c = jnp.where(keep, new_c, c)
+        delta = jnp.sum(jnp.abs(new_c - c), axis=1)
+        return i + 1, new_c, delta
+
+    def cond(carry):
+        i, _, delta = carry
+        return (i < num_iters) & (jnp.max(delta) > tol)
+
+    i, c_loc, delta = jax.lax.while_loop(
+        cond, body,
+        (jnp.int32(0), c0, jnp.full((batch,), jnp.inf, jnp.float32)))
+    katz_v = katz_prev.at[:, summary.hot_ids].set(c_loc, mode="drop")
+    katz_v = jnp.where(keep, katz_v, katz_prev)
+    return katz_v, i, delta

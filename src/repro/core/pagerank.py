@@ -262,6 +262,7 @@ def _build_summary_sharded(
     layout: "B.ShardedEdgeLayout",
     backend: Optional[str],
     s,
+    shard_bucket_capacity: Optional[int] = None,
 ) -> SummaryBuffers:
     """Mesh-native summary construction: a distributed bucket sort over the
     shard axis, so no stage ever materializes a replicated O(E) buffer.
@@ -296,13 +297,27 @@ def _build_summary_sharded(
     spread destinations across buckets, so balanced blocks are the common
     case.  ``b_in`` runs through the sharded :func:`repro.core.backend.push`
     with the E_B mask, exactly like the flat path with a cached layout.
+
+    ``shard_bucket_capacity`` overrides ``C = ⌈H_cap/S⌉`` with a tighter
+    per-(source shard, bucket) slot count: the post-exchange per-shard E_K
+    buffer is ``S·C`` slots, so the default bound grows with H_cap even
+    when hot edges are well spread — a workload with balanced buckets can
+    cut the per-device footprint to ``S · shard_bucket_capacity`` and rely
+    on the ``overflow`` flag (→ exact fallback) for the rare skewed batch.
     """
     n_cap = state.node_capacity
     k_cap = hot_node_capacity
     h_cap = hot_edge_capacity
     num_shards = layout.num_shards
     e_pad = layout.dst.shape[1]
-    bucket_cap = -(-h_cap // num_shards)   # C: per (src-shard, bucket) slots
+    if shard_bucket_capacity is None:
+        bucket_cap = -(-h_cap // num_shards)  # C: per (src-shard, bucket)
+    else:
+        if shard_bucket_capacity < 1:
+            raise ValueError(
+                f"shard_bucket_capacity must be >= 1; got "
+                f"{shard_bucket_capacity}")
+        bucket_cap = shard_bucket_capacity
     bucket_w = -(-k_cap // num_shards)     # W: local-dst ids per bucket
     w_dtype = jnp.dtype(s.dtype)
     s_zero = jnp.asarray(s.zero, w_dtype)
@@ -324,9 +339,12 @@ def _build_summary_sharded(
     num_eb = jnp.sum(eb_mask.astype(jnp.int32))
 
     # ---- frozen big-vertex boundary: sharded push over the E_B mask ------
+    # ranks_prev may be batched [B, N] (shared-summary serving): the push
+    # and the hot-id gather both batch along the leading axis, so b_in
+    # becomes [B, K_cap] while E_K stays shared across the batch
     b_in_global = B.push(ranks_prev, layout, backend=backend, mask=eb_mask,
                          semiring=s)
-    b_in = jnp.where(local_valid, b_in_global[hot_ids], s_zero)
+    b_in = jnp.where(local_valid, b_in_global[..., hot_ids], s_zero)
 
     # ---- stage 2: shard-local relabel + destination sort -----------------
     # layout.weight already holds the baked ⊗-operand in stream order (the
@@ -426,7 +444,8 @@ def _build_summary_sharded(
 @functools.partial(
     jax.jit,
     static_argnames=("hot_node_capacity", "hot_edge_capacity", "weight",
-                     "reverse", "backend", "semiring"),
+                     "reverse", "backend", "semiring",
+                     "shard_bucket_capacity"),
 )
 def build_summary(
     state: GraphState,
@@ -441,6 +460,7 @@ def build_summary(
     backend: Optional[str] = None,
     semiring: str = "plus_times",
     lengths: Optional[jax.Array] = None,
+    shard_bucket_capacity: Optional[int] = None,
 ) -> SummaryBuffers:
     """Construct the big-vertex summary (§3.1) into bounded buffers.
 
@@ -473,7 +493,12 @@ def build_summary(
 
     ``ranks_prev`` is whatever state vector the frozen big-vertex
     contribution should be computed from (previous PageRank ranks, previous
-    hub scores, previous distances/labels, …).
+    hub scores, previous distances/labels, …).  It may be a batched
+    ``[B, N]`` matrix (B queries sharing ONE hot set / E_K structure — the
+    serving engine's shared summary): the structural buffers are computed
+    once while ``b_in`` becomes per-query ``[B, K_cap]`` via one batched
+    push.  ``shard_bucket_capacity`` tightens the sharded construction's
+    per-(shard, bucket) slot count — see :func:`_build_summary_sharded`.
 
     Handed a :class:`~repro.core.backend.ShardedEdgeLayout` (the engine does
     when configured with a mesh), construction itself runs sharded — a
@@ -483,6 +508,8 @@ def build_summary(
     gathers; the consuming summarized sweeps then run through the sharded
     push automatically.
     """
+    if weight == "length" and lengths is None and layout is None:
+        lengths = state.edge_len  # streamed per-edge lengths, if any
     s = B.validate_weight_spec(weight, reverse=reverse, semiring=semiring,
                                lengths=lengths,
                                edge_capacity=state.edge_capacity)
@@ -496,7 +523,8 @@ def build_summary(
             state, ranks_prev, hot_mask,
             hot_node_capacity=hot_node_capacity,
             hot_edge_capacity=hot_edge_capacity,
-            weight=weight, layout=layout, backend=backend, s=s)
+            weight=weight, layout=layout, backend=backend, s=s,
+            shard_bucket_capacity=shard_bucket_capacity)
     n_cap = state.node_capacity
     k_cap = hot_node_capacity
     h_cap = hot_edge_capacity
@@ -552,7 +580,8 @@ def build_summary(
             jnp.minimum(layout.dst, n_cap - 1)]
         b_in_global = B.push(ranks_prev, layout, backend=backend,
                              mask=eb_mask_s, semiring=s)
-    b_in = jnp.where(local_valid, b_in_global[hot_ids], s_zero)
+    # batched ranks_prev [B, N] → b_in [B, K_cap] (see sharded path note)
+    b_in = jnp.where(local_valid, b_in_global[..., hot_ids], s_zero)
 
     # ---- compact E_K into the bounded buffer ----------------------------
     ek_idx = compact_indices(ek_mask, h_cap)
@@ -661,3 +690,72 @@ def summarized_pagerank(
     # hot_ids are out of bounds and dropped.
     ranks = ranks_prev.at[summary.hot_ids].set(r_local, mode="drop")
     return ranks, i
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_iters", "beta", "tol", "backend")
+)
+def summarized_pagerank_batched(
+    summary: SummaryBuffers,
+    ranks_prev: jax.Array,
+    *,
+    beta: float = 0.85,
+    num_iters: int = 30,
+    tol: float = 0.0,
+    teleport_v: Optional[jax.Array] = None,
+    row_mask: Optional[jax.Array] = None,
+    backend: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched :func:`summarized_pagerank`: B queries, one shared summary.
+
+    ``ranks_prev`` / ``teleport_v`` are ``[B, N]`` matrices (per-slot
+    personalization vectors); the summary is shared across the batch —
+    ``b_in`` may be the per-query ``[B, K_cap]`` form
+    :func:`build_summary` emits for batched ``ranks_prev``.  Each
+    iteration runs ONE batched push over the pre-sorted E_K layout (the
+    ``[B, chunk] @ [chunk, tile_n]`` MXU path on the pallas backend).
+
+    ``row_mask`` (bool[B], optional) is the serving engine's per-slot
+    convergence mask: rows with ``False`` carry their state unchanged and
+    report zero delta, so finished/vacant slots neither drift nor keep the
+    wave from converging.
+
+    Returns ``(ranks [B, N], iterations, row_delta [B])`` — ``row_delta``
+    is each row's final L1 step size, the per-slot convergence signal.
+    """
+    backend_r = B.resolve_backend(backend)
+    batch = ranks_prev.shape[0]
+    k_cap = summary.hot_ids.shape[0]
+    local_valid = jnp.arange(k_cap, dtype=jnp.int32) < summary.num_hot
+    r_local0 = jnp.where(local_valid, ranks_prev[:, summary.hot_ids], 0.0)
+    if teleport_v is not None:
+        t_local = jnp.where(local_valid, teleport_v[:, summary.hot_ids], 0.0)
+    else:
+        t_local = 1.0
+    keep = (jnp.ones((batch,), bool) if row_mask is None
+            else row_mask)[:, None]
+    layout = B.summary_layout(summary)
+
+    def body(carry):
+        i, r, _ = carry
+        incoming = B.push(r, layout, backend=backend_r)
+        new_r = jnp.where(
+            local_valid,
+            (1.0 - beta) * t_local + beta * (incoming + summary.b_in),
+            0.0,
+        )
+        new_r = jnp.where(keep, new_r, r)
+        delta = jnp.sum(jnp.abs(new_r - r), axis=1)
+        return i + 1, new_r, delta
+
+    def cond(carry):
+        i, _, delta = carry
+        return (i < num_iters) & (jnp.max(delta) > tol)
+
+    i, r_local, delta = jax.lax.while_loop(
+        cond, body,
+        (jnp.int32(0), r_local0, jnp.full((batch,), jnp.inf, jnp.float32)))
+
+    ranks = ranks_prev.at[:, summary.hot_ids].set(r_local, mode="drop")
+    ranks = jnp.where(keep, ranks, ranks_prev)
+    return ranks, i, delta

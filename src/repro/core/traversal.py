@@ -70,6 +70,33 @@ def _fixed_point(step, x0, num_iters: int):
     return x, i
 
 
+def _fixed_point_batched(step, x0, num_iters: int,
+                         row_mask: Optional[jax.Array]):
+    """Batched :func:`_fixed_point` over ``x0`` of shape ``[B, K]``: rows
+    masked out by ``row_mask`` (bool[B], ``None`` = all on) carry their
+    state unchanged and report zero change.  Iterates until NO masked row
+    changes (min relaxations converge unevenly; the per-row change counts
+    are the serving engine's convergence signal).  Returns
+    ``(x, iterations_run, changed_rows i32[B])``."""
+    batch = x0.shape[0]
+    keep = (jnp.ones((batch,), bool) if row_mask is None
+            else row_mask)[:, None]
+
+    def body(carry):
+        i, x, _ = carry
+        new_x = jnp.where(keep, step(x), x)
+        changed = jnp.sum((new_x != x).astype(jnp.int32), axis=1)
+        return i + 1, new_x, changed
+
+    def cond(carry):
+        i, _, changed = carry
+        return (i < num_iters) & (jnp.max(changed) > 0)
+
+    i, x, changed = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), x0, jnp.ones((batch,), jnp.int32)))
+    return x, i, changed
+
+
 # --------------------------------------------------------------------------
 # SSSP — Bellman-Ford on the min_plus semiring
 # --------------------------------------------------------------------------
@@ -155,6 +182,51 @@ def summarized_sssp(
     d_loc, i = _fixed_point(relax, d0, num_iters)
     dist = dist_prev.at[summary.hot_ids].set(d_loc, mode="drop")
     return dist, i
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "backend"))
+def summarized_sssp_batched(
+    summary: SummaryBuffers,
+    dist_prev: jax.Array,
+    source_mask: jax.Array,
+    *,
+    num_iters: int = 30,
+    row_mask: Optional[jax.Array] = None,
+    backend: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched :func:`summarized_sssp`: B source sets, one shared summary.
+
+    ``dist_prev``/``source_mask`` are ``[B, N]`` (per-slot source sets);
+    the summary's E_K is shared while ``b_in`` may be the per-query
+    ``[B, K_cap]`` form.  Each relaxation is ONE batched ``min_plus`` push
+    — min is reassociation-exact, so every row is bitwise equal to its
+    single-query sweep over the same summary.  ``row_mask`` (bool[B])
+    freezes finished/vacant slots (see serving docs).  Returns
+    ``(dist [B, N], iterations, changed_rows i32[B])``.
+    """
+    backend_r = B.resolve_backend(backend)
+    k_cap = summary.hot_ids.shape[0]
+    inf = jnp.float32(jnp.inf)
+    local_valid = jnp.arange(k_cap, dtype=jnp.int32) < summary.num_hot
+    src_local = jnp.where(local_valid, source_mask[:, summary.hot_ids],
+                          False)
+    d0 = jnp.where(local_valid, dist_prev[:, summary.hot_ids], inf)
+    d0 = jnp.where(src_local, 0.0, d0)
+    layout = B.summary_layout(summary, semiring="min_plus")
+
+    def relax(d):
+        relaxed = jnp.minimum(
+            d, jnp.minimum(
+                B.push(d, layout, semiring="min_plus", backend=backend_r),
+                summary.b_in))
+        return jnp.where(local_valid, jnp.where(src_local, 0.0, relaxed),
+                         inf)
+
+    d_loc, i, changed = _fixed_point_batched(relax, d0, num_iters, row_mask)
+    dist = dist_prev.at[:, summary.hot_ids].set(d_loc, mode="drop")
+    if row_mask is not None:
+        dist = jnp.where(row_mask[:, None], dist, dist_prev)
+    return dist, i, changed
 
 
 # --------------------------------------------------------------------------
@@ -255,3 +327,45 @@ def summarized_connected_components(
     l_loc, i = _fixed_point(relax, l0, num_iters)
     labels = labels_prev.at[fwd.hot_ids].set(l_loc, mode="drop")
     return labels, i
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "backend"))
+def summarized_connected_components_batched(
+    fwd: SummaryBuffers,
+    rev: SummaryBuffers,
+    labels_prev: jax.Array,
+    *,
+    num_iters: int = 30,
+    row_mask: Optional[jax.Array] = None,
+    backend: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched :func:`summarized_connected_components` over ``[B, N]``
+    label matrices sharing one fwd/rev summary pair.  Label-min is
+    reassociation-exact, so each row matches its single-query sweep
+    bitwise.  ``row_mask`` (bool[B]) freezes finished/vacant slots.
+    Returns ``(labels [B, N], iterations, changed_rows i32[B])``.
+    """
+    backend_r = B.resolve_backend(backend)
+    k_cap = fwd.hot_ids.shape[0]
+    local_valid = jnp.arange(k_cap, dtype=jnp.int32) < fwd.num_hot
+    l0 = jnp.where(
+        local_valid,
+        jnp.minimum(labels_prev.astype(jnp.int32)[:, fwd.hot_ids],
+                    fwd.hot_ids),
+        LABEL_SENTINEL)
+    boundary = jnp.minimum(fwd.b_in, rev.b_in)
+    fwd_layout = B.summary_layout(fwd, semiring="min_min")
+    rev_layout = B.summary_layout(rev, semiring="min_min")
+
+    def relax(lab):
+        incoming = jnp.minimum(
+            B.push(lab, fwd_layout, semiring="min_min", backend=backend_r),
+            B.push(lab, rev_layout, semiring="min_min", backend=backend_r))
+        relaxed = jnp.minimum(lab, jnp.minimum(incoming, boundary))
+        return jnp.where(local_valid, relaxed, LABEL_SENTINEL)
+
+    l_loc, i, changed = _fixed_point_batched(relax, l0, num_iters, row_mask)
+    labels = labels_prev.at[:, fwd.hot_ids].set(l_loc, mode="drop")
+    if row_mask is not None:
+        labels = jnp.where(row_mask[:, None], labels, labels_prev)
+    return labels, i, changed

@@ -39,6 +39,11 @@ class GraphState(NamedTuple):
     out_deg: jax.Array      # int32[N_cap]
     in_deg: jax.Array       # int32[N_cap]
     node_active: jax.Array  # bool[N_cap]
+    #: optional f32[E_cap] per-edge length/weight in *slot* order (streamed
+    #: in through add_edges); ``None`` until any edge carries a weight.
+    #: Consumed by ``weight="length"`` layouts, which default to it when no
+    #: explicit ``lengths=`` override is given.  Unset slots hold 1.0.
+    edge_len: Optional[jax.Array] = None
 
     # ---- static-shape helpers -------------------------------------------
     @property
@@ -87,8 +92,14 @@ def from_edges(
     dst: np.ndarray,
     node_capacity: int,
     edge_capacity: int,
+    weights: Optional[np.ndarray] = None,
 ) -> GraphState:
-    """Build a GraphState from host edge arrays (initial graph G)."""
+    """Build a GraphState from host edge arrays (initial graph G).
+
+    ``weights`` optionally attaches a per-edge length column (f32, same
+    length as ``src``) consumed by ``weight="length"`` layouts; absent
+    edges/slots default to 1.0.
+    """
     src = np.asarray(src, np.int32)
     dst = np.asarray(dst, np.int32)
     if src.shape != dst.shape or src.ndim != 1:
@@ -98,6 +109,14 @@ def from_edges(
         raise ValueError(f"{m} edges exceed edge_capacity={edge_capacity}")
     if m and (src.max() >= node_capacity or dst.max() >= node_capacity):
         raise ValueError("node id exceeds node_capacity")
+    edge_len = None
+    if weights is not None:
+        weights = np.asarray(weights, np.float32)
+        if weights.shape != src.shape:
+            raise ValueError("weights must align with src/dst")
+        len_pad = np.ones((edge_capacity,), np.float32)
+        len_pad[:m] = weights
+        edge_len = jnp.asarray(len_pad)
 
     src_pad = np.zeros((edge_capacity,), np.int32)
     dst_pad = np.zeros((edge_capacity,), np.int32)
@@ -116,17 +135,24 @@ def from_edges(
         out_deg=jnp.asarray(out_deg),
         in_deg=jnp.asarray(in_deg),
         node_active=jnp.asarray(node_active),
+        edge_len=edge_len,
     )
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
-def add_edges(state: GraphState, new_src: jax.Array, new_dst: jax.Array) -> GraphState:
+def add_edges(state: GraphState, new_src: jax.Array, new_dst: jax.Array,
+              new_len: Optional[jax.Array] = None) -> GraphState:
     """Append a fixed-size chunk of edges.
 
     ``new_src``/``new_dst`` have a *static* chunk length (the stream chunk
     size), so this compiles once per chunk size.  Slots past
     ``edge_capacity`` are silently dropped (callers check ``has_capacity``
     first; the engine's BeforeUpdates stage enforces it).
+
+    ``new_len`` optionally streams a per-edge length column alongside the
+    endpoints (f32[k]); the first weighted chunk materializes
+    ``edge_len`` (previous slots default to 1.0), and later unweighted
+    chunks leave their slots at 1.0.
     """
     k = new_src.shape[0]
     e_cap = state.edge_capacity
@@ -141,6 +167,16 @@ def add_edges(state: GraphState, new_src: jax.Array, new_dst: jax.Array) -> Grap
     alive = state.edge_alive.at[slots_c].set(
         jnp.where(ok, True, state.edge_alive[slots_c])
     )
+    edge_len = state.edge_len
+    if new_len is not None:
+        if edge_len is None:
+            edge_len = jnp.ones((e_cap,), jnp.float32)
+        edge_len = edge_len.at[slots_c].set(
+            jnp.where(ok, new_len.astype(jnp.float32), edge_len[slots_c]))
+    elif edge_len is not None:
+        # unweighted chunk into a weighted graph: slots default to 1.0
+        edge_len = edge_len.at[slots_c].set(
+            jnp.where(ok, 1.0, edge_len[slots_c]))
 
     one = jnp.where(ok, 1, 0).astype(jnp.int32)
     out_deg = state.out_deg.at[new_src].add(one)
@@ -151,7 +187,8 @@ def add_edges(state: GraphState, new_src: jax.Array, new_dst: jax.Array) -> Grap
     node_active = node_active.at[new_dst].set(node_active[new_dst] | (one > 0))
 
     num_edges = jnp.minimum(base + k, e_cap).astype(jnp.int32)
-    return GraphState(src, dst, alive, num_edges, out_deg, in_deg, node_active)
+    return GraphState(src, dst, alive, num_edges, out_deg, in_deg,
+                      node_active, edge_len)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -211,7 +248,11 @@ def compact(state: GraphState) -> GraphState:
     mask = np.asarray(jax.device_get(state.edge_mask()))
     s = np.asarray(jax.device_get(state.src))[mask]
     d = np.asarray(jax.device_get(state.dst))[mask]
-    return from_edges(s, d, state.node_capacity, state.edge_capacity)
+    w = None
+    if state.edge_len is not None:
+        w = np.asarray(jax.device_get(state.edge_len))[mask]
+    return from_edges(s, d, state.node_capacity, state.edge_capacity,
+                      weights=w)
 
 
 def to_networkx(state: GraphState):

@@ -55,7 +55,8 @@ def graph_shardings(mesh: Mesh, state: GraphState) -> GraphState:
     e = edge_sharding(mesh, state.edge_capacity)
     n = NamedSharding(mesh, P())
     return GraphState(src=e, dst=e, edge_alive=e, num_edges=n,
-                      out_deg=n, in_deg=n, node_active=n)
+                      out_deg=n, in_deg=n, node_active=n,
+                      edge_len=None if state.edge_len is None else e)
 
 
 def host_edge_slice(num_edges: int, process: int,
@@ -109,6 +110,8 @@ def _build_shards(
     by one static-shaped gather per buffer (the slot *migration*) instead
     of the communication-free pad+reshape.
     """
+    if weight == "length" and lengths is None:
+        lengths = state.edge_len  # streamed per-edge lengths, if any
     s = B.validate_weight_spec(weight, reverse=reverse, semiring=semiring,
                                lengths=lengths,
                                edge_capacity=state.edge_capacity)

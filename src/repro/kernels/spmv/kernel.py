@@ -41,6 +41,19 @@ step: contrib chunk (chunk f32) + dst chunk (chunk i32) + one-hot
 (chunk × tile_n f32) + acc (tile_n f32) ≈ 0.53 MB for chunk=512,
 tile_n=256 — far under the ~16 MB VMEM budget; tile_n should stay 128-lane
 aligned.
+
+Batched (multi-query) variants
+------------------------------
+:func:`spmv_push_batched` and :func:`spmv_reduce_push_batched` accept a
+``[B, E_pad]`` contribution matrix — B independent value vectors pushed
+through ONE shared edge stream (the serving engine's wave step).  The sum
+variant's one-hot product becomes a true ``[B, chunk] @ [chunk, tile_n]``
+MXU matmul, so the scatter's fixed cost (edge loads, one-hot build) is
+amortized over all B queries — the cheapest throughput multiplier in the
+backend.  The reduce variant shrinks its chunk if needed so the
+``[B, chunk, tile_n]`` masked tile stays inside the VMEM budget; min/max
+are reassociation-exact, so each batch row stays bitwise equal to the
+single-query kernel.
 """
 
 from __future__ import annotations
@@ -200,6 +213,179 @@ def spmv_reduce_push(
         ],
         out_specs=pl.BlockSpec((tile_n,), lambda t: (t,)),
         out_shape=jax.ShapeDtypeStruct((num_tiles * tile_n,), dtype),
+        interpret=interpret,
+    )(tile_start, contrib, dst_sorted)
+    return out
+
+
+def _make_spmv_batched_kernel(batch: int, tile_n: int, chunk: int):
+    """Batched sum-kernel body: the one-hot product is a real MXU matmul.
+
+    Identical tiling/chunking to :func:`_make_spmv_kernel`; the chunk load
+    is ``[batch, chunk]`` and the accumulate is
+    ``acc += contrib_chunk @ onehot`` — a ``[B, chunk] @ [chunk, tile_n]``
+    product, so every query in the batch shares one edge-stream pass and
+    one one-hot build per chunk.
+    """
+
+    def _spmv_batched_kernel(tile_start_ref, contrib_ref, dst_ref, out_ref):
+        t = pl.program_id(0)
+        start = tile_start_ref[t]
+        end = tile_start_ref[t + 1]
+        base = t * tile_n
+
+        n_chunks = pl.cdiv(end - start, chunk)
+
+        def body(i, acc):
+            lo = start + i * chunk
+            idx = lo + jnp.arange(chunk, dtype=jnp.int32)
+            valid = idx < end
+            c = pl.load(contrib_ref, (slice(None), pl.ds(lo, chunk)))
+            d = pl.load(dst_ref, (pl.ds(lo, chunk),))
+            d_local = jnp.where(valid, d - base, tile_n)      # OOB -> zero row
+            onehot = (d_local[:, None] ==
+                      jnp.arange(tile_n, dtype=jnp.int32)[None, :])
+            c = jnp.where(valid[None, :], c, 0.0)
+            return acc + jnp.dot(c, onehot.astype(jnp.float32),
+                                 preferred_element_type=jnp.float32)
+
+        acc0 = jnp.zeros((batch, tile_n), jnp.float32)
+        acc = jax.lax.fori_loop(0, n_chunks, body, acc0)
+        out_ref[...] = acc
+
+    return _spmv_batched_kernel
+
+
+def _make_reduce_batched_kernel(batch: int, tile_n: int, chunk: int,
+                                op: str, identity):
+    """Batched masked-reduce body: one ``[B, chunk, tile_n]`` masked tile
+    folded along the chunk axis.  The one-hot destination mask is built
+    once per chunk and broadcast over the batch; min/max are
+    reassociation-exact, so each row matches the single-query kernel
+    bitwise.  Callers bound ``batch * chunk * tile_n`` against VMEM
+    (see :func:`spmv_reduce_push_batched`).
+    """
+    reduce_fn = jnp.min if op == "min" else jnp.max
+    combine_fn = jnp.minimum if op == "min" else jnp.maximum
+
+    def _reduce_batched_kernel(tile_start_ref, contrib_ref, dst_ref, out_ref):
+        t = pl.program_id(0)
+        start = tile_start_ref[t]
+        end = tile_start_ref[t + 1]
+        base = t * tile_n
+
+        n_chunks = pl.cdiv(end - start, chunk)
+
+        def body(i, acc):
+            lo = start + i * chunk
+            idx = lo + jnp.arange(chunk, dtype=jnp.int32)
+            valid = idx < end
+            c = pl.load(contrib_ref, (slice(None), pl.ds(lo, chunk)))
+            d = pl.load(dst_ref, (pl.ds(lo, chunk),))
+            d_local = jnp.where(valid, d - base, tile_n)  # OOB -> no column
+            onehot = (d_local[:, None] ==
+                      jnp.arange(tile_n, dtype=jnp.int32)[None, :])
+            tile = jnp.where(onehot[None, :, :], c[:, :, None], identity)
+            return combine_fn(acc, reduce_fn(tile, axis=1))
+
+        acc0 = jnp.full((batch, tile_n), identity, contrib_ref.dtype)
+        acc = jax.lax.fori_loop(0, n_chunks, body, acc0)
+        out_ref[...] = acc
+
+    return _reduce_batched_kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_tiles", "tile_n", "chunk", "interpret")
+)
+def spmv_push_batched(
+    contrib: jax.Array,      # f32[B, E_pad] — per-edge contribs, dst-sorted
+    dst_sorted: jax.Array,   # i32[E_pad] — destination per edge (sorted)
+    tile_start: jax.Array,   # i32[num_tiles + 1] — edge range per tile
+    *,
+    num_tiles: int,
+    tile_n: int = TILE_N,
+    chunk: int = CHUNK,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched :func:`spmv_push`: B contribution streams through one shared
+    sorted edge stream.  Returns ``f32[B, num_tiles * tile_n]``."""
+    batch = contrib.shape[0]
+    out = pl.pallas_call(
+        _make_spmv_batched_kernel(batch, tile_n, chunk),
+        grid=(num_tiles,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),   # tile_start (scalar-ish)
+            pl.BlockSpec(memory_space=pl.ANY),   # contrib matrix stays in HBM
+            pl.BlockSpec(memory_space=pl.ANY),   # dst stream stays in HBM
+        ],
+        out_specs=pl.BlockSpec((batch, tile_n), lambda t: (0, t)),
+        out_shape=jax.ShapeDtypeStruct((batch, num_tiles * tile_n),
+                                       jnp.float32),
+        interpret=interpret,
+    )(tile_start, contrib, dst_sorted)
+    return out
+
+
+#: VMEM budget (bytes) the batched masked-reduce tile may occupy — chunk is
+#: halved until B * chunk * tile_n * itemsize fits (min/max reduces are
+#: order-exact, so a smaller chunk changes nothing numerically)
+_REDUCE_TILE_VMEM_BYTES = 6 * 1024 * 1024
+
+
+def batched_reduce_chunk(batch: int, tile_n: int, chunk: int,
+                         itemsize: int = 4) -> int:
+    """Largest chunk ≤ ``chunk`` whose ``[B, chunk, tile_n]`` masked tile
+    fits the VMEM budget (never below 128).  Exposed so callers can reason
+    about the effective chunk the batched reduce kernel will use."""
+    while batch * chunk * tile_n * itemsize > _REDUCE_TILE_VMEM_BYTES \
+            and chunk > 128:
+        chunk //= 2
+    return chunk
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_tiles", "tile_n", "chunk", "op", "interpret"),
+)
+def spmv_reduce_push_batched(
+    contrib: jax.Array,      # [B, E_pad] per-edge contribs, dst-sorted
+    dst_sorted: jax.Array,   # i32[E_pad] destination per edge (sorted)
+    tile_start: jax.Array,   # i32[num_tiles + 1] edge range per tile
+    *,
+    num_tiles: int,
+    op: str,
+    tile_n: int = TILE_N,
+    chunk: int = CHUNK,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched :func:`spmv_reduce_push` for ``op`` ∈ {min, max}.
+
+    Returns ``contrib.dtype[B, num_tiles * tile_n]``; each batch row is
+    bitwise equal to the single-query kernel on the same stream (min/max
+    are reassociation-exact).  The chunk shrinks automatically so the
+    masked tile stays inside VMEM (smaller chunks load the same edges).
+    """
+    if op not in ("min", "max"):
+        raise ValueError(f"op must be 'min' or 'max', got {op!r}")
+    batch = contrib.shape[0]
+    dtype = contrib.dtype
+    if jnp.issubdtype(dtype, jnp.floating):
+        identity = dtype.type(-jnp.inf if op == "max" else jnp.inf)
+    else:
+        info = jnp.iinfo(dtype)
+        identity = dtype.type(info.min if op == "max" else info.max)
+    chunk = batched_reduce_chunk(batch, tile_n, chunk, jnp.dtype(dtype).itemsize)
+    out = pl.pallas_call(
+        _make_reduce_batched_kernel(batch, tile_n, chunk, op, identity),
+        grid=(num_tiles,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((batch, tile_n), lambda t: (0, t)),
+        out_shape=jax.ShapeDtypeStruct((batch, num_tiles * tile_n), dtype),
         interpret=interpret,
     )(tile_start, contrib, dst_sorted)
     return out

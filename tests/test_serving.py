@@ -1,0 +1,486 @@
+"""Serving suite: batched ``[B, N]`` propagation parity + the slot engine.
+
+The contract (see docs/serving.md):
+
+- batched ``push`` over a ``[B, N]`` value matrix == the stack of B
+  single-vector pushes, per registered semiring × backend, on replicated
+  *and* sharded layouts — **bitwise** for the min-reduce semirings (min
+  is reassociation-exact), to f32 summation order otherwise;
+- every registered algorithm's ``summarized_batched`` == its per-query
+  ``summarized`` loop over one shared summary structure (bitwise for the
+  min-semiring workloads), with ``row_mask`` freezing masked rows;
+- the :class:`~repro.serve.graph.GraphServingEngine` serves ≥ 2× its
+  slot count of mixed concurrent queries through one shared graph and
+  answers identically to per-query sessions (PPR allclose, SSSP
+  bitwise), refilling slots as uneven convergence frees them;
+- streamed *weighted* edges reach SSSP through the serving front door;
+- summary overflow degrades to per-row exact recomputes, never crashes.
+
+Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` the
+sharded cases drive the real ``shard_map`` path; on one device they
+cover the shard-loop reference path, same assertions.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+import repro
+from repro.core import backend as B
+from repro.core.algorithm import StreamingAlgorithm, make_algorithm
+from repro.core.hits import hits, summarized_hits
+from repro.core.pagerank import build_summary
+from repro.core.semiring import resolve_semiring
+from repro.graph import from_edges
+from repro.graph.generators import gnm_edges
+from repro.graph.partition import build_sharded_layout
+from repro.serve.graph import GraphServingEngine
+
+TOL = dict(rtol=1e-5, atol=1e-6)
+BATCH = 3
+
+#: every registered semiring × a weight mode it supports (mirrors
+#: test_sharded's coverage — the batched path must not narrow it)
+SEMIRING_WEIGHTS = [
+    ("plus_times", "inv_out"),
+    ("plus_times", "unit"),
+    ("min_plus", "length"),
+    ("min_min", "unit"),
+    ("max_times", "unit"),
+]
+#: reduces for which batching must be bitwise (reassociation-exact ⊕)
+BITWISE_ADDS = ("min",)
+
+ALGORITHMS = ("pagerank", "personalized-pagerank", "hits", "katz",
+              "connected-components", "sssp")
+#: min-semiring workloads: batched vs looped must be bitwise
+BITWISE_ALGOS = ("connected-components", "sssp")
+
+
+def _mesh(max_devices: int = 8) -> Mesh:
+    n = min(jax.device_count(), max_devices)
+    return Mesh(np.asarray(jax.devices()[:n]), ("shards",))
+
+
+def _graph(n=150, m=900, seed=0):
+    src, dst = gnm_edges(n, m, seed=seed)
+    return from_edges(src, dst, n, m + 64)
+
+
+def _batch_values(semiring, n, batch=BATCH, seed=0):
+    s = resolve_semiring(semiring)
+    rng = np.random.default_rng(seed)
+    if np.issubdtype(s.np_dtype, np.floating):
+        return jnp.asarray(rng.random((batch, n)).astype(s.np_dtype))
+    return jnp.asarray(rng.integers(0, n, (batch, n)).astype(s.np_dtype))
+
+
+def _assert_rows_match(out, ref, semiring_or_bitwise):
+    if isinstance(semiring_or_bitwise, bool):
+        bitwise = semiring_or_bitwise
+    else:
+        bitwise = resolve_semiring(semiring_or_bitwise).add in BITWISE_ADDS
+    assert out.dtype == ref.dtype
+    assert out.shape == ref.shape
+    if bitwise:
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    else:
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# layer 1: batched push parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("semiring,weight", SEMIRING_WEIGHTS)
+@pytest.mark.parametrize("backend", ("segment_sum", "pallas"))
+def test_push_batched_parity(semiring, weight, backend):
+    """[B, N] push == the stack of B single pushes (bitwise for min)."""
+    g = _graph()
+    layout = B.build_layout(g, weight=weight, semiring=semiring)
+    vals = _batch_values(semiring, g.node_capacity)
+    out = B.push(vals, layout, semiring=semiring, backend=backend)
+    ref = jnp.stack([
+        B.push(vals[i], layout, semiring=semiring, backend=backend)
+        for i in range(BATCH)])
+    _assert_rows_match(out, ref, semiring)
+
+
+@pytest.mark.parametrize("semiring,weight", SEMIRING_WEIGHTS)
+def test_push_batched_parity_sharded(semiring, weight):
+    """Batched push over a ShardedEdgeLayout == batched replicated push
+    == stacked single sharded pushes."""
+    g = _graph(seed=1)
+    mesh = _mesh()
+    layout_s = build_sharded_layout(
+        g, mesh=mesh, num_shards=mesh.devices.size,
+        weight=weight, semiring=semiring)
+    layout_r = B.build_layout(g, weight=weight, semiring=semiring)
+    vals = _batch_values(semiring, g.node_capacity, seed=1)
+    out = B.push(vals, layout_s, semiring=semiring)
+    _assert_rows_match(
+        out, B.push(vals, layout_r, semiring=semiring), semiring)
+    ref = jnp.stack([
+        B.push(vals[i], layout_s, semiring=semiring) for i in range(BATCH)])
+    _assert_rows_match(out, ref, semiring)
+
+
+def test_push_batched_rejects_3d():
+    g = _graph()
+    layout = B.build_layout(g)
+    with pytest.raises(ValueError, match=r"\[N\] or \[B, N\]"):
+        B.push(jnp.ones((2, 2, g.node_capacity)), layout)
+
+
+# ---------------------------------------------------------------------------
+# layer 2: batched summarized sweeps vs the per-query loop
+# ---------------------------------------------------------------------------
+
+
+def _instances(name, batch=BATCH):
+    """B algorithm instances differing only in per-query identity."""
+    if name == "personalized-pagerank":
+        return [make_algorithm(name, seeds=(i,)) for i in range(batch)]
+    if name == "sssp":
+        return [make_algorithm(name, sources=(i,)) for i in range(batch)]
+    return [make_algorithm(name)] * batch
+
+
+def _rows(insts, g, name):
+    """Per-query state rows; float states perturbed per row so identical
+    instances still exercise genuinely different batch rows."""
+    rows = []
+    for i, inst in enumerate(insts):
+        row = inst.init_state(g)
+        if name not in ("personalized-pagerank", "sssp",
+                        "connected-components"):
+            row = {k: v * (1.0 + 0.05 * i) for k, v in row.items()}
+        rows.append(row)
+    return rows
+
+
+def _stack(rows):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *rows)
+
+
+@pytest.mark.parametrize("name", ALGORITHMS)
+def test_summarized_batched_parity(name):
+    """Batched sweep over one shared summary == the B-way per-query loop
+    (bitwise for the min-semiring workloads), and row_mask freezes rows."""
+    g = _graph(seed=2)
+    caps = dict(hot_node_capacity=g.node_capacity,
+                hot_edge_capacity=g.edge_capacity)
+    insts = _instances(name)
+    rows = _rows(insts, g, name)
+    batch_state = _stack(rows)
+    algo = insts[0]
+    algo.validate_batch_state(batch_state, BATCH)
+    hot = jnp.copy(g.node_active)
+
+    summaries_b = algo.build_summaries(batch_state, g, hot, **caps)
+    out_b, _, row_delta = algo.summarized_batched(
+        batch_state, g, summaries_b)
+    assert row_delta.shape == (BATCH,)
+    bitwise = name in BITWISE_ALGOS
+    for i, (inst, row) in enumerate(zip(insts, rows)):
+        summaries_i = inst.build_summaries(row, g, hot, **caps)
+        out_i, _ = inst.summarized(row, g, summaries_i)
+        for key in out_i:
+            _assert_rows_match(out_b[key][i], out_i[key], bitwise)
+
+    # masked rows carry through unchanged and report zero delta
+    mask = jnp.asarray([True, False, True])
+    out_m, _, delta_m = algo.summarized_batched(
+        batch_state, g, summaries_b, row_mask=mask)
+    for key in out_m:
+        np.testing.assert_array_equal(
+            np.asarray(out_m[key][1]), np.asarray(batch_state[key][1]))
+        _assert_rows_match(out_m[key][0], out_b[key][0], bitwise)
+    assert float(delta_m[1]) == 0.0
+
+
+@pytest.mark.parametrize("name", ("pagerank", "sssp"))
+def test_summarized_batched_parity_sharded(name):
+    """Batched-vs-looped parity holds over mesh-sharded layouts (the
+    distributed-bucket-sort summary construction) — bitwise for SSSP."""
+    g = _graph(seed=3)
+    mesh = _mesh()
+    caps = dict(hot_node_capacity=g.node_capacity,
+                hot_edge_capacity=g.edge_capacity)
+    insts = _instances(name)
+    rows = _rows(insts, g, name)
+    batch_state = _stack(rows)
+    algo = insts[0]
+    hot = jnp.copy(g.node_active)
+    layouts = tuple(
+        build_sharded_layout(g, mesh=mesh, num_shards=mesh.devices.size,
+                             weight=w, reverse=rev, semiring=s)
+        for (w, rev, s) in map(B.normalize_layout_spec, algo.layout_specs))
+
+    summaries_b = algo.build_summaries(
+        batch_state, g, hot, **caps, layouts=layouts)
+    out_b, _, _ = algo.summarized_batched(batch_state, g, summaries_b)
+    bitwise = name in BITWISE_ALGOS
+    for i, (inst, row) in enumerate(zip(insts, rows)):
+        summaries_i = inst.build_summaries(row, g, hot, **caps,
+                                           layouts=layouts)
+        out_i, _ = inst.summarized(row, g, summaries_i)
+        for key in out_i:
+            _assert_rows_match(out_b[key][i], out_i[key], bitwise)
+
+
+def test_validate_batch_state_rejects():
+    g = _graph()
+    algo = make_algorithm("sssp", sources=(0,))
+    bank = _stack([algo.init_state(g)] * 2)
+    algo.validate_batch_state(bank, 2)  # well-formed
+    with pytest.raises(ValueError, match="missing declared keys"):
+        algo.validate_batch_state(
+            {k: v for k, v in bank.items() if k != "dist"}, 2)
+    with pytest.raises(ValueError, match="dtype"):
+        bad = dict(bank, dist=jnp.zeros_like(bank["dist"], jnp.int32))
+        algo.validate_batch_state(bad, 2)
+    with pytest.raises(ValueError, match="leading batch axis"):
+        algo.validate_batch_state(bank, 3)
+
+
+# ---------------------------------------------------------------------------
+# layer 3: the serving engine
+# ---------------------------------------------------------------------------
+
+
+def _serve(graph_source, **kw):
+    return repro.serve_session(graph_source, **kw)
+
+
+def test_serving_mixed_tenants_match_sessions():
+    """A slot-4 engine drains 14 concurrent queries (3.5× its slots) —
+    10 PPR seed sets + 4 SSSP sources — through ONE shared graph, and
+    every answer matches a dedicated single-query session: allclose for
+    PPR, bitwise for SSSP."""
+    n, m = 150, 900
+    src, dst = gnm_edges(n, m, seed=4)
+    srv = _serve((src, dst), slots=4)
+    ppr = [srv.submit("personalized-pagerank", seeds=(s,))
+           for s in range(10)]
+    sssp = [srv.submit("sssp", sources=(s,)) for s in range(4)]
+    assert srv.pending == 14
+    stats = srv.run()
+    assert srv.pending == 0
+    assert stats.queries_submitted == stats.queries_completed == 14
+    assert stats.waves >= 3          # 10 queries through 4 slots
+    assert 0.0 < stats.mean_occupancy <= 1.0
+    assert stats.queries_per_s > 0.0
+    assert stats.p95_wave_latency_s >= stats.p50_wave_latency_s > 0.0
+
+    for s, t in enumerate(ppr):
+        # default tickets complete by wave budget (one summarized sweep,
+        # like engine.query()); `converged` stays False unless the inner
+        # delta actually reached tol
+        assert t.done and not t.exact_fallback
+        with repro.session((src, dst), "personalized-pagerank",
+                           seeds=(s,)) as ref:
+            np.testing.assert_allclose(
+                np.asarray(t.result), np.asarray(ref.query().scores), **TOL)
+    for s, t in enumerate(sssp):
+        assert t.done and t.converged
+        with repro.session((src, dst), "sssp", sources=(s,)) as ref:
+            np.testing.assert_array_equal(
+                np.asarray(t.result), np.asarray(ref.query().scores))
+    srv.close()
+
+
+def test_uneven_convergence_refills_slots():
+    """Two slots, three SSSP queries of very different depths on a
+    64-vertex path: the shallow query converges and frees its slot for
+    the queued one while the deep query keeps iterating — per-slot
+    convergence masking, not lane-wide barriers."""
+    n = 64
+    src = np.arange(n - 1, dtype=np.int32)
+    dst = src + 1
+    srv = _serve((src, dst), slots=2)
+    near = srv.submit("sssp", sources=(62,), num_iters=2, max_waves=200)
+    far = srv.submit("sssp", sources=(0,), num_iters=2, max_waves=200)
+
+    while not near.done:
+        srv.step()
+    assert not far.done              # the deep query is still in its slot
+    extra = srv.submit("sssp", sources=(50,), num_iters=2, max_waves=200)
+    srv.run()
+
+    for t in (near, far, extra):
+        assert t.done and t.converged and not t.exact_fallback
+    # two relaxations per wave: depth 1 needs 2 waves (second detects
+    # convergence), depth 63 needs ~32, depth 13 ~7 — and the refilled
+    # query's wave count proves it started after `near` freed the slot
+    assert near.waves_run < extra.waves_run < far.waves_run
+    assert float(near.result[63]) == 1.0
+    assert float(extra.result[63]) == 13.0
+    assert float(far.result[63]) == 63.0
+    srv.close()
+
+
+def test_streamed_weighted_edges_reach_sssp():
+    """A weighted add_edges chunk through the serving front door lands in
+    the length layouts: the streamed 2.5-length edge completes the
+    0→…→3→4 path at distance 5.5."""
+    src = np.asarray([0, 1, 2, 4], np.int32)
+    dst = np.asarray([1, 2, 3, 0], np.int32)
+    srv = _serve((src, dst), slots=2, edge_capacity=16)
+    srv.add_edges([3], [4], weights=[2.5])
+    t = srv.submit("sssp", sources=(0,))
+    srv.run()
+    assert t.done and t.converged
+    assert float(t.result[4]) == 5.5
+    srv.close()
+
+
+def test_overflow_falls_back_to_exact():
+    """Summary capacity too small for the cold-start wave: the batch
+    result is discarded and every live query is served by a per-row
+    exact recompute — graceful degradation, correct answers."""
+    src, dst = gnm_edges(100, 800, seed=5)
+    srv = _serve((src, dst), slots=2, hot_node_capacity=128,
+                 hot_edge_capacity=16)
+    t = srv.submit("personalized-pagerank", seeds=(7,))
+    srv.run()
+    assert t.done and t.exact_fallback and not t.converged
+    assert srv.stats.overflow_fallbacks >= 1
+    with repro.session((src, dst), "personalized-pagerank",
+                       seeds=(7,)) as ref:
+        np.testing.assert_allclose(
+            np.asarray(t.result), np.asarray(ref.query().scores), **TOL)
+    srv.close()
+
+
+def test_submit_rejects_unbatched_algorithm():
+    """Legacy plugins without ``summarized_batched`` are rejected at
+    submit time, not at trace time mid-wave."""
+
+    @dataclasses.dataclass(frozen=True)
+    class NoBatch(StreamingAlgorithm):
+        name = "nobatch"
+
+        def init_state(self, graph):
+            return {"x": jnp.zeros((graph.node_capacity,), jnp.float32)}
+
+        def exact(self, state, graph, *, layouts=None, backend=None):
+            return state, jnp.int32(0)
+
+        def summarized(self, state, graph, summaries, *, backend=None):
+            return state, jnp.int32(0)
+
+        def result_view(self, state):
+            return state["x"]
+
+    src, dst = gnm_edges(50, 200, seed=6)
+    srv = _serve((src, dst), slots=2)
+    with pytest.raises(TypeError, match="summarized_batched"):
+        srv.submit(NoBatch())
+    with pytest.raises(ValueError, match="max_waves"):
+        srv.submit("pagerank", max_waves=0)
+    srv.close()
+
+
+def test_wrapping_requires_started_engine():
+    from repro.core.engine import EngineConfig, VeilGraphEngine
+
+    eng = VeilGraphEngine(EngineConfig(
+        node_capacity=8, edge_capacity=16,
+        hot_node_capacity=8, hot_edge_capacity=16))
+    with pytest.raises(ValueError, match="started"):
+        GraphServingEngine(eng, slots=2)
+
+
+def test_serving_on_mesh_with_shard_capacity_knob():
+    """Serving composes with the sharded path: a mesh engine answers
+    identically (bitwise for SSSP), and the post-exchange
+    ``shard_hot_edge_capacity`` knob threads through — a generous cap
+    changes nothing, a starved cap degrades to the exact fallback with
+    correct answers."""
+    src, dst = gnm_edges(120, 700, seed=7)
+    mesh = _mesh()
+
+    with repro.session((src, dst), "sssp", sources=(3,)) as ref:
+        want = np.asarray(ref.query().scores)
+
+    srv = _serve((src, dst), slots=2, mesh=mesh,
+                 shard_hot_edge_capacity=4096)
+    t = srv.submit("sssp", sources=(3,))
+    srv.run()
+    assert t.done and not t.exact_fallback
+    np.testing.assert_array_equal(np.asarray(t.result), want)
+    srv.close()
+
+    srv = _serve((src, dst), slots=2, mesh=mesh, shard_hot_edge_capacity=2)
+    t = srv.submit("sssp", sources=(3,))
+    srv.run()
+    assert t.done and t.exact_fallback
+    assert srv.stats.overflow_fallbacks >= 1
+    np.testing.assert_array_equal(np.asarray(t.result), want)
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# satellite: the tracked global-σ HITS estimate
+# ---------------------------------------------------------------------------
+
+
+def test_summarized_hits_full_coverage_matches_exact():
+    """With K = V the cold mass is zero and the tracked σ̂ reduces to the
+    exact sweep's global normalization."""
+    g = _graph(seed=8)
+    n = g.node_capacity
+    auth0 = jnp.full((n,), 1.0 / n)
+    hub0 = jnp.full((n,), 1.0 / n)
+    caps = dict(hot_node_capacity=n, hot_edge_capacity=g.edge_capacity)
+    hot = jnp.copy(g.node_active)
+    fwd = build_summary(g, hub0, hot, **caps, weight="unit")
+    rev = build_summary(g, auth0, hot, **caps, weight="unit", reverse=True)
+    a, h, _, _ = summarized_hits(fwd, rev, auth0, hub0, num_iters=15)
+    a_ref, h_ref, _, _ = hits(g, num_iters=15)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(a_ref), **TOL)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), **TOL)
+
+
+def test_summarized_hits_partial_coverage_sigma_counts_cold_mass():
+    """Partial coverage: cold scores are a frozen Dirichlet boundary
+    (bitwise unchanged outside K) and the σ̂ estimate — anchored to the
+    σ the exact computation measured, extrapolating the boundary's raw
+    mass — keeps the hot block *stationary* at the global fixed point.
+    The pre-fix hot-only estimator pinned the hot/cold mass ratio
+    instead of the scale, and a naive blend that counts the frozen cold
+    mass without the σ extrapolation drifts linearly."""
+    g = _graph(seed=9)
+    n = g.node_capacity
+    a_ref, h_ref, _, sigma = hits(g, num_iters=60, tol=1e-7)
+    # warm start at the fixed point, then restrict to a half-graph hot
+    # set: a well-scaled sweep should STAY at the fixed point
+    hot = jnp.arange(n) < n // 2
+    caps = dict(hot_node_capacity=n, hot_edge_capacity=g.edge_capacity)
+    fwd = build_summary(g, h_ref, hot, **caps, weight="unit")
+    rev = build_summary(g, a_ref, hot, **caps, weight="unit", reverse=True)
+    a, h, _, sigma_out = summarized_hits(
+        fwd, rev, a_ref, h_ref, sigma, num_iters=10)
+    assert np.all(np.isfinite(np.asarray(a)))
+    assert np.all(np.isfinite(np.asarray(h)))
+    cold = ~np.asarray(hot)
+    np.testing.assert_array_equal(
+        np.asarray(a)[cold], np.asarray(a_ref)[cold])
+    np.testing.assert_array_equal(
+        np.asarray(h)[cold], np.asarray(h_ref)[cold])
+    # anchored normalization: hot L1 mass stays where the warm start put
+    # it (no drift against the frozen boundary), and the refreshed σ̂
+    # stays pinned to the measured anchor
+    hot_np = np.asarray(hot)
+    for new, ref in ((a, a_ref), (h, h_ref)):
+        m_new = float(jnp.sum(jnp.abs(new[hot_np])))
+        m_ref = float(jnp.sum(jnp.abs(ref[hot_np])))
+        assert 0.8 * m_ref < m_new < 1.25 * m_ref, (m_new, m_ref)
+    np.testing.assert_allclose(np.asarray(sigma_out), np.asarray(sigma),
+                               rtol=0.1)

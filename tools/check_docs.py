@@ -54,6 +54,7 @@ PUBLIC_API_MODULES = [
     "src/repro/kernels/spmv/ops.py",
     "src/repro/metrics/ranking.py",
     "src/repro/metrics/rbo.py",
+    "src/repro/serve/graph.py",
     "src/repro/stream/stream.py",
 ]
 
@@ -61,7 +62,8 @@ PUBLIC_API_MODULES = [
 #: users or called directly); public methods defined on them need docs too
 STRICT_CLASSES = {"StreamingAlgorithm", "Semiring", "VeilGraphEngine",
                   "VeilGraphSession", "GraphState", "EdgeLayout",
-                  "ShardedEdgeLayout", "SummaryBuffers"}
+                  "ShardedEdgeLayout", "SummaryBuffers",
+                  "GraphServingEngine", "QueryTicket", "ServeStats"}
 
 _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
