@@ -53,6 +53,29 @@ def bench_summarized_query():
     return [("veilgraph_query_500k_edges", us, "fused select+summary+iterate")]
 
 
+def sweep_tune_specs(nodes=50_000, edges=500_000):
+    """Autotune keys for the sweep-fixture layouts.  ``run.py --autotune
+    full`` measures these into ``benchmarks/autotune_cache.json`` so the
+    sweep rows replay tuned geometry from the committed cache."""
+    cap = edges + 20_000
+    return [
+        dict(edge_capacity=cap, num_segments=nodes, reduce="sum"),
+        dict(edge_capacity=cap, num_segments=nodes, reduce="min"),
+    ]
+
+
+def _tuned_geometry(g, reduce):
+    """Cached-mode geometry for a sweep-fixture layout (the committed
+    autotune cache answers when loaded; the analytic argmin otherwise —
+    the same resolution the engine does at layout-build time)."""
+    from repro.kernels.spmv import autotune as AT
+
+    tile_n, chunk = AT.tune_for_push(
+        edge_capacity=g.edge_capacity, num_segments=g.node_capacity,
+        reduce=reduce, mode="cached")
+    return dict(tile_n=tile_n, chunk=chunk)
+
+
 def _sweep_fixture(nodes=50_000, edges=500_000):
     """The 500k-edge reference graph + everything a sweep bench needs."""
     from repro.graph import from_edges
@@ -62,7 +85,7 @@ def _sweep_fixture(nodes=50_000, edges=500_000):
 
     src, dst = gnm_edges(nodes, edges, seed=0)
     g = from_edges(src, dst, nodes, edges + 20_000)
-    layout = B.build_layout(g, weight="inv_out")
+    layout = B.build_layout(g, weight="inv_out", **_tuned_geometry(g, "sum"))
     ranks, _ = pagerank(g, num_iters=5)
     hot = jnp.asarray(
         np.random.default_rng(0).random(nodes) < 0.15)
@@ -79,7 +102,8 @@ def _minplus_fixture(g):
     from repro.core.traversal import sssp
 
     nodes = g.node_capacity
-    layout = B.build_layout(g, weight="length", semiring="min_plus")
+    layout = B.build_layout(g, weight="length", semiring="min_plus",
+                            **_tuned_geometry(g, "min"))
     source = jnp.zeros((nodes,), bool).at[0].set(True)
     dist, _ = sssp(g, source, num_iters=3, layout=layout,
                    backend="segment_sum")
@@ -291,16 +315,112 @@ def bench_sweep_backends(*, smoke: bool = False, nodes=50_000, edges=500_000):
                                         sweep_iters=sweep_iters))
     cases.extend(_serving_cases(g, ranks, live_edges, iters=iters))
     records = [
-        {"name": name, "us_per_call": round(us, 1), "derived": derived}
+        {"name": name, "us_per_call": round(us, 1), "derived": derived,
+         # pallas rows carry _interp in the name when they ran in interpret
+         # mode; everything else (and on-TPU pallas) is a compiled timing
+         "mode": "interpret" if "_interp" in name else "compiled"}
         for name, us, derived in cases
     ]
     meta = {
         "graph": {"nodes": nodes, "edges": edges, "live_edges": live_edges},
         "interpret": interpret,
         "device": jax.default_backend(),
+        "platform": jax.default_backend(),
+        "device_kind": jax.devices()[0].device_kind,
         "device_count": jax.device_count(),
         "smoke": smoke,
         "sweep_iters": sweep_iters,
+        # geometry the full-graph push layouts were built with (autotuned
+        # when benchmarks/autotune_cache.json was loaded first)
+        "push_geometry": {
+            "plus_times": [layout.tile_n, layout.tile_chunk],
+            "min_plus": [mp_layout.tile_n, mp_layout.tile_chunk],
+        },
+    }
+    return cases, {"meta": meta, "rows": records}
+
+
+def bench_kernel_matrix(*, smoke: bool = False, autotune_mode: str = "cached"):
+    """``--only kernels``: the per-geometry kernel matrix.
+
+    Times both kernel variants — the one-hot-matmul sum push and the
+    segmented-scan masked reduce — across the autotuner's ``(tile_n,
+    chunk)`` candidate grid on a synthetic sorted edge stream, then pits
+    the autotuned geometry against the hardcoded ``(TILE_N, CHUNK)``
+    defaults on a summary-shaped stream (small destination space) where
+    the defaults leave time on the table.  Off-TPU the kernels run in
+    interpret mode; rows are tagged so the artifact records which.
+
+    ``autotune_mode`` is the :func:`repro.kernels.spmv.autotune.tune` mode
+    used for the tuned-vs-default rows: ``"full"`` times the whole pruned
+    candidate grid (this is how ``benchmarks/autotune_cache.json`` is
+    regenerated), ``"cached"`` replays a loaded cache (the CI smoke path).
+
+    Returns (rows, record) shaped like :func:`bench_sweep_backends`.
+    """
+    from repro.core import backend as B
+    from repro.kernels.spmv import autotune as AT
+    from repro.kernels.spmv.kernel import CHUNK, TILE_N
+
+    interpret = B.default_interpret()
+    itag = "_interp" if interpret else ""
+    iters = 1 if smoke else 3
+    platform = jax.default_backend()
+
+    # matrix shape: mid-sized stream, full destination space
+    mx_n, mx_e = (2_048, 16_384) if smoke else (8_192, 131_072)
+    tiles = (128, 512) if smoke else AT.TILE_N_CANDIDATES
+    chunks = (256, 1024) if smoke else AT.CHUNK_CANDIDATES
+
+    cases = []
+    for reduce in ("sum", "min"):
+        key = AT.TuneKey(e_pad=mx_e, n=mx_n, b=1, dtype="float32",
+                         reduce=reduce, platform=platform)
+        for tile_n in tiles:
+            for chunk in chunks:
+                cost = AT.modeled_push_cost(
+                    e_pad=mx_e, n=mx_n, reduce=reduce,
+                    tile_n=tile_n, chunk=chunk)
+                if cost.vmem_bytes > AT.VMEM_LIMIT_BYTES:
+                    continue
+                us = AT._time_candidate(key, tile_n, chunk,
+                                        interpret=interpret,
+                                        iters=iters) * 1e6
+                cases.append((
+                    f"kernel_{reduce}_t{tile_n}_c{chunk}{itag}", us,
+                    f"modeled={cost.bound_time_s * 1e6:.2f}us,"
+                    f"hbm={cost.hbm_bytes / 1e6:.2f}MB"))
+
+    # tuned vs hardcoded defaults on a non-default (summary-shaped) stream.
+    # The shape is identical in smoke and full runs so the committed
+    # autotune cache covers the CI smoke replay.
+    cmp_n, cmp_e = 1_024, 65_536
+    for reduce in ("sum", "min"):
+        key = AT.TuneKey(e_pad=cmp_e, n=cmp_n, b=1, dtype="float32",
+                         reduce=reduce, platform=platform)
+        tile_t, chunk_t = AT.tune(key, autotune_mode, measure_top=99)
+        us_t = AT._time_candidate(key, tile_t, chunk_t,
+                                  interpret=interpret, iters=iters) * 1e6
+        us_d = AT._time_candidate(key, TILE_N, CHUNK,
+                                  interpret=interpret, iters=iters) * 1e6
+        cases.append((f"kernel_{reduce}_tuned_summary1k{itag}", us_t,
+                      f"t{tile_t}xc{chunk_t},{us_d / us_t:.2f}x vs default"))
+        cases.append((f"kernel_{reduce}_default_summary1k{itag}", us_d,
+                      f"t{TILE_N}xc{CHUNK}"))
+
+    records = [
+        {"name": name, "us_per_call": round(us, 1), "derived": derived,
+         "mode": "interpret" if "_interp" in name else "compiled"}
+        for name, us, derived in cases
+    ]
+    meta = {
+        "matrix_shape": {"nodes": mx_n, "edges": mx_e},
+        "compare_shape": {"nodes": cmp_n, "edges": cmp_e},
+        "interpret": interpret,
+        "platform": platform,
+        "device_kind": jax.devices()[0].device_kind,
+        "smoke": smoke,
+        "autotune_mode": autotune_mode,
     }
     return cases, {"meta": meta, "rows": records}
 

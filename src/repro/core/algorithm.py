@@ -45,14 +45,16 @@ through ``jax.jit`` as static arguments — the generic fused query step in
 :mod:`repro.core.fused` traces ``build_summaries`` + ``summarized`` inline
 into one XLA program per (algorithm, capacities) pair.
 
-Six algorithms ship in the registry:
+Seven algorithms ship in the registry:
 
 - ``pagerank``  — the paper's case study (Gelly-style normalization);
 - ``personalized-pagerank`` — seeded teleport vector, same summarized path;
 - ``hits``      — hubs & authorities via a forward + reverse summary pair;
 - ``katz``      — attenuated-walk centrality (unit weights, β attraction);
 - ``connected-components`` — label-min propagation on ``min_min``/int32;
-- ``sssp``      — single-source shortest paths on ``min_plus``.
+- ``sssp``      — single-source shortest paths on ``min_plus``;
+- ``widest-path`` — most-reliable paths on ``max_times`` (the max-reduce
+  kernel path).
 
 Register your own with :func:`register_algorithm` and run it through
 ``veilgraph``'s session front door (:func:`repro.api.session`).
@@ -90,6 +92,11 @@ from repro.core.traversal import \
 from repro.core.traversal import summarized_sssp as _summarized_sssp
 from repro.core.traversal import \
     summarized_sssp_batched as _summarized_sssp_batched
+from repro.core.traversal import summarized_widest_path as \
+    _summarized_widest_path
+from repro.core.traversal import summarized_widest_path_batched as \
+    _summarized_widest_path_batched
+from repro.core.traversal import widest_path as _widest_path
 from repro.graph.graph import GraphState
 
 #: Algorithm state is a flat dict of device arrays — a JAX pytree, so the
@@ -959,6 +966,107 @@ class SSSPAlgorithm(StreamingAlgorithm):
 
 
 # ---------------------------------------------------------------------------
+# Widest path — most-reliable paths (max_times)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class WidestPathAlgorithm(StreamingAlgorithm):
+    """Streaming widest (most-reliable) paths on the ``max_times`` semiring.
+
+    ``sources`` is a (hashable) tuple of vertex ids whose widths are pinned
+    to 1; unreachable vertices hold 0.  Edge lengths act as multiplicative
+    reliabilities/capacities and must be **non-negative** — streams that
+    register edges with a ``weights`` column feed them into the
+    ``weight="length"`` layout automatically; unit lengths make every
+    reachable vertex width 1.  This is the seventh registry algorithm and
+    the one exercising the masked-reduce *max* kernel path end to end
+    (exact, summarized, and batched serving sweeps).
+
+    EXACT actions recompute from the sources by default (correct under
+    removals); ``warm_start=True`` relaxes from the previous widths, exact
+    for addition-only streams (widths are monotone non-decreasing).
+    """
+
+    sources: Tuple[int, ...] = (0,)
+    num_iters: int = 30
+    warm_start: bool = False
+
+    name = "widest-path"
+    normalize_selection_scores = True
+    semiring = "max_times"
+    summary_weight = "length"
+    state_dtypes = {"width": "float32", "source": "bool",
+                    "delta": "float32"}
+    per_query_params = ("sources",)  # identity lives in state["source"]
+    layout_specs = (("length", False, "max_times"),)
+
+    def __post_init__(self):
+        if not self.sources:
+            raise ValueError("widest-path needs >= 1 source vertex")
+
+    def _source_mask(self, n_cap: int) -> jax.Array:
+        src = jnp.asarray(self.sources, jnp.int32)
+        if int(src.min()) < 0:
+            raise ValueError(f"source {int(src.min())} is negative")
+        if int(src.max()) >= n_cap:
+            raise ValueError(
+                f"source {int(src.max())} >= node_capacity {n_cap}")
+        return jnp.zeros((n_cap,), bool).at[src].set(True)
+
+    def init_state(self, graph: GraphState) -> AlgoState:
+        source = self._source_mask(graph.node_capacity)
+        return {
+            "width": jnp.where(source, 1.0, 0.0).astype(jnp.float32),
+            "source": source,
+            "delta": jnp.zeros((graph.node_capacity,), jnp.float32),
+        }
+
+    def exact(self, state, graph, *, layouts=None, backend=None):
+        width, iters = _widest_path(
+            graph,
+            state["source"],
+            state["width"] if self.warm_start else None,
+            num_iters=self.num_iters,
+            layout=layouts[0] if layouts else None,
+            backend=backend,
+        )
+        return {"width": width, "source": state["source"],
+                "delta": _finite_churn(width, state["width"])}, iters
+
+    # build_summaries: the inherited default — one forward summary frozen
+    # from result_view (= width) over summary_weight/semiring declared above
+
+    def summarized(self, state, graph, summaries, *, backend=None):
+        (summary,) = summaries
+        width, iters = _summarized_widest_path(
+            summary, state["width"], state["source"],
+            num_iters=self.num_iters, backend=backend,
+        )
+        return {"width": width, "source": state["source"],
+                "delta": _finite_churn(width, state["width"])}, iters
+
+    def summarized_batched(self, batch_state, graph, summaries, *,
+                           row_mask=None, backend=None):
+        # one engine lane serves B different source sets: the pinned-1
+        # masks ride in the batch state ([B, N]), not in `self`
+        (summary,) = summaries
+        width, iters, changed = _summarized_widest_path_batched(
+            summary, batch_state["width"], batch_state["source"],
+            num_iters=self.num_iters, row_mask=row_mask, backend=backend,
+        )
+        return {"width": width, "source": batch_state["source"],
+                "delta": _finite_churn(width, batch_state["width"])}, \
+            iters, changed.astype(jnp.float32)
+
+    def result_view(self, state):
+        return state["width"]
+
+    def selection_view(self, state):
+        return state["delta"]
+
+
+# ---------------------------------------------------------------------------
 # Registry
 # ---------------------------------------------------------------------------
 
@@ -1039,3 +1147,5 @@ register_algorithm("connected-components", ConnectedComponentsAlgorithm,
                    aliases=("cc", "wcc"))
 register_algorithm("sssp", SSSPAlgorithm,
                    aliases=("shortest-paths",))
+register_algorithm("widest-path", WidestPathAlgorithm,
+                   aliases=("most-reliable-path",))

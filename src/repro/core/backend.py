@@ -117,8 +117,10 @@ def default_interpret() -> bool:
 
 @functools.partial(
     jax.tree_util.register_dataclass,
-    data_fields=("src", "dst", "weight", "valid", "row_offsets", "order"),
-    meta_fields=("weight_mode", "reverse", "pad_chunk", "semiring"),
+    data_fields=("src", "dst", "weight", "valid", "row_offsets", "order",
+                 "rank"),
+    meta_fields=("weight_mode", "reverse", "pad_chunk", "semiring", "tile_n",
+                 "tile_chunk"),
 )
 @dataclasses.dataclass(frozen=True)
 class EdgeLayout:
@@ -154,10 +156,21 @@ class EdgeLayout:
     #: (build_summary recovers per-edge lengths this way).  None for
     #: summary layouts, whose edge space is already compacted.
     order: Optional[jax.Array] = None
+    #: per-edge rank within its destination run (``i - row_offsets[dst_i]``
+    #: in sorted order; 0 in padding) — the segmented-scan reduce kernel's
+    #: same-run test.  Only baked for min/max-semiring layouts (``push``
+    #: derives it inline otherwise).
+    rank: Optional[jax.Array] = None
     weight_mode: str = "inv_out"
     reverse: bool = False
     pad_chunk: int = CHUNK
     semiring: str = "plus_times"
+    #: autotuned kernel geometry (static, ``None`` = kernel defaults):
+    #: stamped at build time by the engine's autotune pass so every
+    #: consuming sweep picks the tuned ``(tile_n, chunk)`` with no user
+    #: knobs — ``push`` resolves explicit argument > layout meta > default.
+    tile_n: Optional[int] = None
+    tile_chunk: Optional[int] = None
 
     @property
     def num_segments(self) -> int:
@@ -167,9 +180,10 @@ class EdgeLayout:
 
 @functools.partial(
     jax.tree_util.register_dataclass,
-    data_fields=("src", "dst", "weight", "valid", "row_offsets", "order"),
-    meta_fields=("weight_mode", "reverse", "pad_chunk", "semiring", "mesh",
-                 "axes"),
+    data_fields=("src", "dst", "weight", "valid", "row_offsets", "order",
+                 "rank"),
+    meta_fields=("weight_mode", "reverse", "pad_chunk", "semiring", "tile_n",
+                 "tile_chunk", "mesh", "axes"),
 )
 @dataclasses.dataclass(frozen=True)
 class ShardedEdgeLayout:
@@ -207,10 +221,17 @@ class ShardedEdgeLayout:
     #: edge_capacity in padding — the partition certificate (each live slot
     #: appears in exactly one shard) and the lengths back-map.
     order: Optional[jax.Array] = None
+    #: per-(shard, position) rank within its destination run — the
+    #: segmented-scan reduce kernel's same-run test, baked only for
+    #: min/max-semiring layouts (see :class:`EdgeLayout`).
+    rank: Optional[jax.Array] = None
     weight_mode: str = "inv_out"
     reverse: bool = False
     pad_chunk: int = CHUNK
     semiring: str = "plus_times"
+    #: autotuned kernel geometry (static; see :class:`EdgeLayout`)
+    tile_n: Optional[int] = None
+    tile_chunk: Optional[int] = None
     mesh: Optional[Mesh] = None
     axes: Tuple[str, ...] = ()
 
@@ -237,9 +258,30 @@ def padded_length(e: int, chunk: int) -> int:
     return (e // chunk + 2) * chunk
 
 
+def validate_weight_dtype(weight_dtype: Optional[str],
+                          s: Semiring) -> Optional[str]:
+    """Trace-time check for compressed edge-weight storage: only the f32
+    semirings may store weights in a narrower float dtype (accumulation
+    stays f32 via jnp promotion — ``bf16 ⊗ f32 → f32``); the int32
+    ``min_min`` family has no narrow storage form."""
+    if weight_dtype is None:
+        return None
+    dt = jnp.dtype(weight_dtype)
+    if dt == jnp.dtype(s.dtype):
+        return None  # storage dtype == semiring dtype: nothing to compress
+    if jnp.dtype(s.dtype) != jnp.float32 or dt not in (
+            jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16)):
+        raise ValueError(
+            f"weight_dtype={weight_dtype!r} is not a storage form of "
+            f"semiring {s.name!r} ({s.dtype}); compressed weights need an "
+            f"f32 semiring and a bfloat16/float16 storage dtype")
+    return str(dt)
+
+
 def bake_weights(s: Semiring, weight: str, valid: jax.Array,
                  src: jax.Array, *, inv_deg=None,
-                 lengths=None) -> jax.Array:
+                 lengths=None, weight_dtype: Optional[str] = None
+                 ) -> jax.Array:
     """The per-edge ⊗-operand for a stream, per weight mode — the single
     definition of what ``inv_out``/``unit``/``length`` bake, shared by the
     single and sharded layout builders so the two cannot drift.
@@ -249,16 +291,37 @@ def bake_weights(s: Semiring, weight: str, valid: jax.Array,
     node-space ``1/d_out`` vector for ``inv_out``.  ``lengths=None`` under
     ``weight="length"`` means unit hop counts.  Invalid slots bake the
     semiring's ⊕-identity so they never contribute.
+
+    ``weight_dtype`` optionally narrows the *storage* dtype (bf16 halves
+    the weight stream's HBM traffic); the ⊗ with f32 node values promotes
+    back to f32, so accumulation precision is unchanged.
     """
     dtype = jnp.dtype(s.dtype)
     zero = jnp.asarray(s.zero, dtype)
     if weight == "inv_out":
-        return jnp.where(valid, inv_deg[src], 0.0)
-    if weight == "unit":
-        return jnp.where(valid, jnp.asarray(s.one, dtype), zero)
-    per_edge = (jnp.asarray(1, dtype) if lengths is None
-                else lengths.astype(dtype))
-    return jnp.where(valid, per_edge, zero)
+        w = jnp.where(valid, inv_deg[src], 0.0)
+    elif weight == "unit":
+        w = jnp.where(valid, jnp.asarray(s.one, dtype), zero)
+    else:
+        per_edge = (jnp.asarray(1, dtype) if lengths is None
+                    else lengths.astype(dtype))
+        w = jnp.where(valid, per_edge, zero)
+    if validate_weight_dtype(weight_dtype, s) is not None:
+        w = w.astype(weight_dtype)
+    return w
+
+
+def stream_rank(dst: jax.Array, valid: jax.Array,
+                row_offsets: jax.Array) -> jax.Array:
+    """Per-edge rank within its destination run (``i - row_offsets[dst_i]``
+    over the sorted stream; 0 in invalid/padding slots so the segmented
+    scan's ``rank >= offset`` test never crosses into them).  Baked at
+    layout-build time for min/max-semiring layouts; :func:`push` computes
+    it inline for layouts that lack it."""
+    num_segments = row_offsets.shape[0] - 1
+    idx = jnp.arange(dst.shape[0], dtype=jnp.int32)
+    start = row_offsets[jnp.minimum(dst, num_segments)]
+    return jnp.where(valid, idx - start, 0)
 
 
 def _pad_stream(src, dst, weight, valid, *, sentinel: int, chunk: int,
@@ -309,7 +372,8 @@ def validate_weight_spec(weight: str, *, reverse: bool = False,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("weight", "reverse", "chunk", "semiring"))
+    jax.jit, static_argnames=("weight", "reverse", "chunk", "semiring",
+                              "tile_n", "weight_dtype"))
 def build_layout(
     state: GraphState,
     *,
@@ -318,6 +382,8 @@ def build_layout(
     chunk: int = CHUNK,
     semiring: str = "plus_times",
     lengths: Optional[jax.Array] = None,
+    tile_n: Optional[int] = None,
+    weight_dtype: Optional[str] = None,
 ) -> EdgeLayout:
     """Full-graph propagation layout, sorted once per call.
 
@@ -339,6 +405,12 @@ def build_layout(
 
     Degrees are baked into ``weight``, so a layout is valid exactly until
     the next applied update batch — the engine invalidates its cache then.
+
+    ``tile_n`` stamps an autotuned output-tile width onto the layout (and
+    ``chunk`` doubles as the tuned stream chunk, since the pad slack must
+    cover it); :func:`push` then picks the tuned geometry with no per-call
+    knobs.  ``weight_dtype`` selects compressed weight storage (bf16
+    stream, f32 accumulation — see :func:`bake_weights`).
     """
     if weight == "length" and lengths is None:
         lengths = state.edge_len  # streamed per-edge lengths, if any
@@ -349,15 +421,18 @@ def build_layout(
     w = bake_weights(
         s, weight, se.valid, se.src, inv_deg=inv_out_degree(state),
         # slot-order lengths follow the sort through se.order
-        lengths=None if lengths is None else lengths[se.order])
+        lengths=None if lengths is None else lengths[se.order],
+        weight_dtype=weight_dtype)
     src, dst, w, valid = _pad_stream(
         se.src, se.dst, w, se.valid,
         sentinel=state.node_capacity, chunk=chunk, zero=s.zero)
     order = jnp.pad(se.order, (0, src.shape[0] - se.order.shape[0]),
                     constant_values=state.edge_capacity)
-    return EdgeLayout(src, dst, w, valid, se.row_offsets, order,
+    rank = (stream_rank(dst, valid, se.row_offsets)
+            if s.add != "sum" else None)
+    return EdgeLayout(src, dst, w, valid, se.row_offsets, order, rank,
                       weight_mode=weight, reverse=reverse, pad_chunk=chunk,
-                      semiring=s.name)
+                      semiring=s.name, tile_n=tile_n, tile_chunk=chunk)
 
 
 def summary_layout(summary, *, chunk: int = CHUNK,
@@ -387,17 +462,29 @@ def summary_layout(summary, *, chunk: int = CHUNK,
             f"summary_layout(semiring={s.name!r}) over a summary baked for "
             f"{baked!r}; rebuild the summary for this semiring")
     k_cap = summary.hot_ids.shape[0]
+    # summaries built through a tuned layout inherit its kernel geometry
+    # (stamped as SummaryBuffers meta); older/bare summaries fall back to
+    # the kernel defaults
+    tile_n = getattr(summary, "tile_n", None)
+    tile_chunk = getattr(summary, "tile_chunk", None)
+    if tile_chunk is not None:
+        chunk = tile_chunk
     if summary.ek_src.ndim == 2:  # stacked per-shard E_K form
         h_s = summary.ek_src.shape[1]
         extra = padded_length(h_s, chunk) - h_s
         pad2 = lambda x, cval: jnp.pad(x, ((0, 0), (0, extra)),
                                        constant_values=cval)
         valid = summary.ek_dst < k_cap
+        dst = pad2(summary.ek_dst, k_cap)
+        valid = pad2(valid, False)
+        rank = (jax.vmap(stream_rank)(dst, valid, summary.ek_row_offsets)
+                if s.add != "sum" else None)
         return ShardedEdgeLayout(
-            pad2(summary.ek_src, 0), pad2(summary.ek_dst, k_cap),
-            pad2(summary.ek_w, s.zero), pad2(valid, False),
-            summary.ek_row_offsets, None,
+            pad2(summary.ek_src, 0), dst,
+            pad2(summary.ek_w, s.zero), valid,
+            summary.ek_row_offsets, None, rank,
             weight_mode="summary", pad_chunk=chunk, semiring=s.name,
+            tile_n=tile_n, tile_chunk=chunk,
             mesh=summary.mesh, axes=summary.axes)
     h_cap = summary.ek_src.shape[0]
     valid = jnp.arange(h_cap, dtype=jnp.int32) < jnp.minimum(
@@ -405,9 +492,11 @@ def summary_layout(summary, *, chunk: int = CHUNK,
     src, dst, w, valid = _pad_stream(
         summary.ek_src, summary.ek_dst, summary.ek_w, valid,
         sentinel=k_cap, chunk=chunk, zero=s.zero)
-    return EdgeLayout(src, dst, w, valid, summary.ek_row_offsets, None,
+    rank = (stream_rank(dst, valid, summary.ek_row_offsets)
+            if s.add != "sum" else None)
+    return EdgeLayout(src, dst, w, valid, summary.ek_row_offsets, None, rank,
                       weight_mode="summary", pad_chunk=chunk,
-                      semiring=s.name)
+                      semiring=s.name, tile_n=tile_n, tile_chunk=chunk)
 
 
 def require_layout(layout: Optional[AnyEdgeLayout], *, weight: str,
@@ -451,8 +540,8 @@ def push(
     semiring: Union[str, Semiring] = "plus_times",
     backend: Optional[str] = None,
     mask: Optional[jax.Array] = None,
-    tile_n: int = TILE_N,
-    chunk: int = CHUNK,
+    tile_n: Optional[int] = None,
+    chunk: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """The shared propagation primitive:
@@ -489,6 +578,10 @@ def push(
     reductions are reassociation-exact, so every batch row is bitwise
     equal to its single-query push.  ``mask`` stays per-edge (shared
     across the batch).
+
+    **Kernel geometry**: ``tile_n``/``chunk`` default to the layout's
+    stamped (autotuned) geometry, falling back to the kernel defaults —
+    explicit argument > layout meta > ``TILE_N``/``CHUNK``.
     """
     s = resolve_semiring(semiring)
     if isinstance(layout, ShardedEdgeLayout):
@@ -499,6 +592,10 @@ def push(
             f"push(semiring={s.name!r}) over a layout built for "
             f"{layout.semiring!r}; rebuild the layout for this semiring")
     backend = resolve_backend(backend)
+    tile_n = tile_n if tile_n is not None else (
+        layout.tile_n if layout.tile_n is not None else TILE_N)
+    chunk = chunk if chunk is not None else (
+        layout.tile_chunk if layout.tile_chunk is not None else CHUNK)
     num_segments = layout.num_segments
     batched = values.ndim == 2
     if values.ndim > 2:
@@ -553,23 +650,33 @@ def push(
         zero = jnp.asarray(s.zero, dtype)
         contrib = s.combine(values.astype(dtype)[..., layout.src],
                             layout.weight)
+        if contrib.dtype != dtype:
+            # compressed (bf16) weights promote the ⊗ up to f32 already;
+            # this cast only normalizes layouts whose weights were stored
+            # *below* the semiring dtype but whose ⊗ did not promote
+            contrib = contrib.astype(dtype)
         keep = layout.valid if mask is None else (layout.valid & mask)
         contrib = jnp.where(keep, contrib, zero)
+        rank = layout.rank
+        if rank is None:
+            rank = stream_rank(layout.dst, layout.valid, layout.row_offsets)
         reduce_fn = spmv_reduce_push_batched if batched else spmv_reduce_push
         out = reduce_fn(
-            contrib, layout.dst, tile_start, num_tiles=num_tiles,
+            contrib, layout.dst, rank, tile_start, num_tiles=num_tiles,
             op=s.add, tile_n=tile_n, chunk=chunk, interpret=interpret)
     return out[..., :num_segments]
 
 
 def _shard_view(layout: ShardedEdgeLayout, i, src, dst, w, valid,
-                ro) -> EdgeLayout:
+                ro, rank) -> EdgeLayout:
     """Shard ``i`` of the stacked arrays as a plain :class:`EdgeLayout`
     (same static metadata), ready for the single-shard :func:`push`."""
     return EdgeLayout(
         src[i], dst[i], w[i], valid[i], ro[i], None,
+        None if rank is None else rank[i],
         weight_mode=layout.weight_mode, reverse=layout.reverse,
-        pad_chunk=layout.pad_chunk, semiring=layout.semiring)
+        pad_chunk=layout.pad_chunk, semiring=layout.semiring,
+        tile_n=layout.tile_n, tile_chunk=layout.tile_chunk)
 
 
 def _push_sharded(
@@ -579,8 +686,8 @@ def _push_sharded(
     s: Semiring,
     backend: Optional[str],
     mask: Optional[jax.Array],
-    tile_n: int,
-    chunk: int,
+    tile_n: Optional[int],
+    chunk: Optional[int],
     interpret: Optional[bool],
 ) -> jax.Array:
     """Sharded form of :func:`push`: per-shard partial push + ⊕ all-reduce.
@@ -605,11 +712,12 @@ def _push_sharded(
             f"sharded push mask must cover the sharded sorted stream "
             f"{layout.dst.shape}; got {mask.shape}")
 
-    def local_push(values, src, dst, w, valid, ro, m, lo, hi):
+    def local_push(values, src, dst, w, valid, ro, rank, m, lo, hi):
         """⊕-merge of shards [lo, hi) resident on this device."""
         part = None
         for i in range(lo, hi):
-            one = push(values, _shard_view(layout, i, src, dst, w, valid, ro),
+            one = push(values,
+                       _shard_view(layout, i, src, dst, w, valid, ro, rank),
                        semiring=s, backend=backend,
                        mask=None if m is None else m[i],
                        tile_n=tile_n, chunk=chunk, interpret=interpret)
@@ -618,8 +726,8 @@ def _push_sharded(
 
     if layout.mesh is None:
         return local_push(values, layout.src, layout.dst, layout.weight,
-                          layout.valid, layout.row_offsets, mask,
-                          0, num_shards)
+                          layout.valid, layout.row_offsets, layout.rank,
+                          mask, 0, num_shards)
 
     mesh, axes = layout.mesh, layout.axes
     n_dev = 1
@@ -631,14 +739,22 @@ def _push_sharded(
             f"(mesh axes {axes}); shards must divide evenly")
     per_dev = num_shards // n_dev
 
+    has_rank = layout.rank is not None
+
     def mapped(values, src, dst, w, valid, ro, *rest):
-        m = rest[0] if rest else None
-        part = local_push(values, src, dst, w, valid, ro, m, 0, per_dev)
+        rest = list(rest)
+        rank = rest.pop(0) if has_rank else None
+        m = rest.pop(0) if rest else None
+        part = local_push(values, src, dst, w, valid, ro, rank, m,
+                          0, per_dev)
         return s.all_reduce(part, axes)
 
     args = [values, layout.src, layout.dst, layout.weight, layout.valid,
             layout.row_offsets]
     in_specs = [P()] + [P(axes)] * 5
+    if has_rank:
+        args.append(layout.rank)
+        in_specs.append(P(axes))
     if mask is not None:
         args.append(mask)
         in_specs.append(P(axes))
@@ -722,7 +838,9 @@ __all__ = [
     "default_interpret",
     "normalize_layout_spec",
     "reset_trace_counts",
+    "stream_rank",
     "trace_count",
+    "validate_weight_dtype",
     "validate_weight_spec",
     "push",
     "push_coo",

@@ -80,6 +80,20 @@ class EngineConfig:
     # or "auto" (per device, overridable via $VEILGRAPH_BACKEND) — see
     # repro.core.backend
     backend: str = "auto"
+    # per-shape kernel-geometry autotuning for the pallas push: "off" keeps
+    # the TILE_N/CHUNK defaults; "cached" picks the analytic cost-model
+    # argmin (or a cached/JSON-loaded tuning — deterministic, CI-safe);
+    # "full" additionally times the top model-ranked candidates on synthetic
+    # streams and caches the winner.  Tunings are keyed per shape and reused
+    # across layout rebuilds; engine.autotune_runs counts timed searches.
+    # See repro.kernels.spmv.autotune.
+    autotune: str = "off"
+    # storage dtype for baked edge weights ("bfloat16"/"float16"): halves
+    # the weight column of the edge-stream HBM traffic.  Accumulation stays
+    # f32 (jnp type promotion inside the semiring combine).  Only applied to
+    # float32 semirings — integer-algebra layouts (e.g. min_min labels)
+    # keep their native dtype.  None = no compression.
+    weight_dtype: Optional[str] = None
     # device mesh for sharded execution: edge layouts are cut into one
     # locally-sorted shard per device over `mesh_axes` (default: every mesh
     # axis) and every O(E) sweep runs as a shard_map partial push + semiring
@@ -212,6 +226,10 @@ class VeilGraphEngine:
         # reused across queries and by every sweep in between
         self._edge_layouts: Optional[Tuple[B.EdgeLayout, ...]] = None
         self.layout_builds = 0  # observability: how many sorts actually ran
+        # batch width hint for autotune keys: 1 for single-query engines;
+        # the serving engine sets this to its slot count so batched sweeps
+        # tune for the [B, chunk] @ [chunk, tile_n] shape they actually run
+        self.autotune_batch_hint = 1
         # shard-rebalancing state (mesh engines): the current slot→shard
         # assignment (None = the contiguous cut), how many recuts have
         # happened, and the last measured imbalance
@@ -375,16 +393,25 @@ class VeilGraphEngine:
                 from repro.graph.partition import (build_sharded_layout,
                                                    place_sharded_layout)
 
-                build = lambda w, rev, s: place_sharded_layout(
-                    build_sharded_layout(
-                        self.state, mesh=self.config.mesh,
-                        axes=self.config.mesh_axes,
-                        num_shards=self.config.num_shards,
-                        weight=w, reverse=rev,
-                        semiring=s, slots=self._shard_slots))
+                def build(w, rev, s):
+                    tile_n, chunk = self._tuned_geometry(s)
+                    return place_sharded_layout(
+                        build_sharded_layout(
+                            self.state, mesh=self.config.mesh,
+                            axes=self.config.mesh_axes,
+                            num_shards=self.config.num_shards,
+                            weight=w, reverse=rev,
+                            semiring=s, slots=self._shard_slots,
+                            chunk=chunk, tile_n=tile_n,
+                            weight_dtype=self._weight_dtype_for(s)))
             else:
-                build = lambda w, rev, s: B.build_layout(
-                    self.state, weight=w, reverse=rev, semiring=s)
+                def build(w, rev, s):
+                    tile_n, chunk = self._tuned_geometry(s)
+                    return B.build_layout(
+                        self.state, weight=w, reverse=rev, semiring=s,
+                        chunk=B.CHUNK if chunk is None else chunk,
+                        tile_n=tile_n,
+                        weight_dtype=self._weight_dtype_for(s))
             self._edge_layouts = tuple(
                 build(w, rev, s)
                 for (w, rev, s) in map(B.normalize_layout_spec,
@@ -392,6 +419,54 @@ class VeilGraphEngine:
             )
             self.layout_builds += 1
         return self._edge_layouts
+
+    def _tuned_geometry(self, semiring) -> Tuple[Optional[int], Optional[int]]:
+        """Autotuned ``(tile_n, chunk)`` for one layout spec, resolved at
+        layout-build time so every consuming sweep (exact, summarized,
+        batched) inherits it through the layout meta; ``(None, None)`` when
+        autotuning is off (push then uses the hardcoded defaults)."""
+        cfg = self.config
+        if cfg.autotune == "off":
+            return None, None
+        from repro.core.semiring import resolve_semiring
+        from repro.kernels.spmv import autotune as AT
+
+        s = resolve_semiring(semiring)
+        e_cap = cfg.edge_capacity
+        if cfg.mesh is not None:
+            from repro.graph.partition import mesh_shard_count
+
+            num_shards = (cfg.num_shards if cfg.num_shards is not None
+                          else mesh_shard_count(cfg.mesh, cfg.mesh_axes))
+            e_cap = -(-e_cap // num_shards)  # per-shard stream length
+        return AT.tune_for_push(
+            edge_capacity=e_cap,
+            num_segments=cfg.node_capacity,
+            batch=self.autotune_batch_hint,
+            dtype=s.dtype,
+            reduce=s.add,
+            mode=cfg.autotune)
+
+    def _weight_dtype_for(self, semiring) -> Optional[str]:
+        """Engine-level weight compression applies only to f32 semirings;
+        integer algebras (min_min labels) keep their native dtype rather
+        than erroring out of a mixed-algebra algorithm."""
+        wd = self.config.weight_dtype
+        if wd is None:
+            return None
+        from repro.core.semiring import resolve_semiring
+
+        if jnp.dtype(resolve_semiring(semiring).dtype) != jnp.float32:
+            return None
+        return wd
+
+    @property
+    def autotune_runs(self) -> int:
+        """Measured (timed) autotune searches so far — cache hits and
+        analytic-only resolutions excluded."""
+        from repro.kernels.spmv import autotune as AT
+
+        return AT.run_count()
 
     def _invalidate_layouts(self):
         self._edge_layouts = None

@@ -185,7 +185,8 @@ def compact_indices(mask: jax.Array, size: int, *, rows: int = 64) -> jax.Array:
     jax.tree_util.register_dataclass,
     data_fields=("hot_ids", "num_hot", "ek_src", "ek_dst", "ek_w",
                  "ek_row_offsets", "num_ek", "b_in", "num_eb", "overflow"),
-    meta_fields=("weight_mode", "semiring", "mesh", "axes"),
+    meta_fields=("weight_mode", "semiring", "tile_n", "tile_chunk",
+                 "mesh", "axes"),
 )
 @dataclasses.dataclass(frozen=True)
 class SummaryBuffers:
@@ -237,6 +238,11 @@ class SummaryBuffers:
     overflow: jax.Array  # bool
     weight_mode: str = "inv_out"
     semiring: str = "plus_times"
+    # tuned kernel geometry inherited from the full-graph layout the summary
+    # was built against; summary_layout() stamps it onto the E_K layout so
+    # summarized sweeps pick the autotuned tile/chunk without user knobs
+    tile_n: Optional[int] = None
+    tile_chunk: Optional[int] = None
     mesh: Optional["jax.sharding.Mesh"] = None
     axes: Tuple[str, ...] = ()
 
@@ -351,7 +357,10 @@ def _build_summary_sharded(
     # single bake both paths share), so E_K weights are a masked copy
     lsrc = jnp.where(ek_mask, local_of[layout.src], 0)
     ldst = jnp.where(ek_mask, local_of[dst_c], k_cap)  # sentinel sorts last
-    ek_w = jnp.where(ek_mask, layout.weight, s_zero)
+    # keep the layout's (possibly bf16-compressed) storage dtype: a f32
+    # s_zero would silently promote ek_w back to f32
+    s_zero_w = s_zero.astype(layout.weight.dtype)
+    ek_w = jnp.where(ek_mask, layout.weight, s_zero_w)
     perm = jnp.argsort(ldst, axis=1, stable=True)
     take = lambda x: jnp.take_along_axis(x, perm, axis=1)
     lsrc, ldst, ek_w = take(lsrc), take(ldst), take(ek_w)
@@ -403,7 +412,7 @@ def _build_summary_sharded(
 
     ek_src2 = exchange(lsrc, 0)
     ek_dst2 = exchange(ldst, k_cap)
-    ek_w2 = exchange(ek_w, s_zero)
+    ek_w2 = exchange(ek_w, s_zero_w)
 
     # ---- stage 4: shard-local merge sort + row offsets -------------------
     perm2 = jnp.argsort(ek_dst2, axis=1, stable=True)
@@ -436,6 +445,8 @@ def _build_summary_sharded(
         overflow=(num_hot > k_cap) | (num_ek > h_cap) | block_overflow,
         weight_mode=weight,
         semiring=s.name,
+        tile_n=layout.tile_n,
+        tile_chunk=layout.tile_chunk,
         mesh=layout.mesh,
         axes=layout.axes,
     )
@@ -628,6 +639,8 @@ def build_summary(
         overflow=overflow,
         weight_mode=weight,
         semiring=s.name,
+        tile_n=None if layout is None else layout.tile_n,
+        tile_chunk=None if layout is None else layout.tile_chunk,
     )
 
 

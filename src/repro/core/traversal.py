@@ -1,4 +1,5 @@
-"""Traversal workloads on min-semirings: SSSP and connected components.
+"""Traversal workloads on min/max semirings: SSSP, connected components,
+and widest (most-reliable) paths.
 
 These are the ROADMAP's long-open "needs a non-float state story" workloads,
 unlocked by the semiring-generic propagation API: both are the same power
@@ -15,6 +16,13 @@ sweep as PageRank, just over a different algebra —
   connectivity on the directed stream needs the symmetric closure, so the
   sweep pushes over a forward and a reverse unit layout per iteration
   (labels pass through ⊗ unchanged — ``min_min``'s ⊗-identity is +∞).
+- **Widest path** (most-reliable path) is the same relaxation on the
+  ``max_times`` semiring: ``width(v) = max(width(v), max_{(u,v)} width(u)
+  · len(u,v))`` with sources pinned to 1.  Edge lengths act as
+  multiplicative reliabilities/capacities and must be **non-negative**;
+  unreached vertices hold 0 (not −∞ — a finite state vector keeps
+  0-length edges from manufacturing ``−∞·0`` NaNs).  This is the sweep
+  that exercises the masked-reduce *max* kernel path end to end.
 
 Both sweeps iterate until a fixed point (no vertex changed) or the
 iteration budget, and both have VeilGraph-summarized versions that restrict
@@ -227,6 +235,133 @@ def summarized_sssp_batched(
     if row_mask is not None:
         dist = jnp.where(row_mask[:, None], dist, dist_prev)
     return dist, i, changed
+
+
+# --------------------------------------------------------------------------
+# Widest path — max-reliability relaxation on the max_times semiring
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "backend"))
+def widest_path(
+    state: GraphState,
+    source_mask: jax.Array,
+    width0: Optional[jax.Array] = None,
+    *,
+    num_iters: int = 30,
+    layout: Optional[B.EdgeLayout] = None,
+    backend: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Bounded widest-path relaxation from the vertices in ``source_mask``.
+
+    ``max_times`` Bellman-Ford: sources are pinned to width 1 and each
+    iteration takes ``width(v) = max(width(v), max_{(u,v)} width(u) ·
+    len(u,v))`` — with edge lengths in (0, 1] this is the most-reliable
+    path; with capacities > 1 a multiplicative throughput.  Lengths must be
+    non-negative (they come from the ``weight="length"`` layout; unit
+    lengths make every reachable vertex width 1).  Returns
+    ``(width f32[N_cap], iterations_run)`` — 0 marks unreachable vertices.
+
+    ``width0`` warm-starts (exact under edge additions — widths are
+    monotone non-decreasing); sources re-pin to 1 regardless.
+    """
+    backend_r = B.resolve_backend(backend)
+    B.require_layout(layout, weight="length", reverse=False,
+                     who="widest_path", semiring="max_times")
+    if width0 is None:
+        w0 = jnp.where(source_mask, 1.0, 0.0).astype(jnp.float32)
+    else:
+        w0 = jnp.where(source_mask, 1.0, width0.astype(jnp.float32))
+
+    if layout is None:
+        layout = B.build_layout(state, weight="length", semiring="max_times")
+
+    def relax(w):
+        incoming = B.push(w, layout, semiring="max_times", backend=backend_r)
+        return jnp.where(source_mask, 1.0, jnp.maximum(w, incoming))
+
+    return _fixed_point(relax, w0, num_iters)
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "backend"))
+def summarized_widest_path(
+    summary: SummaryBuffers,
+    width_prev: jax.Array,
+    source_mask: jax.Array,
+    *,
+    num_iters: int = 30,
+    backend: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Widest-path relaxation restricted to the hot set K.
+
+    ``summary`` is a ``weight="length"``/``max_times`` big-vertex summary:
+    ``b_in[z] = max_{(w,z) ∈ E_B} width_prev(w) · len(w,z)`` freezes the
+    cold boundary (−∞ where z has no cold in-neighbors — harmless under
+    max).  Hot widths relax against E_K and ``b_in``; cold widths carry
+    over unchanged.  Returns the *global* width vector and the iterations
+    run.
+    """
+    backend_r = B.resolve_backend(backend)
+    k_cap = summary.hot_ids.shape[0]
+    local_valid = jnp.arange(k_cap, dtype=jnp.int32) < summary.num_hot
+    src_local = jnp.where(local_valid, source_mask[summary.hot_ids], False)
+    w0 = jnp.where(local_valid, width_prev[summary.hot_ids], 0.0)
+    w0 = jnp.where(src_local, 1.0, w0)
+    layout = B.summary_layout(summary, semiring="max_times")
+
+    def relax(w):
+        relaxed = jnp.maximum(
+            w, jnp.maximum(
+                B.push(w, layout, semiring="max_times", backend=backend_r),
+                summary.b_in))
+        return jnp.where(local_valid, jnp.where(src_local, 1.0, relaxed), 0.0)
+
+    w_loc, i = _fixed_point(relax, w0, num_iters)
+    width = width_prev.at[summary.hot_ids].set(w_loc, mode="drop")
+    return width, i
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "backend"))
+def summarized_widest_path_batched(
+    summary: SummaryBuffers,
+    width_prev: jax.Array,
+    source_mask: jax.Array,
+    *,
+    num_iters: int = 30,
+    row_mask: Optional[jax.Array] = None,
+    backend: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched :func:`summarized_widest_path`: B source sets, one summary.
+
+    ``width_prev``/``source_mask`` are ``[B, N]``; each relaxation is ONE
+    batched ``max_times`` push — max is reassociation-exact, so every row
+    is bitwise equal to its single-query sweep over the same summary (the
+    ``summarized_batched`` leg of the tuned masked-reduce max path).
+    ``row_mask`` (bool[B]) freezes finished/vacant slots.  Returns
+    ``(width [B, N], iterations, changed_rows i32[B])``.
+    """
+    backend_r = B.resolve_backend(backend)
+    k_cap = summary.hot_ids.shape[0]
+    local_valid = jnp.arange(k_cap, dtype=jnp.int32) < summary.num_hot
+    src_local = jnp.where(local_valid, source_mask[:, summary.hot_ids],
+                          False)
+    w0 = jnp.where(local_valid, width_prev[:, summary.hot_ids], 0.0)
+    w0 = jnp.where(src_local, 1.0, w0)
+    layout = B.summary_layout(summary, semiring="max_times")
+
+    def relax(w):
+        relaxed = jnp.maximum(
+            w, jnp.maximum(
+                B.push(w, layout, semiring="max_times", backend=backend_r),
+                summary.b_in))
+        return jnp.where(local_valid, jnp.where(src_local, 1.0, relaxed),
+                         0.0)
+
+    w_loc, i, changed = _fixed_point_batched(relax, w0, num_iters, row_mask)
+    width = width_prev.at[:, summary.hot_ids].set(w_loc, mode="drop")
+    if row_mask is not None:
+        width = jnp.where(row_mask[:, None], width, width_prev)
+    return width, i, changed
 
 
 # --------------------------------------------------------------------------

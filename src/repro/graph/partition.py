@@ -89,7 +89,8 @@ def shard_slots(edge_capacity: int, num_shards: int) -> np.ndarray:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("num_shards", "weight", "reverse", "chunk", "semiring"))
+    static_argnames=("num_shards", "weight", "reverse", "chunk", "semiring",
+                     "tile_n", "weight_dtype"))
 def _build_shards(
     state: GraphState,
     *,
@@ -100,6 +101,8 @@ def _build_shards(
     semiring: str,
     lengths: Optional[jax.Array] = None,
     slots: Optional[jax.Array] = None,
+    tile_n: Optional[int] = None,
+    weight_dtype: Optional[str] = None,
 ) -> B.ShardedEdgeLayout:
     """The jitted core of :func:`build_sharded_layout` (no mesh metadata —
     the partition and the S local sorts are pure array work).
@@ -122,7 +125,8 @@ def _build_shards(
                                                            state.dst)
     # same ⊗-operand definition as build_layout, here in slot order
     w = B.bake_weights(s, weight, mask, e_src,
-                       inv_deg=inv_out_degree(state), lengths=lengths)
+                       inv_deg=inv_out_degree(state), lengths=lengths,
+                       weight_dtype=weight_dtype)
 
     e_s = -(-e_cap // num_shards)
     if slots is None:
@@ -166,11 +170,15 @@ def _build_shards(
     extra = B.padded_length(e_s, chunk) - e_s
     pad2 = lambda x, cval: jnp.pad(x, ((0, 0), (0, extra)),
                                    constant_values=cval)
+    dst_p = pad2(dst2, n_cap)
+    valid_p = pad2(valid2, False)
+    rank = (jax.vmap(B.stream_rank)(dst_p, valid_p, row_offsets)
+            if s.add != "sum" else None)
     return B.ShardedEdgeLayout(
-        pad2(src2, 0), pad2(dst2, n_cap), pad2(w2, s.zero),
-        pad2(valid2, False), row_offsets, pad2(order2, e_cap),
+        pad2(src2, 0), dst_p, pad2(w2, s.zero),
+        valid_p, row_offsets, pad2(order2, e_cap), rank,
         weight_mode=weight, reverse=reverse, pad_chunk=chunk,
-        semiring=s.name)
+        semiring=s.name, tile_n=tile_n, tile_chunk=chunk)
 
 
 def build_sharded_layout(
@@ -185,6 +193,8 @@ def build_sharded_layout(
     semiring: str = "plus_times",
     lengths: Optional[jax.Array] = None,
     slots: Optional[jax.Array] = None,
+    tile_n: Optional[int] = None,
+    weight_dtype: Optional[str] = None,
 ) -> B.ShardedEdgeLayout:
     """Edge-partitioned, per-shard destination-sorted propagation layout.
 
@@ -253,7 +263,8 @@ def build_sharded_layout(
     layout = _build_shards(
         state, num_shards=num_shards, weight=weight, reverse=reverse,
         chunk=B.CHUNK if chunk is None else chunk, semiring=semiring,
-        lengths=lengths, slots=slots)
+        lengths=lengths, slots=slots, tile_n=tile_n,
+        weight_dtype=weight_dtype)
     if mesh is not None:
         layout = dataclasses.replace(layout, mesh=mesh, axes=axes)
     return layout
@@ -375,7 +386,8 @@ def place_sharded_layout(layout: B.ShardedEdgeLayout) -> B.ShardedEdgeLayout:
     return dataclasses.replace(
         layout, src=put(layout.src), dst=put(layout.dst),
         weight=put(layout.weight), valid=put(layout.valid),
-        row_offsets=put(layout.row_offsets), order=put(layout.order))
+        row_offsets=put(layout.row_offsets), order=put(layout.order),
+        rank=put(layout.rank))
 
 
 __all__ = [

@@ -26,21 +26,44 @@ semiring the sweep runs over (:mod:`repro.core.semiring`):
 
 - :func:`spmv_push` — the ``sum``-reduce (``plus_times``) fast path: the
   scatter-add becomes a one-hot matmul on the MXU (f32 only);
-- :func:`spmv_reduce_push` — the tiled *masked-reduce* variant for
-  non-additive reductions (``min``/``max`` over f32 or i32): the same
-  one-hot destination mask selects contributions into a
-  (chunk × tile_n) tile initialized to the reduce identity, and a VPU
-  min/max along the chunk axis replaces the matmul.  This is what makes
-  SSSP's min-plus relaxation and connected components' label-min run as
-  destination-tiled kernels rather than serial scatters.
+- :func:`spmv_reduce_push` — the *segmented-scan* variant for non-additive
+  reductions (``min``/``max`` over f32 or i32).  Within each chunk the
+  per-destination reduce runs as a Hillis-Steele segmented scan whose
+  same-run test is a single compare against the layout's precomputed
+  ``rank`` stream (``rank[i]`` = position of edge *i* inside its
+  destination run, so "my predecessor at distance ``off`` is in my run"
+  is just ``rank >= off`` — no second scan over run-open flags).  Each
+  run's reduced value is then scattered through the same one-hot matmul
+  as the sum path, encoded so the MXU product stays *bitwise exact*:
+
+  - floats ride as ``[finite value (0 if ±∞), ±∞ sign flag, count]`` rows
+    — at most one selected run end per destination column, so each column
+    sums exactly one product and ``0·∞`` never reaches the MXU;
+  - int32 rides as ``[high 16 bits, low 16 bits, count]`` rows — both
+    halves are < 2¹⁶ and therefore exact in f32, and the column
+    reconstruction ``(hi << 16) | lo`` recovers every int32 bit pattern.
+
+  A zero count column reconstructs the reduce identity, matching XLA's
+  ``segment_min``/``segment_max`` empty-segment convention.  This replaces
+  the earlier (chunk × tile_n) masked-tile reduce, whose full-tile
+  materialization made min/max pushes ~5.6× slower than the segment-sum
+  backend in interpret mode.  Runs spanning a chunk boundary reduce to one
+  partial per chunk; the accumulator's ⊕ recombines them, and min/max are
+  reassociation-exact so the split changes nothing bitwise.
+
+Edge-stream loads are **double-buffered** on TPU (``double_buffer=True``):
+chunk *i+1* is DMA-prefetched into a VMEM slot while the MXU/VPU consumes
+chunk *i* — the flash-decoding overlap pattern.  Interpret mode defaults to
+plain ``pl.load`` (the DMA emulation only adds overhead there); parity
+tests opt in explicitly.
 
 ``tile_n``/``chunk`` are parameters (module constants are only the
-defaults): the summarized sweep runs in the compacted ``k_cap`` space whose
-natural tile size differs from the full-graph sweep's.  VMEM budget per
-step: contrib chunk (chunk f32) + dst chunk (chunk i32) + one-hot
-(chunk × tile_n f32) + acc (tile_n f32) ≈ 0.53 MB for chunk=512,
-tile_n=256 — far under the ~16 MB VMEM budget; tile_n should stay 128-lane
-aligned.
+defaults): the per-shape autotuner (:mod:`repro.kernels.spmv.autotune`)
+picks them per (E_pad, N, B, dtype, reduce, platform) and the layout cache
+carries the tuned geometry.  VMEM budget per step: 2 buffered chunks per
+stream + the (chunk × tile_n) one-hot + accumulators — see
+:func:`repro.kernels.spmv.autotune.modeled_push_cost` for the analytic
+model the tuner prunes with.
 
 Batched (multi-query) variants
 ------------------------------
@@ -50,26 +73,98 @@ through ONE shared edge stream (the serving engine's wave step).  The sum
 variant's one-hot product becomes a true ``[B, chunk] @ [chunk, tile_n]``
 MXU matmul, so the scatter's fixed cost (edge loads, one-hot build) is
 amortized over all B queries — the cheapest throughput multiplier in the
-backend.  The reduce variant shrinks its chunk if needed so the
-``[B, chunk, tile_n]`` masked tile stays inside the VMEM budget; min/max
-are reassociation-exact, so each batch row stays bitwise equal to the
-single-query kernel.
+backend.  The reduce variant stacks its encoded rows into one
+``[2B+1, chunk] @ [chunk, tile_n]`` product and shrinks its chunk
+128-granularly (largest fit, not halving) so the scan buffers stay inside
+the VMEM budget; min/max are reassociation-exact, so each batch row stays
+bitwise equal to the single-query kernel.
 """
 
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 CHUNK = 512
 TILE_N = 256
 
 
-def _make_spmv_kernel(tile_n: int, chunk: int):
-    """Kernel body closure over the (static) tile/chunk geometry."""
+def _shift_right(v: jax.Array, off: int, fill) -> jax.Array:
+    """``v`` shifted ``off`` positions toward higher indices along the last
+    axis, vacated slots holding ``fill`` (static shapes only)."""
+    pad = jnp.full(v.shape[:-1] + (off,), fill, v.dtype)
+    return jnp.concatenate([pad, v[..., :-off]], axis=-1)
+
+
+def _stream_chunks(start, n_chunks, chunk, streams, acc0, compute,
+                   double_buffer):
+    """Run ``compute(i, loaded, acc)`` over chunks of the edge range.
+
+    ``streams`` is a list of ``(ref, batch, dtype)`` — ``batch=None`` for a
+    1-D ``[E_pad]`` stream, an int for a ``[batch, E_pad]`` one; chunk *i*
+    loads elements ``[start + i*chunk, start + (i+1)*chunk)`` of each.
+    With ``double_buffer`` the loads become async VMEM DMA copies issued
+    one chunk ahead (slot *i+1* fills while slot *i* is consumed);
+    otherwise plain ``pl.load`` per chunk.  Returns the final accumulator.
+    """
+    if not double_buffer:
+        def body(i, acc):
+            lo = start + i * chunk
+            loaded = [
+                pl.load(ref, (pl.ds(lo, chunk),)) if b is None
+                else pl.load(ref, (slice(None), pl.ds(lo, chunk)))
+                for ref, b, _ in streams]
+            return compute(i, loaded, acc)
+        return jax.lax.fori_loop(0, n_chunks, body, acc0)
+
+    def scoped(*alloc):
+        bufs = alloc[:len(streams)]
+        sems = alloc[len(streams):]
+
+        def dma(i, slot):
+            lo = start + i * chunk
+            copies = []
+            for (ref, b, _), buf, sem in zip(streams, bufs, sems):
+                src = (ref.at[pl.ds(lo, chunk)] if b is None
+                       else ref.at[:, pl.ds(lo, chunk)])
+                copies.append(pltpu.make_async_copy(src, buf.at[slot],
+                                                    sem.at[slot]))
+            return copies
+
+        @pl.when(n_chunks > 0)
+        def _():
+            for cp in dma(0, 0):
+                cp.start()
+
+        def body(i, acc):
+            slot = jax.lax.rem(i, 2)
+
+            @pl.when(i + 1 < n_chunks)
+            def _():
+                for cp in dma(i + 1, jax.lax.rem(i + 1, 2)):
+                    cp.start()
+
+            for cp in dma(i, slot):
+                cp.wait()
+            loaded = [buf[slot] for buf in bufs]
+            return compute(i, loaded, acc)
+
+        return jax.lax.fori_loop(0, n_chunks, body, acc0)
+
+    scratch = [
+        pltpu.VMEM((2, chunk) if b is None else (2, b, chunk), dtype)
+        for _, b, dtype in streams]
+    sems = [pltpu.SemaphoreType.DMA((2,)) for _ in streams]
+    return pl.run_scoped(scoped, *scratch, *sems)
+
+
+def _make_spmv_kernel(tile_n: int, chunk: int, double_buffer: bool):
+    """Sum-kernel body closure over the (static) tile/chunk geometry."""
 
     def _spmv_kernel(tile_start_ref, contrib_ref, dst_ref, out_ref):
         """One output tile: accumulate its sorted-edge range via one-hot
@@ -78,18 +173,12 @@ def _make_spmv_kernel(tile_n: int, chunk: int):
         start = tile_start_ref[t]
         end = tile_start_ref[t + 1]
         base = t * tile_n
+        pos = jnp.arange(chunk, dtype=jnp.int32)
 
-        n_chunks = pl.cdiv(end - start, chunk)
-
-        def body(i, acc):
+        def compute(i, loaded, acc):
+            c, d = loaded
             lo = start + i * chunk
-            idx = lo + jnp.arange(chunk, dtype=jnp.int32)
-            valid = idx < end
-            # dynamic-start loads from the edge stream (HBM -> VMEM); the
-            # layout builder pads the stream by >= one chunk so these loads
-            # never run past the buffer even when end is near capacity
-            c = pl.load(contrib_ref, (pl.ds(lo, chunk),))
-            d = pl.load(dst_ref, (pl.ds(lo, chunk),))
+            valid = lo + pos < end
             d_local = jnp.where(valid, d - base, tile_n)      # OOB -> zero row
             onehot = (d_local[:, None] ==
                       jnp.arange(tile_n, dtype=jnp.int32)[None, :])
@@ -97,55 +186,121 @@ def _make_spmv_kernel(tile_n: int, chunk: int):
             # MXU: scatter-add as a (1, chunk) @ (chunk, tile_n) product
             return acc + jnp.dot(c[None, :], onehot.astype(jnp.float32))[0]
 
-        acc0 = jnp.zeros((tile_n,), jnp.float32)
-        acc = jax.lax.fori_loop(0, n_chunks, body, acc0)
+        acc = _stream_chunks(
+            start, pl.cdiv(end - start, chunk), chunk,
+            [(contrib_ref, None, jnp.float32), (dst_ref, None, jnp.int32)],
+            jnp.zeros((tile_n,), jnp.float32), compute, double_buffer)
         out_ref[...] = acc
 
     return _spmv_kernel
 
 
-def _make_reduce_kernel(tile_n: int, chunk: int, op: str, identity):
-    """Masked-reduce kernel body: ⊕ ∈ {min, max} instead of the matmul.
+def _run_reduce(c, d, r, valid, *, base, tile_n, chunk, op, identity, acc):
+    """Shared chunk step of the segmented-scan reduce kernels.
 
-    The one-hot destination mask that the sum variant feeds to the MXU here
-    selects contributions into a (chunk × tile_n) tile whose unselected
-    lanes hold the reduce identity; a VPU reduce over the chunk axis folds
-    the tile into the accumulator.  Works for any dtype with a total order
-    (f32 and i32 in practice) — the MXU has no non-additive accumulate, so
-    this is the TPU-native form of segment-min/max.
+    ``c`` is the contribution chunk (``[chunk]`` or ``[B, chunk]``),
+    ``d``/``r`` the destination and rank-in-run chunks, ``valid`` the
+    in-range mask.  Scans each destination run to its last position, then
+    scatters the per-run reduces into the accumulator columns through one
+    exactness-preserving one-hot matmul (see module docstring).
     """
-    reduce_fn = jnp.min if op == "min" else jnp.max
     combine_fn = jnp.minimum if op == "min" else jnp.maximum
+    batched = c.ndim == 2
+    d_local = jnp.where(valid, d - base, tile_n)
+    v = jnp.where(valid[None, :] if batched else valid, c, identity)
+    # Hillis-Steele segmented ⊕-scan: after step k every position holds the
+    # reduce of its run's trailing 2^k window; run-last positions end up
+    # with the whole run (rank tells same-run membership in one compare)
+    off = 1
+    for _ in range(max(1, math.ceil(math.log2(chunk)))):
+        pulled = combine_fn(v, _shift_right(v, off, identity))
+        v = jnp.where(r >= off, pulled, v)
+        off *= 2
+    # run-last positions: the destination changes at the next slot (the
+    # chunk's last slot always flushes — a run spanning chunks scatters one
+    # partial per chunk and the accumulator ⊕ recombines them exactly)
+    nxt_d = jnp.concatenate([d_local[1:], jnp.full((1,), -1, d_local.dtype)])
+    sel = (d_local != nxt_d) & (d_local < tile_n)
+    if jnp.issubdtype(v.dtype, jnp.floating):
+        finite = jnp.isfinite(v)
+        safe = jnp.where(sel & finite, v, 0.0).astype(jnp.float32)
+        extra = jnp.where(sel & ~finite, jnp.sign(v), 0.0).astype(jnp.float32)
+    else:
+        safe = jnp.where(sel, v & 0xffff, 0).astype(jnp.float32)
+        extra = jnp.where(sel, (v >> 16) & 0xffff, 0).astype(jnp.float32)
+    cnt = jnp.where(sel, 1.0, 0.0).astype(jnp.float32)
+    onehot = (d_local[:, None] ==
+              jnp.arange(tile_n, dtype=jnp.int32)[None, :])
+    if batched:
+        rows = jnp.concatenate([safe, extra, cnt[None, :]], axis=0)
+    else:
+        rows = jnp.stack([safe, extra, cnt])
+    agg = jnp.dot(rows, onehot.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    if batched:
+        b = v.shape[0]
+        val, ext, ct = agg[:b], agg[b:2 * b], agg[2 * b]
+    else:
+        val, ext, ct = agg[0], agg[1], agg[2]
+    if jnp.issubdtype(v.dtype, jnp.floating):
+        col = jnp.where(ext != 0, ext * jnp.inf, val).astype(v.dtype)
+    else:
+        col = (val.astype(jnp.int32) |
+               (ext.astype(jnp.int32) << 16)).astype(v.dtype)
+    col = jnp.where(ct > 0, col, identity)
+    return combine_fn(acc, col)
 
-    def _reduce_kernel(tile_start_ref, contrib_ref, dst_ref, out_ref):
+
+def _make_reduce_kernel(tile_n: int, chunk: int, op: str, identity,
+                        dtype, double_buffer: bool):
+    """Segmented-scan reduce kernel body: ⊕ ∈ {min, max} via rank-scan +
+    exact one-hot select matmul (see module docstring)."""
+
+    def _reduce_kernel(tile_start_ref, contrib_ref, dst_ref, rank_ref,
+                       out_ref):
         t = pl.program_id(0)
         start = tile_start_ref[t]
         end = tile_start_ref[t + 1]
         base = t * tile_n
+        pos = jnp.arange(chunk, dtype=jnp.int32)
 
-        n_chunks = pl.cdiv(end - start, chunk)
+        def compute(i, loaded, acc):
+            c, d, r = loaded
+            valid = start + i * chunk + pos < end
+            return _run_reduce(c, d, r, valid, base=base, tile_n=tile_n,
+                               chunk=chunk, op=op, identity=identity,
+                               acc=acc)
 
-        def body(i, acc):
-            lo = start + i * chunk
-            idx = lo + jnp.arange(chunk, dtype=jnp.int32)
-            valid = idx < end
-            c = pl.load(contrib_ref, (pl.ds(lo, chunk),))
-            d = pl.load(dst_ref, (pl.ds(lo, chunk),))
-            d_local = jnp.where(valid, d - base, tile_n)  # OOB -> no column
-            onehot = (d_local[:, None] ==
-                      jnp.arange(tile_n, dtype=jnp.int32)[None, :])
-            tile = jnp.where(onehot, c[:, None], identity)
-            return combine_fn(acc, reduce_fn(tile, axis=0))
-
-        acc0 = jnp.full((tile_n,), identity, contrib_ref.dtype)
-        acc = jax.lax.fori_loop(0, n_chunks, body, acc0)
+        acc = _stream_chunks(
+            start, pl.cdiv(end - start, chunk), chunk,
+            [(contrib_ref, None, dtype), (dst_ref, None, jnp.int32),
+             (rank_ref, None, jnp.int32)],
+            jnp.full((tile_n,), identity, dtype), compute, double_buffer)
         out_ref[...] = acc
 
     return _reduce_kernel
 
 
+def _resolve_double_buffer(double_buffer, interpret):
+    """Default: DMA-overlap chunk loads on real hardware, plain loads in
+    interpret mode (where the DMA emulation only adds overhead)."""
+    if double_buffer is None:
+        return not interpret
+    return double_buffer
+
+
+def _reduce_identity(dtype, op: str):
+    """The ⊕-identity XLA's segment_min/max use for empty segments."""
+    if jnp.issubdtype(dtype, jnp.floating):
+        return dtype.type(-jnp.inf if op == "max" else jnp.inf)
+    info = jnp.iinfo(dtype)
+    return dtype.type(info.min if op == "max" else info.max)
+
+
 @functools.partial(
-    jax.jit, static_argnames=("num_tiles", "tile_n", "chunk", "interpret")
+    jax.jit,
+    static_argnames=("num_tiles", "tile_n", "chunk", "interpret",
+                     "double_buffer"),
 )
 def spmv_push(
     contrib: jax.Array,      # f32[E_pad] — per-edge contribution, dst-sorted
@@ -156,10 +311,12 @@ def spmv_push(
     tile_n: int = TILE_N,
     chunk: int = CHUNK,
     interpret: bool = False,
+    double_buffer: bool = None,
 ) -> jax.Array:
     """Returns f32[num_tiles * tile_n] accumulated incoming contributions."""
+    db = _resolve_double_buffer(double_buffer, interpret)
     out = pl.pallas_call(
-        _make_spmv_kernel(tile_n, chunk),
+        _make_spmv_kernel(tile_n, chunk, db),
         grid=(num_tiles,),
         in_specs=[
             pl.BlockSpec(memory_space=pl.ANY),   # tile_start (scalar-ish)
@@ -175,11 +332,13 @@ def spmv_push(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("num_tiles", "tile_n", "chunk", "op", "interpret"),
+    static_argnames=("num_tiles", "tile_n", "chunk", "op", "interpret",
+                     "double_buffer"),
 )
 def spmv_reduce_push(
     contrib: jax.Array,      # [E_pad] per-edge contribution, dst-sorted
     dst_sorted: jax.Array,   # i32[E_pad] destination per edge (sorted)
+    rank: jax.Array,         # i32[E_pad] position of each edge in its run
     tile_start: jax.Array,   # i32[num_tiles + 1] edge range per tile
     *,
     num_tiles: int,
@@ -187,9 +346,13 @@ def spmv_reduce_push(
     tile_n: int = TILE_N,
     chunk: int = CHUNK,
     interpret: bool = False,
+    double_buffer: bool = None,
 ) -> jax.Array:
-    """Masked-reduce sibling of :func:`spmv_push` for ``op`` ∈ {min, max}.
+    """Segmented-scan sibling of :func:`spmv_push` for ``op`` ∈ {min, max}.
 
+    ``rank`` is the per-edge position inside its destination run (the
+    layout builders derive it from ``row_offsets`` once per build; invalid
+    and padding slots must carry 0 so they never pull across runs).
     Returns ``contrib.dtype[num_tiles * tile_n]``; destinations with no
     in-range edge hold the reduce identity (+∞/−∞ or the int extrema) —
     the ⊕-zero of the semiring the caller runs, matching XLA's
@@ -198,15 +361,13 @@ def spmv_reduce_push(
     if op not in ("min", "max"):
         raise ValueError(f"op must be 'min' or 'max', got {op!r}")
     dtype = contrib.dtype
-    if jnp.issubdtype(dtype, jnp.floating):
-        identity = dtype.type(-jnp.inf if op == "max" else jnp.inf)
-    else:
-        info = jnp.iinfo(dtype)
-        identity = dtype.type(info.min if op == "max" else info.max)
+    identity = _reduce_identity(dtype, op)
+    db = _resolve_double_buffer(double_buffer, interpret)
     out = pl.pallas_call(
-        _make_reduce_kernel(tile_n, chunk, op, identity),
+        _make_reduce_kernel(tile_n, chunk, op, identity, dtype, db),
         grid=(num_tiles,),
         in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
             pl.BlockSpec(memory_space=pl.ANY),
             pl.BlockSpec(memory_space=pl.ANY),
             pl.BlockSpec(memory_space=pl.ANY),
@@ -214,11 +375,12 @@ def spmv_reduce_push(
         out_specs=pl.BlockSpec((tile_n,), lambda t: (t,)),
         out_shape=jax.ShapeDtypeStruct((num_tiles * tile_n,), dtype),
         interpret=interpret,
-    )(tile_start, contrib, dst_sorted)
+    )(tile_start, contrib, dst_sorted, rank)
     return out
 
 
-def _make_spmv_batched_kernel(batch: int, tile_n: int, chunk: int):
+def _make_spmv_batched_kernel(batch: int, tile_n: int, chunk: int,
+                              double_buffer: bool):
     """Batched sum-kernel body: the one-hot product is a real MXU matmul.
 
     Identical tiling/chunking to :func:`_make_spmv_kernel`; the chunk load
@@ -233,15 +395,11 @@ def _make_spmv_batched_kernel(batch: int, tile_n: int, chunk: int):
         start = tile_start_ref[t]
         end = tile_start_ref[t + 1]
         base = t * tile_n
+        pos = jnp.arange(chunk, dtype=jnp.int32)
 
-        n_chunks = pl.cdiv(end - start, chunk)
-
-        def body(i, acc):
-            lo = start + i * chunk
-            idx = lo + jnp.arange(chunk, dtype=jnp.int32)
-            valid = idx < end
-            c = pl.load(contrib_ref, (slice(None), pl.ds(lo, chunk)))
-            d = pl.load(dst_ref, (pl.ds(lo, chunk),))
+        def compute(i, loaded, acc):
+            c, d = loaded
+            valid = start + i * chunk + pos < end
             d_local = jnp.where(valid, d - base, tile_n)      # OOB -> zero row
             onehot = (d_local[:, None] ==
                       jnp.arange(tile_n, dtype=jnp.int32)[None, :])
@@ -249,54 +407,53 @@ def _make_spmv_batched_kernel(batch: int, tile_n: int, chunk: int):
             return acc + jnp.dot(c, onehot.astype(jnp.float32),
                                  preferred_element_type=jnp.float32)
 
-        acc0 = jnp.zeros((batch, tile_n), jnp.float32)
-        acc = jax.lax.fori_loop(0, n_chunks, body, acc0)
+        acc = _stream_chunks(
+            start, pl.cdiv(end - start, chunk), chunk,
+            [(contrib_ref, batch, jnp.float32), (dst_ref, None, jnp.int32)],
+            jnp.zeros((batch, tile_n), jnp.float32), compute, double_buffer)
         out_ref[...] = acc
 
     return _spmv_batched_kernel
 
 
-def _make_reduce_batched_kernel(batch: int, tile_n: int, chunk: int,
-                                op: str, identity):
-    """Batched masked-reduce body: one ``[B, chunk, tile_n]`` masked tile
-    folded along the chunk axis.  The one-hot destination mask is built
-    once per chunk and broadcast over the batch; min/max are
-    reassociation-exact, so each row matches the single-query kernel
-    bitwise.  Callers bound ``batch * chunk * tile_n`` against VMEM
-    (see :func:`spmv_reduce_push_batched`).
-    """
-    reduce_fn = jnp.min if op == "min" else jnp.max
-    combine_fn = jnp.minimum if op == "min" else jnp.maximum
+def _make_reduce_batched_kernel(batch: int, tile_n: int, chunk: int, op: str,
+                                identity, dtype, double_buffer: bool):
+    """Batched segmented-scan reduce body: the scan runs on the
+    ``[B, chunk]`` chunk with the shared rank stream, and the encoded rows
+    stack into one ``[2B+1, chunk] @ [chunk, tile_n]`` select matmul.
+    min/max are reassociation-exact, so each row matches the single-query
+    kernel bitwise."""
 
-    def _reduce_batched_kernel(tile_start_ref, contrib_ref, dst_ref, out_ref):
+    def _reduce_batched_kernel(tile_start_ref, contrib_ref, dst_ref,
+                               rank_ref, out_ref):
         t = pl.program_id(0)
         start = tile_start_ref[t]
         end = tile_start_ref[t + 1]
         base = t * tile_n
+        pos = jnp.arange(chunk, dtype=jnp.int32)
 
-        n_chunks = pl.cdiv(end - start, chunk)
+        def compute(i, loaded, acc):
+            c, d, r = loaded
+            valid = start + i * chunk + pos < end
+            return _run_reduce(c, d, r, valid, base=base, tile_n=tile_n,
+                               chunk=chunk, op=op, identity=identity,
+                               acc=acc)
 
-        def body(i, acc):
-            lo = start + i * chunk
-            idx = lo + jnp.arange(chunk, dtype=jnp.int32)
-            valid = idx < end
-            c = pl.load(contrib_ref, (slice(None), pl.ds(lo, chunk)))
-            d = pl.load(dst_ref, (pl.ds(lo, chunk),))
-            d_local = jnp.where(valid, d - base, tile_n)  # OOB -> no column
-            onehot = (d_local[:, None] ==
-                      jnp.arange(tile_n, dtype=jnp.int32)[None, :])
-            tile = jnp.where(onehot[None, :, :], c[:, :, None], identity)
-            return combine_fn(acc, reduce_fn(tile, axis=1))
-
-        acc0 = jnp.full((batch, tile_n), identity, contrib_ref.dtype)
-        acc = jax.lax.fori_loop(0, n_chunks, body, acc0)
+        acc = _stream_chunks(
+            start, pl.cdiv(end - start, chunk), chunk,
+            [(contrib_ref, batch, dtype), (dst_ref, None, jnp.int32),
+             (rank_ref, None, jnp.int32)],
+            jnp.full((batch, tile_n), identity, dtype), compute,
+            double_buffer)
         out_ref[...] = acc
 
     return _reduce_batched_kernel
 
 
 @functools.partial(
-    jax.jit, static_argnames=("num_tiles", "tile_n", "chunk", "interpret")
+    jax.jit,
+    static_argnames=("num_tiles", "tile_n", "chunk", "interpret",
+                     "double_buffer"),
 )
 def spmv_push_batched(
     contrib: jax.Array,      # f32[B, E_pad] — per-edge contribs, dst-sorted
@@ -307,12 +464,14 @@ def spmv_push_batched(
     tile_n: int = TILE_N,
     chunk: int = CHUNK,
     interpret: bool = False,
+    double_buffer: bool = None,
 ) -> jax.Array:
     """Batched :func:`spmv_push`: B contribution streams through one shared
     sorted edge stream.  Returns ``f32[B, num_tiles * tile_n]``."""
     batch = contrib.shape[0]
+    db = _resolve_double_buffer(double_buffer, interpret)
     out = pl.pallas_call(
-        _make_spmv_batched_kernel(batch, tile_n, chunk),
+        _make_spmv_batched_kernel(batch, tile_n, chunk, db),
         grid=(num_tiles,),
         in_specs=[
             pl.BlockSpec(memory_space=pl.ANY),   # tile_start (scalar-ish)
@@ -327,30 +486,38 @@ def spmv_push_batched(
     return out
 
 
-#: VMEM budget (bytes) the batched masked-reduce tile may occupy — chunk is
-#: halved until B * chunk * tile_n * itemsize fits (min/max reduces are
-#: order-exact, so a smaller chunk changes nothing numerically)
+#: VMEM budget (bytes) for the batched reduce kernel's per-step working set
+#: — scan buffers + encoded rows + one-hot + accumulator; the chunk shrinks
+#: 128-granularly until it fits (min/max reduces are order-exact, so a
+#: smaller chunk changes nothing numerically)
 _REDUCE_TILE_VMEM_BYTES = 6 * 1024 * 1024
 
 
 def batched_reduce_chunk(batch: int, tile_n: int, chunk: int,
                          itemsize: int = 4) -> int:
-    """Largest chunk ≤ ``chunk`` whose ``[B, chunk, tile_n]`` masked tile
-    fits the VMEM budget (never below 128).  Exposed so callers can reason
+    """Largest 128-multiple chunk ≤ ``chunk`` whose batched-reduce working
+    set — ~6 scan/encode buffers of ``[B, chunk]``, the ``[chunk, tile_n]``
+    one-hot and the ``[B, tile_n]`` accumulator — fits the VMEM budget
+    (never below 128).  The shrink is incremental (largest fit), not the
+    former collapse-by-halving, so a marginally-over-budget shape loses a
+    sliver of chunk instead of half of it.  Exposed so callers can reason
     about the effective chunk the batched reduce kernel will use."""
-    while batch * chunk * tile_n * itemsize > _REDUCE_TILE_VMEM_BYTES \
-            and chunk > 128:
-        chunk //= 2
-    return chunk
+    acc_bytes = batch * tile_n * itemsize
+    per_chunk = 6 * batch * itemsize + 4 * tile_n
+    fit = (_REDUCE_TILE_VMEM_BYTES - acc_bytes) // max(per_chunk, 1)
+    fit = max(128, (fit // 128) * 128)
+    return min(chunk, fit)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("num_tiles", "tile_n", "chunk", "op", "interpret"),
+    static_argnames=("num_tiles", "tile_n", "chunk", "op", "interpret",
+                     "double_buffer"),
 )
 def spmv_reduce_push_batched(
     contrib: jax.Array,      # [B, E_pad] per-edge contribs, dst-sorted
     dst_sorted: jax.Array,   # i32[E_pad] destination per edge (sorted)
+    rank: jax.Array,         # i32[E_pad] position of each edge in its run
     tile_start: jax.Array,   # i32[num_tiles + 1] edge range per tile
     *,
     num_tiles: int,
@@ -358,28 +525,30 @@ def spmv_reduce_push_batched(
     tile_n: int = TILE_N,
     chunk: int = CHUNK,
     interpret: bool = False,
+    double_buffer: bool = None,
 ) -> jax.Array:
     """Batched :func:`spmv_reduce_push` for ``op`` ∈ {min, max}.
 
     Returns ``contrib.dtype[B, num_tiles * tile_n]``; each batch row is
     bitwise equal to the single-query kernel on the same stream (min/max
-    are reassociation-exact).  The chunk shrinks automatically so the
-    masked tile stays inside VMEM (smaller chunks load the same edges).
+    are reassociation-exact).  The chunk shrinks automatically (largest
+    128-granular fit) so the scan working set stays inside VMEM — smaller
+    chunks load the same edges.
     """
     if op not in ("min", "max"):
         raise ValueError(f"op must be 'min' or 'max', got {op!r}")
     batch = contrib.shape[0]
     dtype = contrib.dtype
-    if jnp.issubdtype(dtype, jnp.floating):
-        identity = dtype.type(-jnp.inf if op == "max" else jnp.inf)
-    else:
-        info = jnp.iinfo(dtype)
-        identity = dtype.type(info.min if op == "max" else info.max)
-    chunk = batched_reduce_chunk(batch, tile_n, chunk, jnp.dtype(dtype).itemsize)
+    identity = _reduce_identity(dtype, op)
+    chunk = batched_reduce_chunk(batch, tile_n, chunk,
+                                 jnp.dtype(dtype).itemsize)
+    db = _resolve_double_buffer(double_buffer, interpret)
     out = pl.pallas_call(
-        _make_reduce_batched_kernel(batch, tile_n, chunk, op, identity),
+        _make_reduce_batched_kernel(batch, tile_n, chunk, op, identity,
+                                    dtype, db),
         grid=(num_tiles,),
         in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
             pl.BlockSpec(memory_space=pl.ANY),
             pl.BlockSpec(memory_space=pl.ANY),
             pl.BlockSpec(memory_space=pl.ANY),
@@ -387,5 +556,5 @@ def spmv_reduce_push_batched(
         out_specs=pl.BlockSpec((batch, tile_n), lambda t: (0, t)),
         out_shape=jax.ShapeDtypeStruct((batch, num_tiles * tile_n), dtype),
         interpret=interpret,
-    )(tile_start, contrib, dst_sorted)
+    )(tile_start, contrib, dst_sorted, rank)
     return out

@@ -35,15 +35,16 @@ def semiring_push(state: GraphState, values: jax.Array, *,
                   weight: str = "unit",
                   interpret: bool = True,
                   layout: Optional[EdgeLayout] = None,
-                  tile_n: int = TILE_N,
-                  chunk: int = CHUNK) -> jax.Array:
+                  tile_n: Optional[int] = None,
+                  chunk: Optional[int] = None) -> jax.Array:
     """One kernel-backed push over any registered semiring:
     ``out[v] = ⊕_{(u,v)∈E} values[u] ⊗ weight(u, v)`` (e.g.
     ``semiring="min_plus", weight="length"`` is one Bellman-Ford
     relaxation step)."""
     if layout is None:
         layout = build_layout(state, weight=weight, semiring=semiring,
-                              chunk=chunk)
+                              chunk=CHUNK if chunk is None else chunk,
+                              tile_n=tile_n)
     return push(values, layout, semiring=semiring, backend="pallas",
                 tile_n=tile_n, chunk=chunk, interpret=interpret)
 
@@ -58,8 +59,8 @@ def sharded_semiring_push(state: GraphState, values: jax.Array, *,
                           interpret: Optional[bool] = True,
                           layout: Optional[AnyEdgeLayout] = None,
                           slots: Optional[jax.Array] = None,
-                          tile_n: int = TILE_N,
-                          chunk: int = CHUNK) -> jax.Array:
+                          tile_n: Optional[int] = None,
+                          chunk: Optional[int] = None) -> jax.Array:
     """:func:`semiring_push` over a device mesh: builds (or accepts) a
     per-shard destination-sorted
     :class:`~repro.core.backend.ShardedEdgeLayout` and runs the
@@ -79,7 +80,8 @@ def sharded_semiring_push(state: GraphState, values: jax.Array, *,
         from repro.graph.partition import build_sharded_layout
         layout = build_sharded_layout(
             state, mesh=mesh, axes=axes, num_shards=num_shards,
-            weight=weight, semiring=semiring, chunk=chunk, slots=slots)
+            weight=weight, semiring=semiring, chunk=chunk, slots=slots,
+            tile_n=tile_n)
     return push(values, layout, semiring=semiring, backend=backend,
                 tile_n=tile_n, chunk=chunk, interpret=interpret)
 
@@ -87,8 +89,8 @@ def sharded_semiring_push(state: GraphState, values: jax.Array, *,
 def pagerank_push(state: GraphState, ranks: jax.Array, *,
                   interpret: bool = True,
                   layout: Optional[EdgeLayout] = None,
-                  tile_n: int = TILE_N,
-                  chunk: int = CHUNK) -> jax.Array:
+                  tile_n: Optional[int] = None,
+                  chunk: Optional[int] = None) -> jax.Array:
     """One power-iteration push: out[v] = Σ_{(u,v)∈E} ranks[u]/d_out(u) —
     the ``plus_times``/``inv_out`` specialization of
     :func:`semiring_push`."""

@@ -111,13 +111,19 @@ def run_veilgraph_cell(mesh, mesh_name: str, *, nodes=2**25, edges=2**30,
     distributed bucket sort (per-shard E_K selection + dst-sorted
     compaction, one capacity-padded all-to-all, shard-local row offsets).
 
-    Two gates are asserted on the lowered/compiled program:
+    Three gates are asserted on the lowered/compiled program:
 
     - it traces **zero** unsorted ``push_coo`` calls (the pre-sharded cost
       model this replaced);
     - it contains **zero** all-gathers of a full edge-space buffer (the
       pre-sharded E_K compaction replicated ``e_src``/``e_dst`` that way —
-      the wall-clock ceiling the sharded summary removes).
+      the wall-clock ceiling the sharded summary removes);
+    - every pinned push shape in ``benchmarks/roofline_baseline.json``
+      re-models within 10% of its committed HBM byte volume
+      (:func:`repro.launch.roofline.check_push_baselines` — the
+      "modeled HBM traffic must not regress" CI check; run
+      ``check_push_baselines(..., update=True)`` and commit the diff after
+      an intentional kernel-geometry or cost-model change).
 
     ``backend`` picks the per-shard propagation kernels ("auto" resolves
     per device: TPU → the Pallas MXU/VPU kernels inside each shard,
@@ -201,6 +207,14 @@ def run_veilgraph_cell(mesh, mesh_name: str, *, nodes=2**25, edges=2**30,
                 f">= one full edge buffer ({edge_buffer_bytes:.3e} B); "
                 f"the sharded summary construction must keep E-space "
                 f"buffers sharded")
+        # per-kernel roofline gate: every pinned push shape must re-model
+        # within 10% of its committed HBM byte volume (AssertionError here
+        # fails the dryrun cell, and CI with it)
+        baseline_path = (Path(__file__).resolve().parents[3] /
+                         "benchmarks" / "roofline_baseline.json")
+        push_checks = RL.check_push_baselines(baseline_path)
+        print(f"  push roofline: {len(push_checks)} pinned shapes within "
+              f"10% of baseline HBM bytes")
         mem = compiled.memory_analysis()
         # "model flops" for the graph query: the paper's useful work = selection
         # + summary + 30 iterations over the hot subgraph; approximate with
@@ -208,6 +222,7 @@ def run_veilgraph_cell(mesh, mesh_name: str, *, nodes=2**25, edges=2**30,
         useful = 2.0 * (6 * edges + 30 * 2**26)
         rec.update(status="ok", lower_s=round(t_lower, 1),
                    compile_s=round(t_compile, 1),
+                   push_roofline=push_checks,
                    backend=backend_r, push_coo_traces=push_coo_traces,
                    replicated_edge_buffer_gathers=0,
                    max_all_gather_bytes=ag_max,

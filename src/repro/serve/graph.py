@@ -213,6 +213,8 @@ class GraphServingEngine:
                 "engine.start(...) (or build via repro.api.serve_session)")
         self.engine = engine
         self.slots = slots
+        # batched sweeps run [slots, N] pushes — tune for that batch width
+        engine.autotune_batch_hint = slots
         self.stats = ServeStats()
         self._lanes: Dict[Tuple, _Lane] = {}
         # shared edge-layout cache across lanes, keyed by normalized
@@ -314,6 +316,7 @@ class GraphServingEngine:
             layout = self._layouts.get(spec)
             if layout is None:
                 w, rev, s = spec
+                tile_n, chunk = eng._tuned_geometry(s)
                 if cfg.mesh is not None:
                     from repro.graph.partition import (build_sharded_layout,
                                                        place_sharded_layout)
@@ -321,10 +324,15 @@ class GraphServingEngine:
                         eng.state, mesh=cfg.mesh, axes=cfg.mesh_axes,
                         num_shards=cfg.num_shards,
                         weight=w, reverse=rev, semiring=s,
-                        slots=eng._shard_slots))
+                        slots=eng._shard_slots,
+                        chunk=chunk, tile_n=tile_n,
+                        weight_dtype=eng._weight_dtype_for(s)))
                 else:
                     layout = B.build_layout(
-                        eng.state, weight=w, reverse=rev, semiring=s)
+                        eng.state, weight=w, reverse=rev, semiring=s,
+                        chunk=B.CHUNK if chunk is None else chunk,
+                        tile_n=tile_n,
+                        weight_dtype=eng._weight_dtype_for(s))
                 self._layouts[spec] = layout
             out.append(layout)
         return tuple(out)

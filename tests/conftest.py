@@ -17,3 +17,20 @@ except ImportError:
     _mod = importlib.util.module_from_spec(_spec)
     _spec.loader.exec_module(_mod)
     _mod.install()
+
+
+# Very long single-process runs (the suite is 380+ tests, most of which
+# jit-compile fresh programs) can crash XLA's CPU JIT once the live
+# executable count grows past a few thousand — a segfault inside
+# backend_compile near the end of the run, with every module passing in
+# isolation.  Dropping JAX's compilation caches between modules keeps the
+# resident executable set bounded without changing any test semantics
+# (each module recompiles what it needs).
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    yield
+    jax.clear_caches()

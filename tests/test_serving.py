@@ -56,9 +56,9 @@ SEMIRING_WEIGHTS = [
 BITWISE_ADDS = ("min",)
 
 ALGORITHMS = ("pagerank", "personalized-pagerank", "hits", "katz",
-              "connected-components", "sssp")
-#: min-semiring workloads: batched vs looped must be bitwise
-BITWISE_ALGOS = ("connected-components", "sssp")
+              "connected-components", "sssp", "widest-path")
+#: min/max-semiring workloads: batched vs looped must be bitwise
+BITWISE_ALGOS = ("connected-components", "sssp", "widest-path")
 
 
 def _mesh(max_devices: int = 8) -> Mesh:
@@ -146,7 +146,7 @@ def _instances(name, batch=BATCH):
     """B algorithm instances differing only in per-query identity."""
     if name == "personalized-pagerank":
         return [make_algorithm(name, seeds=(i,)) for i in range(batch)]
-    if name == "sssp":
+    if name in ("sssp", "widest-path"):
         return [make_algorithm(name, sources=(i,)) for i in range(batch)]
     return [make_algorithm(name)] * batch
 
@@ -158,7 +158,7 @@ def _rows(insts, g, name):
     for i, inst in enumerate(insts):
         row = inst.init_state(g)
         if name not in ("personalized-pagerank", "sssp",
-                        "connected-components"):
+                        "connected-components", "widest-path"):
             row = {k: v * (1.0 + 0.05 * i) for k, v in row.items()}
         rows.append(row)
     return rows

@@ -1,0 +1,135 @@
+"""Widest (most-reliable) path — the seventh registered algorithm.
+
+max_times Bellman–Ford over edge reliabilities: sources pinned to width
+1.0, unreached vertices 0.0 (never −∞, so 0-length edges cannot produce
+−∞ · 0 NaNs).  Monotone non-decreasing under edge additions, so the
+warm-started summarized sweep is exact on a full hot set, and ``max`` is
+reassociation-exact, so backend parity is bitwise.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithm import WidestPathAlgorithm, algorithm_factory
+from repro.graph import from_edges
+from repro.graph.generators import gnm_edges
+
+
+def _ref_widest(n, src, dst, rel, sources, iters=80):
+    w = np.zeros(n, np.float32)
+    w[list(sources)] = 1.0
+    for _ in range(iters):
+        new = w.copy()
+        np.maximum.at(new, dst, w[src] * rel)
+        new[list(sources)] = 1.0
+        if np.array_equal(new, w):
+            break
+        w = new
+    return w
+
+
+def _fixture(n=300, m=1800, seed=0):
+    rng = np.random.default_rng(seed)
+    src, dst = gnm_edges(n, m, seed=seed)
+    rel = (rng.random(len(src)) * 0.9 + 0.05).astype(np.float32)
+    g = from_edges(src, dst, n, len(src) + 64, weights=rel)
+    return g, src, dst, rel
+
+
+@pytest.mark.parametrize("backend", ["segment_sum", "pallas"])
+def test_widest_path_exact_matches_reference(backend):
+    from repro.core.traversal import widest_path
+
+    g, src, dst, rel = _fixture()
+    mask = jnp.zeros(300, bool).at[jnp.asarray([0, 7])].set(True)
+    w, iters = widest_path(g, mask, num_iters=80, backend=backend)
+    ref = _ref_widest(300, src, dst, rel, (0, 7))
+    np.testing.assert_array_equal(np.asarray(w), ref)
+    assert 0 < int(iters) <= 80
+
+
+def test_widest_path_zero_reliability_edges_stay_finite():
+    """0-weight edges must not poison anything (the −∞ encoding would)."""
+    from repro.core.traversal import widest_path
+
+    src = np.asarray([0, 1], np.int32)
+    dst = np.asarray([1, 2], np.int32)
+    rel = np.asarray([0.0, 0.5], np.float32)
+    g = from_edges(src, dst, 8, 8, weights=rel)
+    mask = jnp.zeros(8, bool).at[0].set(True)
+    w, _ = widest_path(g, mask, num_iters=8)
+    out = np.asarray(w)
+    assert np.all(np.isfinite(out))
+    assert out[0] == 1.0 and out[1] == 0.0 and out[2] == 0.0
+
+
+def test_summarized_widest_path_full_hot_set_is_bitwise_exact():
+    algo = WidestPathAlgorithm(sources=(0, 3), warm_start=True,
+                               num_iters=80)
+    g, src, dst, rel = _fixture(seed=3)
+    st0 = algo.init_state(g)
+    st, _ = algo.exact(st0, g)
+    from repro.graph.graph import add_edges
+    g2 = add_edges(g, jnp.asarray([0, 5, 9], jnp.int32),
+                   jnp.asarray([250, 260, 270], jnp.int32),
+                   jnp.asarray([0.9, 0.8, 0.7], jnp.float32))
+    hot = jnp.copy(g2.node_active)
+    summaries = algo.build_summaries(
+        st, g2, hot, hot_node_capacity=300, hot_edge_capacity=2048)
+    approx, _ = algo.summarized(st, g2, summaries)
+    exact, _ = algo.exact(st, g2)
+    # max is reassociation-exact: equality is bitwise
+    np.testing.assert_array_equal(np.asarray(approx["width"]),
+                                  np.asarray(exact["width"]))
+
+
+def test_summarized_widest_path_batched_matches_single():
+    import jax
+
+    algo = WidestPathAlgorithm(sources=(0,), warm_start=True, num_iters=80)
+    g, src, dst, rel = _fixture(seed=5)
+    st0 = algo.init_state(g)
+    st, _ = algo.exact(st0, g)
+    hot = jnp.copy(g.node_active)
+    summaries = algo.build_summaries(
+        st, g, hot, hot_node_capacity=300, hot_edge_capacity=2048)
+    single, _ = algo.summarized(st, g, summaries)
+
+    batch_state = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), st, st)
+    summaries_b = algo.build_summaries(
+        batch_state, g, hot, hot_node_capacity=300, hot_edge_capacity=2048)
+    out_b, _, row_delta = algo.summarized_batched(
+        batch_state, g, summaries_b, row_mask=jnp.asarray([True, True]))
+    assert row_delta.shape == (2,)
+    for i in range(2):
+        np.testing.assert_array_equal(np.asarray(out_b["width"][i]),
+                                      np.asarray(single["width"]))
+
+
+def test_widest_path_registered_with_alias():
+    assert algorithm_factory("widest-path") is WidestPathAlgorithm
+    assert algorithm_factory("most-reliable-path") is WidestPathAlgorithm
+    algo = WidestPathAlgorithm()
+    assert algo.semiring == "max_times"
+    assert algo.per_query_params == ("sources",)
+
+
+def test_widest_path_through_session_and_serving():
+    from repro import api
+
+    g, src, dst, rel = _fixture(seed=7)
+    srv = api.serve_session((src, dst), slots=2, node_capacity=300,
+                            edge_capacity=2048, hot_node_capacity=300,
+                            hot_edge_capacity=2048)
+    t1 = srv.submit("widest-path", sources=(0,), num_iters=80)
+    t2 = srv.submit("widest-path", sources=(7,), num_iters=80)
+    srv.run()
+    ones = np.ones(len(src), np.float32)  # streamed edges carry unit lengths
+    np.testing.assert_allclose(np.asarray(t1.result)[:300],
+                               _ref_widest(300, src, dst, ones, (0,)),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(t2.result)[:300],
+                               _ref_widest(300, src, dst, ones, (7,)),
+                               rtol=1e-6, atol=1e-6)
+    srv.close()
