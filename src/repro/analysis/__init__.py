@@ -1,0 +1,32 @@
+"""repro.analysis — static analysis proving the hot path stays on-device.
+
+Four cooperating passes over the traced programs and the source tree,
+unified behind ``tools/analyze.py`` and the committed baseline
+``benchmarks/analysis_baseline.json`` (see ``docs/analysis.md``):
+
+- :mod:`~repro.analysis.jaxpr_lint` — jaxpr contract lint (no f64, no
+  64-bit widening converts, no unsorted scatter-reduce, no host
+  callbacks, no ``[E, N]``-class intermediates);
+- :mod:`~repro.analysis.hlo_audit` — collective/memory byte budgets over
+  compiled HLO (the generalized dry-run all-gather gate);
+- :mod:`~repro.analysis.retrace` — jit cache-miss monitor asserting each
+  engine loop traces once per (shape, algorithm, geometry);
+- :mod:`~repro.analysis.ast_lint` — source-level convention rules for
+  the engine surface (sorted reduces through ``push``, frozen
+  array-free plugins, no hidden host syncs, autotuned kernel geometry).
+
+:mod:`~repro.analysis.programs` holds the hot-path program catalog the
+traced-program passes run over; :mod:`~repro.analysis.findings` the
+shared finding/baseline model.
+"""
+
+from repro.analysis.findings import (BaselineEntry, Finding, check,
+                                     load_baseline, render_report)
+
+__all__ = [
+    "BaselineEntry",
+    "Finding",
+    "check",
+    "load_baseline",
+    "render_report",
+]

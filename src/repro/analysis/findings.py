@@ -1,0 +1,153 @@
+"""Finding model + baseline/allowlist matching for the analysis passes.
+
+Every pass (:mod:`~repro.analysis.jaxpr_lint`, :mod:`~repro.analysis.
+hlo_audit`, :mod:`~repro.analysis.retrace`, :mod:`~repro.analysis.ast_lint`)
+emits :class:`Finding` rows; callers compare them against the committed
+baseline (``benchmarks/analysis_baseline.json``) with :func:`check`:
+
+- a finding whose ``key`` matches a baseline entry is *allowlisted* — a
+  known, annotated violation (every entry carries a human ``reason``);
+- anything else is *new* and fails the run;
+- baseline entries that no longer match any finding are *stale* — the
+  violation was fixed, so the entry should be deleted (reported as a
+  warning, not a failure, to keep the gate monotone under refactors).
+
+Keys are ``"RULE::where"`` where ``where`` is a *stable* location: a
+``program:primitive`` pair for traced-program rules, ``path:scope`` for
+source rules — never a line number or an instruction index, so baselines
+survive unrelated edits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One violation from one pass.
+
+    ``pass_id``/``rule`` identify the check, ``where`` the stable location
+    (see module docstring), ``detail`` the human diagnostic — the op, the
+    measured value and the budget or contract it violated.
+    """
+
+    pass_id: str   # "jaxpr" | "hlo" | "retrace" | "ast"
+    rule: str      # e.g. "JXP-F64", "HLO-ALLGATHER-BYTES"
+    where: str     # stable location, e.g. "push_coo[plus_times]:scatter-add"
+    detail: str    # actionable message (measured vs budget, contract text)
+
+    @property
+    def key(self) -> str:
+        """The baseline-matching identity: ``RULE::where``."""
+        return f"{self.rule}::{self.where}"
+
+    def __str__(self) -> str:
+        return f"[{self.pass_id}] {self.rule} at {self.where}: {self.detail}"
+
+    def to_dict(self) -> dict:
+        """JSON row for the findings report artifact."""
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class BaselineEntry:
+    """One allowlisted violation: its key plus the reason it is accepted."""
+
+    rule: str
+    where: str
+    reason: str
+
+    @property
+    def key(self) -> str:
+        """Same identity space as :attr:`Finding.key`."""
+        return f"{self.rule}::{self.where}"
+
+
+def load_baseline(path: Optional[Path]) -> List[BaselineEntry]:
+    """Parse ``benchmarks/analysis_baseline.json`` (``{"allow": [...]}``).
+
+    A missing path (or ``None``) is an empty baseline — every finding is
+    new.  Entries must carry non-empty ``reason`` strings: an allowlist
+    without rationale is how one-off hacks calcify.
+    """
+    if path is None or not Path(path).exists():
+        return []
+    data = json.loads(Path(path).read_text(encoding="utf-8"))
+    entries = []
+    for row in data.get("allow", []):
+        if not row.get("reason", "").strip():
+            raise ValueError(
+                f"baseline entry {row.get('rule')}::{row.get('where')} has "
+                f"no reason string; annotate why this violation is accepted")
+        entries.append(BaselineEntry(rule=row["rule"], where=row["where"],
+                                     reason=row["reason"]))
+    return entries
+
+
+#: rule-id prefix → the pass that emits it (``JXP-F64`` → ``jaxpr``, …)
+_RULE_PASS = {"JXP": "jaxpr", "HLO": "hlo", "RT": "retrace", "AST": "ast"}
+
+
+def pass_of_rule(rule: str) -> Optional[str]:
+    """The pass id a rule belongs to, derived from its prefix.
+
+    Lets staleness be scoped to the passes that actually ran: a ``JXP-*``
+    baseline entry can only be declared stale by a run that included the
+    jaxpr pass.  Unknown prefixes map to ``None`` (never auto-stale).
+    """
+    return _RULE_PASS.get(rule.split("-", 1)[0])
+
+
+def check(findings: Sequence[Finding],
+          baseline: Sequence[BaselineEntry],
+          *, passes_run: Optional[Iterable[str]] = None,
+          ) -> Tuple[List[Finding], List[Finding], List[BaselineEntry]]:
+    """Split findings against the baseline.
+
+    Returns ``(new, allowlisted, stale)``: findings with no baseline
+    entry (fail), findings matched by an entry (reported, accepted), and
+    entries that matched nothing (the fix landed — delete the entry).
+    With ``passes_run``, entries owned by a pass that did NOT run are
+    never reported stale — ``--pass ast`` must not claim the jaxpr
+    allowlist is obsolete.
+    """
+    allowed: Dict[str, BaselineEntry] = {e.key: e for e in baseline}
+    new: List[Finding] = []
+    matched: List[Finding] = []
+    hit = set()
+    for f in findings:
+        if f.key in allowed:
+            matched.append(f)
+            hit.add(f.key)
+        else:
+            new.append(f)
+    ran = None if passes_run is None else set(passes_run)
+    stale = [e for e in baseline if e.key not in hit
+             and (ran is None or pass_of_rule(e.rule) in ran)]
+    return new, matched, stale
+
+
+def render_report(findings: Sequence[Finding],
+                  baseline: Sequence[BaselineEntry],
+                  *, passes_run: Iterable[str]) -> dict:
+    """The JSON findings report ``tools/analyze.py`` writes (CI artifact)."""
+    passes_run = list(passes_run)
+    new, matched, stale = check(findings, baseline, passes_run=passes_run)
+    return {
+        "passes": sorted(passes_run),
+        "ok": not new,
+        "new": [f.to_dict() for f in new],
+        "allowlisted": [
+            {**f.to_dict(), "reason": next(
+                e.reason for e in baseline if e.key == f.key)}
+            for f in matched
+        ],
+        "stale_baseline_entries": [
+            {"rule": e.rule, "where": e.where, "reason": e.reason}
+            for e in stale
+        ],
+    }

@@ -1,0 +1,155 @@
+"""Collective/memory audit over compiled HLO: per-op byte budgets.
+
+The reusable form of the dry-run's hand-rolled all-gather gate (the check
+that caught PR 5's 64 GiB/device replicated-edge all-gather): parse the
+post-SPMD HLO with :mod:`repro.launch.hlo_cost` and enforce byte budgets
+*derived from the graph spec* on the largest single instruction of each
+collective kind (``Cost.coll_max`` — not trip-multiplied, so a loop can't
+dilute or inflate the signal) plus the compiled program's peak temp:
+
+- **HLO-ALLGATHER-BYTES** — every all-gather must stay below one edge
+  buffer (``4·E_cap``): an all-gather that large means some stage
+  replicated the sharded edge stream.
+- **HLO-ALLTOALL-BYTES** — the summary bucket exchange is a
+  capacity-padded all-to-all of hot blocks; an all-to-all past the padded
+  exchange budget means E-space (not K-space) data crossed the mesh.
+- **HLO-ALLREDUCE-BYTES** — rank-vector merges are node-space; budget
+  optional (``None`` skips).
+- **HLO-TEMP-BYTES** — ``memory_analysis().temp_size_in_bytes`` per
+  device against the spec budget (the 9.0 → 2.3 GiB axis PR 5 tracked).
+
+:func:`budgets_for_spec` derives a :class:`CollectiveBudgets` from a
+program-catalog :class:`~repro.analysis.programs.GraphSpec`;
+:func:`budgets_for_graph` is the dry-run's pod-scale variant (edge count
+only, the original gate).  ``None`` disables an individual budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.analysis.findings import Finding
+from repro.launch.hlo_cost import Cost, analyze_hlo
+
+_RULE_BY_KIND = {
+    "all-gather": "HLO-ALLGATHER-BYTES",
+    "all-to-all": "HLO-ALLTOALL-BYTES",
+    "all-reduce": "HLO-ALLREDUCE-BYTES",
+    "reduce-scatter": "HLO-REDUCESCATTER-BYTES",
+    "collective-permute": "HLO-PERMUTE-BYTES",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveBudgets:
+    """Per-kind byte ceilings for the largest single collective
+    instruction, plus an optional peak-temp budget.  ``None`` = unchecked.
+    """
+
+    all_gather_max: Optional[float] = None
+    all_to_all_max: Optional[float] = None
+    all_reduce_max: Optional[float] = None
+    reduce_scatter_max: Optional[float] = None
+    collective_permute_max: Optional[float] = None
+    temp_bytes_max: Optional[float] = None
+
+    def budget_for(self, kind: str) -> Optional[float]:
+        """The ceiling for one collective kind (``None`` = unchecked)."""
+        return {
+            "all-gather": self.all_gather_max,
+            "all-to-all": self.all_to_all_max,
+            "all-reduce": self.all_reduce_max,
+            "reduce-scatter": self.reduce_scatter_max,
+            "collective-permute": self.collective_permute_max,
+        }.get(kind)
+
+
+def budgets_for_spec(spec) -> CollectiveBudgets:
+    """Budgets derived from a program-catalog ``GraphSpec``.
+
+    - all-gather: strictly under one endpoint buffer ``4·E_cap`` — the
+      "never replicate the edge stream" bound;
+    - all-to-all: the capacity-padded bucket exchange — per exchanged
+      buffer ``4·S·⌈H_cap/S⌉`` bytes, with headroom for XLA fusing the
+      (src, dst, w, order) streams into one tuple instruction (×8);
+    - all-reduce: node-space merges only — a ``[B, N]`` f32 buffer with
+      the same ×8 tuple/fusion headroom;
+    - temp: ``128·4·E_cap`` per device — roomy for sort scratch
+      (a handful of E-sized buffers), two orders under any ``[E, N]``
+      materialization.
+    """
+    e_bytes = 4.0 * spec.edge_capacity
+    pad_hot = spec.num_shards * (-(-spec.hot_edge_capacity
+                                   // spec.num_shards))
+    return CollectiveBudgets(
+        all_gather_max=e_bytes,
+        all_to_all_max=8.0 * 4.0 * pad_hot,
+        all_reduce_max=8.0 * 4.0 * spec.node_capacity * max(
+            spec.batch, 1),
+        temp_bytes_max=128.0 * e_bytes,
+    )
+
+
+def budgets_for_graph(edge_capacity: int) -> CollectiveBudgets:
+    """The dry-run's original pod-scale gate: all-gathers strictly under
+    one ``4·E_cap`` edge buffer, everything else unbudgeted (pod-scale
+    temp is reported, not gated — the roofline baseline pins it)."""
+    return CollectiveBudgets(all_gather_max=4.0 * edge_capacity)
+
+
+def audit_hlo_text(text: str, budgets: CollectiveBudgets, *,
+                   program: str,
+                   temp_bytes: Optional[float] = None,
+                   ) -> List[Finding]:
+    """Audit HLO module text against ``budgets``.
+
+    ``temp_bytes`` (from ``compiled.memory_analysis()``) arms the peak-temp
+    rule; text-only callers (tests, saved dumps) may omit it.
+    Returns findings; the parsed :class:`Cost` is recomputable via
+    :func:`repro.launch.hlo_cost.analyze_hlo` when callers need the
+    roofline terms too.
+    """
+    cost = analyze_hlo(text)
+    return audit_cost(cost, budgets, program=program, temp_bytes=temp_bytes)
+
+
+def audit_cost(cost: Cost, budgets: CollectiveBudgets, *, program: str,
+               temp_bytes: Optional[float] = None) -> List[Finding]:
+    """Audit an already-parsed :class:`~repro.launch.hlo_cost.Cost`."""
+    findings: List[Finding] = []
+    for kind, largest in sorted(cost.coll_max.items()):
+        budget = budgets.budget_for(kind)
+        if budget is not None and largest >= budget:
+            findings.append(Finding(
+                pass_id="hlo", rule=_RULE_BY_KIND.get(
+                    kind, f"HLO-{kind.upper()}-BYTES"),
+                where=f"{program}:{kind}",
+                detail=f"largest {kind} instruction moves {largest:.3e} B "
+                       f">= budget {budget:.3e} B "
+                       f"({cost.coll_counts.get(kind, 0):.0f} {kind} "
+                       f"instruction(s) total) — an E-space buffer "
+                       f"crossed the mesh; keep edge-space data sharded"))
+    if (budgets.temp_bytes_max is not None and temp_bytes is not None
+            and temp_bytes >= budgets.temp_bytes_max):
+        findings.append(Finding(
+            pass_id="hlo", rule="HLO-TEMP-BYTES",
+            where=f"{program}:temp",
+            detail=f"peak temp {temp_bytes:.3e} B/device >= budget "
+                   f"{budgets.temp_bytes_max:.3e} B — the program "
+                   f"materializes scratch far past the expected "
+                   f"edge-buffer working set"))
+    return findings
+
+
+def audit_compiled(compiled, budgets: CollectiveBudgets, *,
+                   program: str) -> List[Finding]:
+    """Audit a ``jax`` compiled executable (``jit(...).lower().compile()``):
+    HLO text budgets plus the peak-temp rule from ``memory_analysis()``."""
+    temp = None
+    try:
+        temp = float(compiled.memory_analysis().temp_size_in_bytes)
+    except Exception:  # backends without memory analysis (interpret stubs)
+        temp = None
+    return audit_hlo_text(compiled.as_text(), budgets, program=program,
+                          temp_bytes=temp)

@@ -1,0 +1,289 @@
+"""The hot-path program catalog the analysis passes trace and audit.
+
+Each :class:`Program` names one jitted program the engine actually runs —
+``push``/``push_coo`` over both backends (replicated, loop-sharded and
+mesh-sharded), ``build_summary`` (replicated and mesh-native),
+``fused_query_step`` / ``fused_query_step_batched`` (the serving engine's
+wave step), and the streaming apply step (``add_edges``) — bound to small
+concrete inputs from one :class:`GraphSpec`, so
+
+- :func:`~repro.analysis.jaxpr_lint.lint_jaxpr` gets a traced jaxpr plus
+  the spec-derived ``[E, N]`` threshold, and
+- :func:`~repro.analysis.hlo_audit.audit_compiled` gets a compiled
+  executable plus spec-derived collective byte budgets.
+
+Shapes are deliberately modest (tracing is shape-generic: a rule that
+holds at ``E=2¹⁴`` holds at ``E=2³⁰`` because the *structure* of the
+program doesn't change with capacity), but big enough that the byte
+budgets separate cleanly: one edge buffer ≫ the capacity-padded bucket
+exchange ≫ a node vector.
+
+Mesh-sharded programs need ≥ 2 devices — run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (``tools/analyze.py
+--all`` forces this itself); :func:`catalog` silently omits them on a
+single device and ``tools/analyze.py`` reports the omission.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import hlo_audit
+from repro.core import backend as B
+from repro.core.algorithm import make_algorithm
+from repro.core.fused import fused_query_step, fused_query_step_batched
+from repro.core.pagerank import build_summary
+from repro.graph import generators
+from repro.graph.graph import GraphState, add_edges, from_edges
+from repro.graph.partition import build_sharded_layout
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphSpec:
+    """The concrete shape every catalog program is traced at, and the
+    source of the derived analysis bounds (``en_threshold``, byte
+    budgets via :func:`repro.analysis.hlo_audit.budgets_for_spec`)."""
+
+    node_capacity: int = 1024
+    edge_capacity: int = 16384
+    num_edges: int = 8192
+    hot_node_capacity: int = 128
+    hot_edge_capacity: int = 512
+    batch: int = 4
+    num_shards: int = 4
+    apply_chunk: int = 64
+
+    @property
+    def en_threshold(self) -> int:
+        """Elements at which an intermediate counts as ``[E, N]``-class
+        (half the full product, to catch padded/halved variants while
+        staying orders above any legitimate E- or B·N-sized buffer)."""
+        return (self.edge_capacity * self.node_capacity) // 2
+
+    @property
+    def edge_threshold(self) -> int:
+        """Update rows at which an unsorted scatter-reduce counts as
+        *edge-scale* (half an edge buffer — catches full-E scatters
+        while exempting apply-chunk degree bookkeeping and hot-set
+        K-space compaction)."""
+        return self.edge_capacity // 2
+
+
+@dataclasses.dataclass
+class Program:
+    """One hot-path program bound to concrete inputs.
+
+    ``fn`` is a positional-args callable (pytree args fine);
+    :meth:`trace` returns its ClosedJaxpr, :meth:`compile` the compiled
+    executable for the HLO audit.  ``budgets`` defaults to the
+    spec-derived collective budgets.
+    """
+
+    name: str
+    fn: Callable
+    args: tuple
+    spec: GraphSpec
+    budgets: hlo_audit.CollectiveBudgets = None
+
+    def __post_init__(self):
+        if self.budgets is None:
+            self.budgets = hlo_audit.budgets_for_spec(self.spec)
+
+    def trace(self):
+        """Trace to a ClosedJaxpr (no compile — shape-generic lint)."""
+        return jax.make_jaxpr(self.fn)(*self.args)
+
+    def compile(self):
+        """Lower + compile (SPMD partitioning runs — the HLO audit's
+        input)."""
+        return jax.jit(self.fn).lower(*self.args).compile()
+
+
+def build_graph(spec: GraphSpec, seed: int = 0) -> GraphState:
+    """A concrete G(n, m) graph at the spec's capacities."""
+    src, dst = generators.gnm_edges(
+        spec.node_capacity, spec.num_edges, seed=seed)
+    return from_edges(src, dst, spec.node_capacity, spec.edge_capacity)
+
+
+def _query_args(spec: GraphSpec, state: GraphState, algo) -> tuple:
+    algo_state = algo.init_state(state)
+    return (state, algo_state, state.out_deg,
+            state.node_active, jnp.float32(0.2), jnp.float32(0.05))
+
+
+def catalog(spec: Optional[GraphSpec] = None, *,
+            mesh=None) -> List[Program]:
+    """Build the full program catalog at ``spec``.
+
+    ``mesh`` (optional, needs ≥ 2 devices) adds the mesh-sharded
+    variants: sharded push both backends, the distributed bucket-sort
+    summary, and the sharded fused query — the programs whose collectives
+    the HLO audit budgets exist for.
+    """
+    spec = spec or GraphSpec()
+    state = build_graph(spec)
+    progs: List[Program] = []
+
+    ranks = jnp.where(state.node_active, 1.0, 0.0).astype(jnp.float32)
+    values_b = jnp.tile(ranks[None, :], (spec.batch, 1))
+
+    # --- push: the propagation primitive, both backends -------------------
+    lay_pt = B.build_layout(state, weight="inv_out", semiring="plus_times")
+    lay_mp = B.build_layout(state, weight="length", semiring="min_plus")
+    for backend in ("segment_sum", "pallas"):
+        progs.append(Program(
+            f"push[{backend},plus_times]",
+            functools.partial(B.push, semiring="plus_times",
+                              backend=backend, interpret=True),
+            (ranks, lay_pt), spec))
+        progs.append(Program(
+            f"push[{backend},min_plus]",
+            functools.partial(B.push, semiring="min_plus",
+                              backend=backend, interpret=True),
+            (ranks, lay_mp), spec))
+    progs.append(Program(
+        "push_batched[pallas,plus_times]",
+        functools.partial(B.push, semiring="plus_times",
+                          backend="pallas", interpret=True),
+        (values_b, lay_pt), spec))
+
+    # --- push_coo: the unsorted fallback (allowlisted by definition) ------
+    w = jnp.ones((spec.edge_capacity,), jnp.float32)
+    progs.append(Program(
+        "push_coo[plus_times]",
+        lambda v, s, d, w: B.push_coo(
+            v, s, d, spec.node_capacity, weight=w, semiring="plus_times"),
+        (ranks, state.src, state.dst, w), spec))
+
+    # --- sharded push: loop reference (meshless) + real mesh --------------
+    sh_loop = build_sharded_layout(
+        state, num_shards=spec.num_shards, weight="inv_out",
+        semiring="plus_times")
+    progs.append(Program(
+        "push_sharded[segment_sum,loop]",
+        functools.partial(B.push, semiring="plus_times",
+                          backend="segment_sum", interpret=True),
+        (ranks, sh_loop), spec))
+
+    # --- summary construction + fused queries ------------------------------
+    hot = state.node_active
+    progs.append(Program(
+        "build_summary",
+        functools.partial(
+            build_summary, hot_node_capacity=spec.hot_node_capacity,
+            hot_edge_capacity=spec.hot_edge_capacity,
+            backend="segment_sum"),
+        (state, ranks, hot), spec))
+
+    pagerank = make_algorithm("pagerank")
+    sssp = make_algorithm("sssp", sources=(0,))
+    for algo, label in ((pagerank, "pagerank"), (sssp, "sssp")):
+        progs.append(Program(
+            f"fused_query_step[{label}]",
+            functools.partial(
+                fused_query_step, algo=algo,
+                hot_node_capacity=spec.hot_node_capacity,
+                hot_edge_capacity=spec.hot_edge_capacity,
+                backend="segment_sum"),
+            _query_args(spec, state, algo), spec))
+
+    # the serving engine's wave step: batched bank + row mask + the
+    # cold-start full_hot flag, exactly as GraphServingEngine.step drives it
+    bank = jax.tree_util.tree_map(
+        lambda x: jnp.tile(x[None, ...], (spec.batch,) + (1,) * x.ndim),
+        pagerank.init_state(state))
+    row_mask = jnp.ones((spec.batch,), bool)
+    st, _, deg, act, r, dd = _query_args(spec, state, pagerank)
+    progs.append(Program(
+        "serving_wave[pagerank,batched]",
+        functools.partial(
+            fused_query_step_batched, algo=pagerank,
+            hot_node_capacity=spec.hot_node_capacity,
+            hot_edge_capacity=spec.hot_edge_capacity,
+            backend="segment_sum"),
+        (st, bank, deg, act, r, dd, row_mask, jnp.bool_(True)), spec))
+
+    # --- the streaming apply step ------------------------------------------
+    new_src = jnp.zeros((spec.apply_chunk,), jnp.int32)
+    new_dst = jnp.ones((spec.apply_chunk,), jnp.int32)
+    progs.append(Program(
+        "engine_apply[add_edges]",
+        lambda st, s, d: add_edges(st, s, d),
+        (state, new_src, new_dst), spec))
+
+    # --- mesh-sharded variants ---------------------------------------------
+    if mesh is not None:
+        sh_mesh = build_sharded_layout(
+            state, mesh=mesh, weight="inv_out", semiring="plus_times")
+        for backend in ("segment_sum", "pallas"):
+            progs.append(Program(
+                f"push_sharded[{backend},mesh]",
+                functools.partial(B.push, semiring="plus_times",
+                                  backend=backend, interpret=True),
+                (ranks, sh_mesh), spec))
+        progs.append(Program(
+            "build_summary[sharded]",
+            functools.partial(
+                build_summary, hot_node_capacity=spec.hot_node_capacity,
+                hot_edge_capacity=spec.hot_edge_capacity,
+                layout=sh_mesh, backend="segment_sum"),
+            (state, ranks, hot), spec))
+        progs.append(Program(
+            "fused_query_step[pagerank,sharded]",
+            functools.partial(
+                fused_query_step, algo=pagerank,
+                hot_node_capacity=spec.hot_node_capacity,
+                hot_edge_capacity=spec.hot_edge_capacity,
+                backend="segment_sum", mesh=mesh),
+            _query_args(spec, state, pagerank), spec))
+    return progs
+
+
+def default_mesh():
+    """An all-device 1-axis mesh for the sharded catalog entries, or
+    ``None`` on a single device."""
+    devs = jax.devices()
+    if len(devs) < 2:
+        return None
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devs), ("shards",))
+
+
+def run_retrace_scenario(spec: Optional[GraphSpec] = None) -> List:
+    """The retrace pass's canned engine loop: one session, repeated
+    same-shape update batches and queries.  Round 1 warms every program
+    cache (session setup, the first exact compute, the first streaming
+    step — all legitimate traces, including the eager op wrappers the
+    host orchestration dispatches); rounds 2–3 replay identical
+    (shape, algorithm, geometry) work and must add **zero** traces.
+    Returns RT-RETRACE findings for anything that traced after warm-up.
+    """
+    from repro.analysis.retrace import TraceMonitor
+    from repro.api import session
+
+    spec = spec or GraphSpec()
+    rng = np.random.default_rng(0)
+    n = min(spec.node_capacity, 256)
+    src, dst = generators.gnm_edges(n, 512, seed=1)
+    chunk = 32
+
+    def round_(s):
+        s.add_edges(rng.integers(0, n, chunk).astype(np.int32),
+                    rng.integers(0, n, chunk).astype(np.int32))
+        s.query()
+
+    with TraceMonitor() as mon:
+        with session((src, dst), algorithm="pagerank",
+                     node_capacity=n, edge_capacity=2048) as s:
+            round_(s)
+            warm = mon.snapshot()
+            for _ in range(2):
+                round_(s)
+    return mon.check_warm(warm, scenario="engine-loop[pagerank]")

@@ -1,0 +1,172 @@
+"""Retrace detector: jit cache misses per function, asserted per loop.
+
+A jitted engine loop must trace each program **once** per
+(shape, algorithm, geometry) — weak_type drift (a python float where an
+f32 scalar was traced), an unhashable or freshly-constructed static
+argument, or a geometry knob changing per call all silently retrace every
+iteration, which shows up only as mysterious slowness.
+
+:class:`TraceMonitor` instruments tracing globally while active: it
+enables ``jax_log_compiles`` and captures the dispatch layer's
+"Finished tracing + transforming <name> for pjit" records with a private
+logging handler, counting traces per function name.  (The
+``jax.monitoring`` duration events fire for the same spans but do not
+carry the function name; the log line is the only place jax reports *what*
+retraced, and its format is pinned by jax's own compile-logging tests.)
+
+Two ways to assert:
+
+- **Warm-loop contract** (preferred, what the canned scenario uses):
+  run one warm-up iteration, :meth:`TraceMonitor.snapshot`, run more
+  identical iterations, then :meth:`TraceMonitor.check_warm` — a warm
+  loop must add **zero** traces, so every function that traced again is
+  a finding.  This is noise-free: eager op dispatch outside jit (the
+  engine's host orchestration) traces tiny ``add``/``_where`` wrappers
+  once per distinct shape during warm-up, which is normal and cached
+  thereafter.
+- **Budget contract**: :meth:`TraceMonitor.check` against explicit
+  per-function trace budgets, for tests that fabricate a
+  retrace-per-iteration loop and want the count in the diagnostic.
+
+Usage::
+
+    with TraceMonitor() as mon:
+        engine.add_edges(*warmup); engine.query()   # warm-up traces
+        warm = mon.snapshot()
+        for batch in stream:
+            engine.add_edges(*batch)
+            engine.query()
+    findings = mon.check_warm(warm)
+"""
+
+from __future__ import annotations
+
+import collections
+import logging
+import re
+from typing import Dict, List, Mapping, Optional
+
+import jax
+
+from repro.analysis.findings import Finding
+
+_TRACE_RE = re.compile(
+    r"Finished tracing \+ transforming (\S+) for pjit")
+
+
+class _CaptureHandler(logging.Handler):
+    def __init__(self, counter: collections.Counter):
+        super().__init__(level=logging.DEBUG)
+        self._counter = counter
+
+    def emit(self, record: logging.LogRecord) -> None:
+        try:
+            m = _TRACE_RE.search(record.getMessage())
+        except Exception:  # pragma: no cover - malformed record
+            return
+        if m:
+            self._counter[m.group(1)] += 1
+
+
+class TraceMonitor:
+    """Context manager counting jit traces per function name.
+
+    ``traces`` is a ``Counter`` of function name → trace count over the
+    monitored region; :meth:`check` turns it into findings against a
+    per-function budget.  Reentrant-safe for sequential use; do not nest.
+    """
+
+    #: the logger jax's trace/compile timing spans report through
+    _LOGGER = "jax._src.dispatch"
+    #: loggers that also turn chatty under jax_log_compiles — muted (not
+    #: captured) while the monitor is active
+    _MUTE = ("jax._src.interpreters.pxla",)
+
+    def __init__(self) -> None:
+        self.traces: collections.Counter = collections.Counter()
+        self._handler: Optional[_CaptureHandler] = None
+        self._null: Optional[logging.Handler] = None
+        self._prev_log_compiles: Optional[bool] = None
+        self._prev_propagate: Dict[str, bool] = {}
+
+    def __enter__(self) -> "TraceMonitor":
+        self._prev_log_compiles = bool(
+            getattr(jax.config, "jax_log_compiles", False))
+        jax.config.update("jax_log_compiles", True)
+        self._handler = _CaptureHandler(self.traces)
+        self._null = logging.NullHandler()
+        logging.getLogger(self._LOGGER).addHandler(self._handler)
+        # capture handlers are attached directly, so stop the per-trace
+        # WARNING records from also spamming the console: no propagation
+        # to the root handler, and a NullHandler so logging.lastResort
+        # (the handler-less stderr fallback) never kicks in either
+        for name in (self._LOGGER,) + self._MUTE:
+            lg = logging.getLogger(name)
+            self._prev_propagate[name] = lg.propagate
+            lg.propagate = False
+            lg.addHandler(self._null)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        logging.getLogger(self._LOGGER).removeHandler(self._handler)
+        for name, prev in self._prev_propagate.items():
+            lg = logging.getLogger(name)
+            lg.propagate = prev
+            lg.removeHandler(self._null)
+        self._prev_propagate = {}
+        self._handler = None
+        self._null = None
+        jax.config.update("jax_log_compiles", self._prev_log_compiles)
+
+    def snapshot(self) -> collections.Counter:
+        """A copy of the per-function trace counts so far — take one
+        after the warm-up iteration, diff with :meth:`check_warm`."""
+        return collections.Counter(self.traces)
+
+    def check_warm(self, warm: Mapping[str, int], *,
+                   scenario: str = "engine-loop") -> List[Finding]:
+        """Findings for every function that traced *after* the warm-up
+        snapshot.  A warm engine loop replays cached executables; any
+        post-warm-up trace means a static argument, weak_type or
+        geometry knob changes per call.
+        """
+        findings: List[Finding] = []
+        for name, count in sorted(self.traces.items()):
+            extra = count - warm.get(name, 0)
+            if extra > 0:
+                findings.append(Finding(
+                    pass_id="retrace", rule="RT-RETRACE",
+                    where=f"{scenario}:{name}",
+                    detail=f"{name!r} traced {extra}× after the warm-up "
+                           f"iteration ({count} total) — the loop "
+                           f"re-traces on identical (shape, algorithm, "
+                           f"geometry) input; a static argument, "
+                           f"weak_type or geometry knob is changing per "
+                           f"call, and every extra trace is a full "
+                           f"compile on the hot path"))
+        return findings
+
+    def check(self, max_traces: Mapping[str, int] | None = None, *,
+              default_max: int = 1,
+              scenario: str = "engine-loop") -> List[Finding]:
+        """Findings for every function that traced more than its budget.
+
+        ``max_traces`` maps function name → allowed traces (e.g. an engine
+        loop legitimately traces ``fused_query_step`` once per algorithm);
+        unnamed functions get ``default_max``.  ``scenario`` keys the
+        finding (stable ``where`` = ``scenario:function``).
+        """
+        budgets: Dict[str, int] = dict(max_traces or {})
+        findings: List[Finding] = []
+        for name, count in sorted(self.traces.items()):
+            allowed = budgets.get(name, default_max)
+            if count > allowed:
+                findings.append(Finding(
+                    pass_id="retrace", rule="RT-RETRACE",
+                    where=f"{scenario}:{name}",
+                    detail=f"{name!r} traced {count}× (budget {allowed}) "
+                           f"over the monitored loop — a static argument, "
+                           f"weak_type or geometry knob is changing per "
+                           f"call; every extra trace is a full "
+                           f"compile on the hot path"))
+        return findings

@@ -412,6 +412,7 @@ def build_layout(
     knobs.  ``weight_dtype`` selects compressed weight storage (bf16
     stream, f32 accumulation — see :func:`bake_weights`).
     """
+    record_trace("build_layout")
     if weight == "length" and lengths is None:
         lengths = state.edge_len  # streamed per-edge lengths, if any
     s = validate_weight_spec(weight, reverse=reverse, semiring=semiring,
@@ -455,6 +456,7 @@ def summary_layout(summary, *, chunk: int = CHUNK,
     would silently produce NaNs).  Traced inline — call it outside the
     power loop so padding happens once per query, not once per iteration.
     """
+    record_trace("summary_layout")
     s = resolve_semiring(semiring)
     baked = getattr(summary, "semiring", None)
     if baked is not None and baked != s.name:
@@ -585,6 +587,7 @@ def push(
     """
     s = resolve_semiring(semiring)
     if isinstance(layout, ShardedEdgeLayout):
+        record_trace("push[sharded]")
         return _push_sharded(values, layout, s=s, backend=backend, mask=mask,
                              tile_n=tile_n, chunk=chunk, interpret=interpret)
     if layout.semiring != s.name:
@@ -592,6 +595,7 @@ def push(
             f"push(semiring={s.name!r}) over a layout built for "
             f"{layout.semiring!r}; rebuild the layout for this semiring")
     backend = resolve_backend(backend)
+    record_trace(f"push[{backend}]")
     tile_n = tile_n if tile_n is not None else (
         layout.tile_n if layout.tile_n is not None else TILE_N)
     chunk = chunk if chunk is not None else (
@@ -766,11 +770,27 @@ def _push_sharded(
     return fn(*args)
 
 
-#: trace-time invocation counters (``push_coo`` today) — observability for
-#: "the compiled program contains zero unsorted pushes": counters tick when
+#: trace-time invocation counters — observability for "the compiled
+#: program contains zero unsorted pushes" and friends: counters tick when
 #: a Python call traces the primitive, so lowering a program fresh and
-#: reading the counter delta tells whether the unsorted fallback is in it.
+#: reading the counter delta tells what the program is built from.  Every
+#: hot entry point ticks its own name (``push[<backend>]``,
+#: ``push[sharded]``, ``push_coo``, ``build_layout``, ``summary_layout``);
+#: the jaxpr lint's JXP-UNSORTED-SCATTER rule is the structural
+#: generalization of the ``push_coo`` counter pin.
 _TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+def record_trace(name: str) -> None:
+    """Tick the trace counter for ``name``.
+
+    Call at trace time from any primitive whose presence in a compiled
+    program is a contract (the built-ins above tick themselves; plugins
+    and kernels may register their own names).  No-op at run time: jitted
+    bodies only execute this while tracing, so counter deltas measure
+    *program structure*, not call volume.
+    """
+    _TRACE_COUNTS[name] += 1
 
 
 def trace_count(name: str) -> int:
@@ -837,6 +857,7 @@ __all__ = [
     "build_layout",
     "default_interpret",
     "normalize_layout_spec",
+    "record_trace",
     "reset_trace_counts",
     "stream_rank",
     "trace_count",

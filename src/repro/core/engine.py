@@ -485,19 +485,27 @@ class VeilGraphEngine:
         cfg = self.config
         if cfg.mesh is None or cfg.rebalance_threshold is None:
             return False
-        from repro.graph.partition import (mesh_shard_count,
-                                           rebalance_sharded_layout)
+        from repro.graph.partition import (balanced_shard_slots,
+                                           mesh_shard_count,
+                                           rebalance_decision,
+                                           shard_slots)
 
         num_shards = (cfg.num_shards if cfg.num_shards is not None
                       else mesh_shard_count(cfg.mesh, cfg.mesh_axes))
-        slots, rebalanced, imbalance = rebalance_sharded_layout(
-            self.state,
-            num_shards=num_shards,
-            slots=self._shard_slots,
-            threshold=cfg.rebalance_threshold)
-        self.last_imbalance = imbalance
+        slots = self._shard_slots
+        if slots is None:
+            slots = jnp.asarray(
+                shard_slots(self.state.edge_capacity, num_shards))
+        # the measurement, the threshold compare and the recut signal all
+        # stay on device; exactly one (bool, f32) pair crosses to host per
+        # applied batch
+        should, imbalance = jax.device_get(rebalance_decision(
+            self.state, slots, jnp.float32(cfg.rebalance_threshold)))
+        self.last_imbalance = float(imbalance)
+        rebalanced = bool(should)
         if rebalanced:
-            self._shard_slots = slots
+            self._shard_slots = balanced_shard_slots(
+                self.state, num_shards=num_shards)
             self.rebalances += 1
             self._invalidate_layouts()
         return rebalanced

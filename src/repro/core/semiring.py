@@ -122,7 +122,14 @@ class Semiring:
 
     # ---- traced ops ------------------------------------------------------
     def combine(self, values: jax.Array, weight: jax.Array) -> jax.Array:
-        """``values ⊗ weight`` (elementwise, traced inline)."""
+        """``values ⊗ weight`` (elementwise, traced inline).
+
+        bf16-compressed edge weights widen to the values' dtype here —
+        storage is half the bytes, accumulation stays in the values'
+        precision (strict-promotion safe).
+        """
+        if weight.dtype != values.dtype:
+            weight = weight.astype(values.dtype)
         if self.mul == "times":
             return values * weight
         if self.mul == "plus":

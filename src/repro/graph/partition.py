@@ -335,6 +335,23 @@ def balanced_shard_slots(state: GraphState, *,
     return out.reshape(num_shards, e_s)
 
 
+@jax.jit
+def rebalance_decision(state: GraphState, slots: jax.Array,
+                       threshold: jax.Array
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """On-device rebalance verdict: ``(should_rebalance bool[],
+    imbalance f32[])`` for the current slot assignment.
+
+    One fused jitted program — live-count, imbalance and the threshold
+    compare all stay on device, so the engine's per-applied-batch
+    balance check transfers exactly one (bool, f32) pair to host instead
+    of syncing on an eager ``float(...)`` mid-pipeline.  ``threshold``
+    may be a python float (weak-typed scalar traces once).
+    """
+    imbalance = shard_imbalance(shard_live_counts(state, slots))
+    return imbalance > threshold, imbalance
+
+
 def rebalance_sharded_layout(
     state: GraphState,
     *,
@@ -349,9 +366,9 @@ def rebalance_sharded_layout(
     :func:`shard_slots` cut — what a mesh engine starts from).  Returns
     ``(slots', rebalanced, imbalance)``: the assignment to build the next
     layouts with, whether it changed, and the imbalance that was measured
-    (:func:`shard_imbalance` of :func:`shard_live_counts`, read back to
-    host — this runs between jitted steps, once per applied update batch,
-    never in the query hot loop).
+    (one :func:`rebalance_decision` verdict pair read back to host — this
+    runs between jitted steps, once per applied update batch, never in
+    the query hot loop).
 
     The recut itself is :func:`balanced_shard_slots`; the *migration*
     happens at the next :func:`build_sharded_layout` call, which gathers
@@ -362,11 +379,12 @@ def rebalance_sharded_layout(
     """
     if slots is None:
         slots = jnp.asarray(shard_slots(state.edge_capacity, num_shards))
-    imbalance = float(shard_imbalance(shard_live_counts(state, slots)))
-    if imbalance <= threshold:
-        return slots, False, imbalance
+    should, imbalance = jax.device_get(  # analysis: allow(AST-HOST-SYNC): the one verdict read per applied batch — the documented host boundary of the rebalance loop
+        rebalance_decision(state, slots, jnp.float32(threshold)))
+    if not bool(should):
+        return slots, False, float(imbalance)
     return (balanced_shard_slots(state, num_shards=num_shards), True,
-            imbalance)
+            float(imbalance))
 
 
 def place_sharded_layout(layout: B.ShardedEdgeLayout) -> B.ShardedEdgeLayout:
@@ -398,6 +416,7 @@ __all__ = [
     "host_edge_slice",
     "mesh_shard_count",
     "place_sharded_layout",
+    "rebalance_decision",
     "rebalance_sharded_layout",
     "shard_imbalance",
     "shard_live_counts",

@@ -198,15 +198,17 @@ def run_veilgraph_cell(mesh, mesh_name: str, *, nodes=2**25, edges=2**30,
         # pre-sharded E_K compaction gathered e_src/e_dst this way, ~9 GiB
         # per device at this shape) replicated the stream.  The bucket
         # exchange is an all-to-all of capacity-padded hot blocks — orders
-        # of magnitude smaller.
-        edge_buffer_bytes = 4 * edges
-        ag_max = hc.coll_max.get("all-gather", 0.0)
-        if ag_max >= edge_buffer_bytes:
+        # of magnitude smaller.  The gate is the shared analysis pass
+        # (repro.analysis.hlo_audit) so the dry-run and tools/analyze.py
+        # can never disagree about the budget.
+        from repro.analysis.hlo_audit import audit_cost, budgets_for_graph
+        audit = audit_cost(hc, budgets_for_graph(edges),
+                           program="veilgraph-cell[sharded]")
+        if audit:
             raise AssertionError(
-                f"summarized path traced an all-gather of {ag_max:.3e} B "
-                f">= one full edge buffer ({edge_buffer_bytes:.3e} B); "
-                f"the sharded summary construction must keep E-space "
-                f"buffers sharded")
+                "HLO collective audit failed for the sharded cell:\n"
+                + "\n".join(f"  {f}" for f in audit))
+        ag_max = hc.coll_max.get("all-gather", 0.0)
         # per-kernel roofline gate: every pinned push shape must re-model
         # within 10% of its committed HBM byte volume (AssertionError here
         # fails the dryrun cell, and CI with it)

@@ -16,6 +16,12 @@ Cost model (per-device, roofline-oriented):
 - collectives: all-reduce counts 2× buffer (ring all-reduce moves
   2·(n-1)/n ≈ 2×), others 1× their result buffer; multiplied by enclosing
   trip counts like everything else.
+
+This module only *measures*.  Budget enforcement (all-gather < one edge
+buffer, the capacity-padded all-to-all bound, peak-temp ceiling) lives in
+:mod:`repro.analysis.hlo_audit`, which both the pod-scale dry-run gate
+(``launch/dryrun.py``) and ``tools/analyze.py`` consume — one set of
+spec-derived budgets, two entry points.
 """
 
 from __future__ import annotations

@@ -53,7 +53,11 @@ def rope_cos_sin(positions: jax.Array, head_dim: int,
 def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
     """x: (..., S, H, hd); cos/sin: (..., S, hd/2) broadcast over heads."""
     half = x.shape[-1] // 2
-    x1, x2 = x[..., :half], x[..., half:]
+    # rotate in the cos/sin dtype (f32): bf16 activations widen explicitly
+    # — same numerics standard promotion gave implicitly, legal under
+    # jax_numpy_dtype_promotion=strict
+    x1 = x[..., :half].astype(cos.dtype)
+    x2 = x[..., half:].astype(cos.dtype)
     c = cos[..., None, :]  # add head axis
     s = sin[..., None, :]
     return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)

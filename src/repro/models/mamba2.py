@@ -51,6 +51,8 @@ def _split_proj(p, x, cfg: ModelConfig):
 def _causal_conv_full(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
     """Depthwise causal conv along S. xbc: (B,S,C); w: (k,C); b: (C,)."""
     k = w.shape[0]
+    w = w.astype(xbc.dtype)  # params follow activations (as in _split_proj)
+    b = b.astype(xbc.dtype)
     pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
     out = jnp.zeros_like(xbc)
     for i in range(k):  # k = 4: unrolled shifts beat a conv op for clarity

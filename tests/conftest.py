@@ -29,6 +29,14 @@ except ImportError:
 import jax
 import pytest
 
+# Strict dtype promotion for the whole suite: implicit cross-kind
+# promotions (f32 + python int is fine; f32 + i32 array is not) raise
+# instead of silently widening.  The hot path is f32/bf16-accumulate by
+# contract — the jaxpr lint (JXP-F64/JXP-WIDEN64) catches wide dtypes
+# structurally, and strict promotion catches the habits that create them
+# at the source level.  See docs/analysis.md.
+jax.config.update("jax_numpy_dtype_promotion", "strict")
+
 
 @pytest.fixture(autouse=True, scope="module")
 def _clear_jax_caches_per_module():

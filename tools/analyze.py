@@ -1,0 +1,161 @@
+#!/usr/bin/env python3
+"""Front door for the repro.analysis static-analysis passes.
+
+    PYTHONPATH=src python tools/analyze.py --all
+    PYTHONPATH=src python tools/analyze.py --pass ast,jaxpr
+    PYTHONPATH=src python tools/analyze.py --all --report artifacts/analysis_report.json
+
+Runs the selected passes (default ``--all``: jaxpr lint + HLO audit over
+the full program catalog, the retrace scenario, and the AST lint),
+compares every finding against ``benchmarks/analysis_baseline.json``, and
+exits non-zero iff any finding is NOT allowlisted there.  Stale baseline
+entries (fixed violations) are warnings — delete them.
+
+``--all`` forces ``xla_force_host_platform_device_count=8`` so the
+mesh-sharded programs (sharded push, distributed bucket-sort summary,
+sharded fused query) are analyzed on CPU exactly like the tier-1-sharded
+CI job runs them.  ``--update-baseline`` rewrites the baseline to accept
+the current findings — review the diff and fill in the reason strings
+before committing.
+"""
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+_PASSES = ("jaxpr", "hlo", "retrace", "ast")
+
+
+def _force_host_devices() -> None:
+    # must happen before jax initializes its backends
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8").strip()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="VeilGraph static-analysis passes")
+    ap.add_argument("--all", action="store_true",
+                    help="every pass, incl. mesh-sharded programs "
+                         "(forces 8 host devices)")
+    ap.add_argument("--pass", dest="passes", type=str, default=None,
+                    help=f"comma-separated subset of {_PASSES}")
+    ap.add_argument("--baseline", type=Path,
+                    default=REPO / "benchmarks" / "analysis_baseline.json")
+    ap.add_argument("--report", type=Path, default=None,
+                    help="write the JSON findings report here "
+                         "(CI uploads it as an artifact)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite --baseline accepting current findings "
+                         "(fill in reason strings before committing)")
+    args = ap.parse_args(argv)
+
+    passes = (list(_PASSES) if args.all or not args.passes
+              else [p.strip() for p in args.passes.split(",") if p.strip()])
+    for p in passes:
+        if p not in _PASSES:
+            ap.error(f"unknown pass {p!r}; expected subset of {_PASSES}")
+
+    if args.all or "hlo" in passes:
+        _force_host_devices()
+
+    from repro.analysis import findings as F
+
+    all_findings = []
+    notes = []
+
+    needs_programs = {"jaxpr", "hlo"} & set(passes)
+    if needs_programs:
+        from repro.analysis import programs as PR
+
+        spec = PR.GraphSpec()
+        mesh = PR.default_mesh()
+        if mesh is None:
+            notes.append("single device: mesh-sharded programs omitted "
+                         "(run with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
+        cat = PR.catalog(spec, mesh=mesh)
+        print(f"program catalog: {len(cat)} programs at "
+              f"N={spec.node_capacity} E={spec.edge_capacity} "
+              f"S={spec.num_shards} B={spec.batch}"
+              + (f" mesh={mesh.devices.size}dev" if mesh else ""))
+
+        if "jaxpr" in passes:
+            from repro.analysis import jaxpr_lint
+            for prog in cat:
+                got = jaxpr_lint.lint_jaxpr(
+                    prog.trace(), program=prog.name,
+                    en_threshold=prog.spec.en_threshold,
+                    edge_threshold=prog.spec.edge_threshold)
+                all_findings.extend(got)
+                print(f"  jaxpr  {prog.name}: {len(got)} finding(s)")
+        if "hlo" in passes:
+            from repro.analysis import hlo_audit
+            for prog in cat:
+                got = hlo_audit.audit_compiled(
+                    prog.compile(), prog.budgets, program=prog.name)
+                all_findings.extend(got)
+                print(f"  hlo    {prog.name}: {len(got)} finding(s)")
+
+    if "retrace" in passes:
+        from repro.analysis import programs as PR
+        got = PR.run_retrace_scenario()
+        all_findings.extend(got)
+        print(f"  retrace engine-loop[pagerank]: {len(got)} finding(s)")
+
+    if "ast" in passes:
+        from repro.analysis import ast_lint
+        files = ast_lint.iter_source_files()
+        got = ast_lint.lint_files(files)
+        all_findings.extend(got)
+        print(f"  ast    {len(files)} files: {len(got)} finding(s)")
+
+    baseline = F.load_baseline(args.baseline)
+    report = F.render_report(all_findings, baseline, passes_run=passes)
+    report["notes"] = notes
+
+    if args.report:
+        args.report.parent.mkdir(parents=True, exist_ok=True)
+        args.report.write_text(json.dumps(report, indent=1),
+                               encoding="utf-8")
+        print(f"report -> {args.report}")
+
+    if args.update_baseline:
+        args.baseline.parent.mkdir(parents=True, exist_ok=True)
+        existing = {e.key: e.reason for e in baseline}
+        rows = []
+        for f in sorted(all_findings, key=lambda f: f.key):
+            rows.append({"rule": f.rule, "where": f.where,
+                         "reason": existing.get(
+                             f.key, "TODO: justify or fix")})
+        args.baseline.write_text(
+            json.dumps({"allow": rows}, indent=1) + "\n", encoding="utf-8")
+        print(f"baseline rewritten with {len(rows)} entr(ies) -> "
+              f"{args.baseline}")
+        return 0
+
+    new, matched, stale = F.check(all_findings, baseline, passes_run=passes)
+    for f in matched:
+        print(f"  allowlisted: {f.key}")
+    for e in stale:
+        print(f"  STALE baseline entry (violation fixed — delete it): "
+              f"{e.key}")
+    if new:
+        print(f"\nanalyze: {len(new)} NEW finding(s) not in baseline:")
+        for f in new:
+            print(f"  {f}")
+        return 1
+    print(f"\nanalyze: OK — {len(all_findings)} finding(s), all "
+          f"allowlisted; passes: {', '.join(passes)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -35,6 +35,12 @@ SKIP_DIRS = {".git", ".pytest_cache", "artifacts", "node_modules",
 #: here must have a docstring (the LM substrate is quarantined and exempt;
 #: see README "Repo layout")
 PUBLIC_API_MODULES = [
+    "src/repro/analysis/ast_lint.py",
+    "src/repro/analysis/findings.py",
+    "src/repro/analysis/hlo_audit.py",
+    "src/repro/analysis/jaxpr_lint.py",
+    "src/repro/analysis/programs.py",
+    "src/repro/analysis/retrace.py",
     "src/repro/api.py",
     "src/repro/core/algorithm.py",
     "src/repro/core/backend.py",
