@@ -261,6 +261,85 @@ def _serving_cases(g, ranks, live_edges, *, iters, batch_sizes=(1, 8, 32)):
     return cases
 
 
+def _controller_cases(*, smoke: bool = False):
+    """``controller_*`` rows: the closed accuracy loop vs open-loop
+    full accuracy on one drifting synthetic stream.
+
+    Three sessions replay the identical stream: an exact oracle
+    (ground-truth ranks per step), a ``quality_target=0.95`` closed-loop
+    session, and the open-loop full-accuracy configuration (r=0, tiny Δ
+    — every churned vertex hot).  Per step we score the approximate
+    ranks against the oracle with RBO@100 and charge summarized work as
+    E_K + E_B pushed edges (refresh/fallback steps charge the full live
+    edge count — the controller pays for its exact recomputes).  The
+    returned meta dict carries the acceptance numbers ISSUE 9 pins:
+    closed-loop quality >= target with work strictly below open loop.
+    """
+    from repro.api import Action, session
+    from repro.graph.generators import gnm_edges
+    from repro.metrics.rbo import rbo_from_scores
+
+    n, m = (600, 4_000) if smoke else (2_000, 16_000)
+    steps = 4 if smoke else 10
+    chunk = 60 if smoke else 200
+    src, dst = gnm_edges(n, m, seed=7)
+    rng = np.random.default_rng(11)
+    stream = [(rng.integers(0, n, chunk).astype(np.int32),
+               rng.integers(0, n, chunk).astype(np.int32))
+              for _ in range(steps)]
+    caps = dict(node_capacity=n, edge_capacity=m + steps * chunk + 1024)
+
+    def _replay(label, **kw):
+        scores, works, wall = [], [], 0.0
+        with session((src, dst), algorithm="pagerank", **caps, **kw) as s:
+            for a, b in stream:
+                s.add_edges(a, b)
+                t0 = time.perf_counter()
+                res = s.query()
+                wall += time.perf_counter() - t0
+                st = res.stats
+                full = (st.action == "exact" or st.overflow_fallback
+                        or getattr(st, "refreshed", False))
+                works.append(st.num_edges if full else st.num_ek + st.num_eb)
+                scores.append(np.asarray(res.scores))
+        return scores, works, wall / steps * 1e6
+
+    exact_scores, _, _ = _replay(
+        "exact", on_query=lambda qid, view: Action.EXACT)
+    ctl_scores, ctl_work, ctl_us = _replay(
+        "closedloop", quality_target=0.95)
+    ol_scores, ol_work, ol_us = _replay(
+        "openloop", r=0.0, delta=1e-6)
+
+    active = exact_scores[-1] > -np.inf  # all rows; RBO masks via scores
+    def _quality(series):
+        vals = [float(rbo_from_scores(jnp.asarray(s), jnp.asarray(e),
+                                      depth=100))
+                for s, e in zip(series, exact_scores)]
+        return float(np.mean(vals)), float(np.min(vals))
+
+    q_ctl, q_ctl_min = _quality(ctl_scores)
+    q_ol, _ = _quality(ol_scores)
+    w_ctl = float(np.mean(ctl_work))
+    w_ol = float(np.mean(ol_work))
+    cases = [
+        ("controller_closedloop_query", ctl_us,
+         f"q={q_ctl:.4f},min={q_ctl_min:.4f},work={w_ctl:.0f}e/q"),
+        ("controller_openloop_full_query", ol_us,
+         f"q={q_ol:.4f},work={w_ol:.0f}e/q"),
+    ]
+    meta = {
+        "quality_target": 0.95,
+        "quality": q_ctl,
+        "quality_min": q_ctl_min,
+        "work_per_query": w_ctl,
+        "openloop_quality": q_ol,
+        "openloop_work_per_query": w_ol,
+        "stream": {"nodes": n, "edges": m, "steps": steps, "chunk": chunk},
+    }
+    return cases, meta
+
+
 def bench_sweep_backends(*, smoke: bool = False, nodes=50_000, edges=500_000):
     """Backend-vs-backend rows: a plus_times push + summarized PageRank
     sweep, and a min_plus push + summarized SSSP sweep, per backend on the
@@ -314,6 +393,8 @@ def bench_sweep_backends(*, smoke: bool = False, nodes=50_000, edges=500_000):
     cases.extend(_sharded_summary_cases(g, ranks, iters=iters,
                                         sweep_iters=sweep_iters))
     cases.extend(_serving_cases(g, ranks, live_edges, iters=iters))
+    controller_cases, controller_meta = _controller_cases(smoke=smoke)
+    cases.extend(controller_cases)
     records = [
         {"name": name, "us_per_call": round(us, 1), "derived": derived,
          # pallas rows carry _interp in the name when they ran in interpret
@@ -336,6 +417,9 @@ def bench_sweep_backends(*, smoke: bool = False, nodes=50_000, edges=500_000):
             "plus_times": [layout.tile_n, layout.tile_chunk],
             "min_plus": [mp_layout.tile_n, mp_layout.tile_chunk],
         },
+        # ISSUE 9 acceptance numbers: closed-loop quality/work vs the
+        # open-loop full-accuracy replay of the same drifting stream
+        "controller": controller_meta,
     }
     return cases, {"meta": meta, "rows": records}
 

@@ -37,6 +37,7 @@ import numpy as np
 from repro.analysis import hlo_audit
 from repro.core import backend as B
 from repro.core.algorithm import make_algorithm
+from repro.core.control import default_probe_ids
 from repro.core.fused import fused_query_step, fused_query_step_batched
 from repro.core.pagerank import build_summary
 from repro.graph import generators
@@ -194,12 +195,26 @@ def catalog(spec: Optional[GraphSpec] = None, *,
                 backend="segment_sum"),
             _query_args(spec, state, algo), spec))
 
-    # the serving engine's wave step: batched bank + row mask + the
-    # cold-start full_hot flag, exactly as GraphServingEngine.step drives it
+    # the closed-loop variant: drift estimator fused into the query step
+    # (repro.core.control) — the controller programs must clear the same
+    # gates (no host syncs; the drift scalars ride the stats transfer)
+    probes = default_probe_ids(spec.node_capacity, 64)
+    progs.append(Program(
+        "fused_query_step[pagerank,drift]",
+        functools.partial(
+            fused_query_step, algo=pagerank,
+            hot_node_capacity=spec.hot_node_capacity,
+            hot_edge_capacity=spec.hot_edge_capacity,
+            backend="segment_sum", with_drift=True),
+        _query_args(spec, state, pagerank) + (probes,), spec))
+
+    # the serving engine's wave step: batched bank + row mask + per-row
+    # cold flags, exactly as GraphServingEngine.step drives it
     bank = jax.tree_util.tree_map(
         lambda x: jnp.tile(x[None, ...], (spec.batch,) + (1,) * x.ndim),
         pagerank.init_state(state))
     row_mask = jnp.ones((spec.batch,), bool)
+    cold_rows = jnp.ones((spec.batch,), bool)
     st, _, deg, act, r, dd = _query_args(spec, state, pagerank)
     progs.append(Program(
         "serving_wave[pagerank,batched]",
@@ -208,7 +223,34 @@ def catalog(spec: Optional[GraphSpec] = None, *,
             hot_node_capacity=spec.hot_node_capacity,
             hot_edge_capacity=spec.hot_edge_capacity,
             backend="segment_sum"),
-        (st, bank, deg, act, r, dd, row_mask, jnp.bool_(True)), spec))
+        (st, bank, deg, act, r, dd, row_mask, cold_rows), spec))
+
+    # closed-loop serving wave: per-slot drift rides the row_delta
+    # transfer (with_drift=True returns the extra [B, 2] column)
+    progs.append(Program(
+        "serving_wave[pagerank,batched,drift]",
+        functools.partial(
+            fused_query_step_batched, algo=pagerank,
+            hot_node_capacity=spec.hot_node_capacity,
+            hot_edge_capacity=spec.hot_edge_capacity,
+            backend="segment_sum", with_drift=True),
+        (st, bank, deg, act, r, dd, row_mask, cold_rows, probes), spec))
+
+    # seed-local cold start: PPR's teleport-support seeds drive the
+    # reachability while_loop instead of full-active coverage — lints the
+    # growth-conditioned frontier expansion
+    ppr = make_algorithm("personalized-pagerank", seeds=(1, 5))
+    ppr_bank = jax.tree_util.tree_map(
+        lambda x: jnp.tile(x[None, ...], (spec.batch,) + (1,) * x.ndim),
+        ppr.init_state(state))
+    progs.append(Program(
+        "serving_wave[ppr,seed-cold]",
+        functools.partial(
+            fused_query_step_batched, algo=ppr,
+            hot_node_capacity=spec.hot_node_capacity,
+            hot_edge_capacity=spec.hot_edge_capacity,
+            backend="segment_sum"),
+        (st, ppr_bank, deg, act, r, dd, row_mask, cold_rows), spec))
 
     # --- the streaming apply step ------------------------------------------
     new_src = jnp.zeros((spec.apply_chunk,), jnp.int32)

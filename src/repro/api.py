@@ -282,6 +282,15 @@ def session(
                           r=0.3, delta=0.5, seeds=(0, 7), num_iters=50)
         veilgraph.session((src, dst), "hits", backend="pallas")
 
+    ``quality_target=`` (e.g. ``0.95``) switches the engine to
+    closed-loop quality control (:mod:`repro.core.control`): the fused
+    query step measures drift on device and a controller steers the
+    effective ``r``/``delta`` and exact-refresh cadence to keep
+    estimated error inside ``1 - quality_target``.  Knob precedence: a
+    knob you also pass explicitly (``quality_target=0.95, r=0.1``) is
+    pinned at your value — the controller only adjusts the knobs you
+    left to it.
+
     The five UDFs pass straight through to the engine.
     """
     init_src, init_dst, stream, node_hint, edge_hint = _resolve_source(
@@ -289,6 +298,11 @@ def session(
 
     cfg_over = {k: v for k, v in overrides.items() if k in _CONFIG_KEYS}
     algo_params = {k: v for k, v in overrides.items() if k not in _CONFIG_KEYS}
+    if cfg_over.get("quality_target") is not None:
+        # knob precedence: an explicitly passed r/delta wins over the
+        # controller — pin it unless the caller set control_* themselves
+        cfg_over.setdefault("control_r", "r" not in cfg_over)
+        cfg_over.setdefault("control_delta", "delta" not in cfg_over)
     # beta/num_iters/tol are EngineConfig fields only for the legacy
     # no-algorithm constructor; with an explicit algorithm they belong to
     # the algorithm itself, so forward them to the factory — and refuse to
@@ -375,6 +389,11 @@ def serve_session(
     engine exactly as in :func:`session` (capacities, hot-set knobs,
     backend, mesh) — ``algorithm`` only sets the engine's base workload
     for the initial exact compute; served queries each carry their own.
+    ``quality_target=`` enables the closed accuracy loop per serving
+    lane: each wave's per-slot drift rides the existing row-delta
+    transfer, a per-lane controller steers the effective knobs, and an
+    SLO breach re-marks the lane's live slots cold so the next wave
+    re-covers them (same knob precedence as :func:`session`).
     The underlying :class:`VeilGraphSession` stays reachable at
     ``.session`` and is closed by the serving engine's ``with``-exit.
     """

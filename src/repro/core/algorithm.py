@@ -70,6 +70,7 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as B
 from repro.core.hits import hits as _hits
 from repro.core.hits import summarized_hits as _summarized_hits
 from repro.core.hits import summarized_hits_batched as _summarized_hits_batched
@@ -148,6 +149,13 @@ class StreamingAlgorithm(abc.ABC):
     #: Empty (the default) declares nothing: legacy plugins with arbitrary
     #: state keys construct unchecked.
     state_dtypes: Dict[str, str] = {}
+    #: normalization mode for the drift estimator's signals
+    #: (:func:`repro.core.control.drift_signals`): ``"mass"`` divides the
+    #: residual by total |result| mass (scores, distances); ``"count"``
+    #: by the active-vertex count — for 0/1 changed-indicator residuals
+    #: (connected components' label flips), where result magnitudes are
+    #: ids and carry no error meaning.
+    drift_normalize: str = "mass"
     #: constructor knobs whose whole effect is captured by
     #: :meth:`init_state` (seed sets, source sets) — the per-query
     #: *identity* as opposed to numeric sweep knobs.  The serving engine
@@ -294,6 +302,51 @@ class StreamingAlgorithm(abc.ABC):
                     f"{self.name}: batch state[{key!r}] must have a "
                     f"leading batch axis of {batch} rows; got shape "
                     f"{tuple(arr.shape)}")
+
+    def drift_residual(
+        self,
+        state: AlgoState,
+        graph: GraphState,
+        *,
+        layouts=None,
+        backend: Optional[str] = None,
+    ) -> Optional[jax.Array]:
+        """f32[N_cap] fixed-point residual of ``state`` on the *live*
+        graph — the quality controller's drift signal (see
+        :mod:`repro.core.control`).
+
+        The residual is ``|F(x) − x|`` for one application of the
+        algorithm's exact update F over the full graph: zero everywhere
+        at the true fixed point, and concentrated on the vertices a
+        summarized sweep froze (or whose inputs the stream changed)
+        otherwise.  One O(E) push per query, computed inside the fused
+        step only when the controller is armed.
+
+        ``layouts`` is the cached tuple matching :attr:`layout_specs`.
+        Implementations must be pure gathers/pushes/elementwise ops (no
+        host syncs) and must accept batched ``[B, N]`` state leaves
+        unchanged (``push`` is batch-polymorphic).  The default returns
+        ``None`` — the fused step then falls back to the per-query churn
+        of :meth:`result_view` as a (weaker) drift proxy.
+        """
+        return None
+
+    def batched_cold_seeds(
+        self, batch_state: AlgoState,
+    ) -> Optional[jax.Array]:
+        """bool[B, N] seed masks for cold-start coverage, or ``None``.
+
+        A freshly seated serving slot has no churn history, so its first
+        waves need coverage beyond the churn-driven hot set.  Algorithms
+        whose results are nonzero/finite only on the set reachable from a
+        per-query seed (personalized PageRank's teleport support, the
+        traversal sources) return those seed masks here: the batched
+        fused step expands them to the reachability fixpoint and runs the
+        cold wave on that — *seed-local* instead of the whole active set.
+        The default ``None`` keeps full-active cold coverage (global
+        algorithms: PageRank, HITS, Katz, connected components).
+        """
+        return None
 
     def batched_selection_scores(
         self,
@@ -470,6 +523,24 @@ class PageRankAlgorithm(StreamingAlgorithm):
         )
         return {"ranks": ranks}, iters, row_delta
 
+    def drift_residual(self, state, graph, *, layouts=None, backend=None):
+        # |(1-β)·t + β·push(r) − r| — zero at pagerank()'s fixed point.
+        # Matches the exact update including the teleport normalization;
+        # the rarely-used dangling redistribution is omitted (it only
+        # shifts the residual by the dangling mass, same order as the
+        # drift being measured).
+        if layouts is None:
+            return None
+        r = state["ranks"]
+        incoming = B.push(r, layouts[0], backend=backend)
+        n_active = jnp.maximum(
+            graph.num_active_nodes().astype(jnp.float32), 1.0)
+        tele = jnp.where(self.teleport_by_n,
+                         (1.0 - self.beta) / n_active, 1.0 - self.beta)
+        new_r = jnp.where(graph.node_active,
+                          tele + self.beta * incoming, 0.0)
+        return jnp.abs(new_r - r)
+
     def result_view(self, state):
         return state["ranks"]
 
@@ -563,6 +634,24 @@ class PersonalizedPageRankAlgorithm(StreamingAlgorithm):
         )
         return {"ranks": ranks, "teleport": batch_state["teleport"]}, \
             iters, row_delta
+
+    def drift_residual(self, state, graph, *, layouts=None, backend=None):
+        # |(1-β)·t(v) + β·push(r) − r|: the personalized-teleport fixed
+        # point.  Batched states carry [B, N] ranks/teleports — push and
+        # the elementwise ops are batch-polymorphic.
+        if layouts is None:
+            return None
+        r = state["ranks"]
+        incoming = B.push(r, layouts[0], backend=backend)
+        new_r = jnp.where(graph.node_active,
+                          (1.0 - self.beta) * state["teleport"]
+                          + self.beta * incoming, 0.0)
+        return jnp.abs(new_r - r)
+
+    def batched_cold_seeds(self, batch_state):
+        # ranks are nonzero only on the set reachable from the teleport
+        # support — seed-local cold coverage suffices
+        return batch_state["teleport"] > 0.0
 
     def result_view(self, state):
         return state["ranks"]
@@ -751,6 +840,16 @@ class KatzAlgorithm(StreamingAlgorithm):
         )
         return {"katz": c}, iters, row_delta
 
+    def drift_residual(self, state, graph, *, layouts=None, backend=None):
+        # |β + α·push(c) − c| — zero at katz()'s fixed point
+        if layouts is None:
+            return None
+        c = state["katz"]
+        incoming = B.push(c, layouts[0], backend=backend)
+        new_c = jnp.where(graph.node_active,
+                          self.beta + self.alpha * incoming, 0.0)
+        return jnp.abs(new_c - c)
+
     def result_view(self, state):
         return state["katz"]
 
@@ -793,6 +892,7 @@ class ConnectedComponentsAlgorithm(StreamingAlgorithm):
     name = "connected-components"
     normalize_selection_scores = True
     rank_descending = False  # smaller labels first (component min ids)
+    drift_normalize = "count"  # residual = label flips, not id magnitudes
     semiring = "min_min"
     summary_weight = "unit"
     state_dtypes = {"labels": "int32", "churn": "float32"}
@@ -854,6 +954,22 @@ class ConnectedComponentsAlgorithm(StreamingAlgorithm):
         churn = (labels != batch_state["labels"]).astype(jnp.float32)
         return {"labels": labels, "churn": churn}, iters, \
             changed.astype(jnp.float32)
+
+    def drift_residual(self, state, graph, *, layouts=None, backend=None):
+        # 1.0 where one more min-label relaxation would still change a
+        # vertex (the fixpoint test of connected_components's relax step)
+        if layouts is None or len(layouts) < 2:
+            return None
+        lab = state["labels"]
+        relaxed = jnp.minimum(
+            lab,
+            jnp.minimum(
+                B.push(lab, layouts[0], semiring="min_min",
+                       backend=backend),
+                B.push(lab, layouts[1], semiring="min_min",
+                       backend=backend)))
+        changed = graph.node_active & (relaxed != lab)
+        return changed.astype(jnp.float32)
 
     def result_view(self, state):
         return state["labels"]
@@ -958,6 +1074,22 @@ class SSSPAlgorithm(StreamingAlgorithm):
                 "delta": _finite_churn(dist, batch_state["dist"])}, \
             iters, changed.astype(jnp.float32)
 
+    def drift_residual(self, state, graph, *, layouts=None, backend=None):
+        # how much one more full-graph relaxation would still lower the
+        # distances (finite-churn encoded: a reachability flip counts 1.0)
+        if layouts is None:
+            return None
+        dist = state["dist"]
+        incoming = B.push(dist, layouts[0], semiring="min_plus",
+                          backend=backend)
+        relaxed = jnp.where(state["source"], 0.0,
+                            jnp.minimum(dist, incoming))
+        return _finite_churn(relaxed, dist)
+
+    def batched_cold_seeds(self, batch_state):
+        # distances are finite only on the set reachable from the sources
+        return batch_state["source"]
+
     def result_view(self, state):
         return state["dist"]
 
@@ -1058,6 +1190,21 @@ class WidestPathAlgorithm(StreamingAlgorithm):
         return {"width": width, "source": batch_state["source"],
                 "delta": _finite_churn(width, batch_state["width"])}, \
             iters, changed.astype(jnp.float32)
+
+    def drift_residual(self, state, graph, *, layouts=None, backend=None):
+        # how much one more max_times relaxation would still widen paths
+        if layouts is None:
+            return None
+        width = state["width"]
+        incoming = B.push(width, layouts[0], semiring="max_times",
+                          backend=backend)
+        relaxed = jnp.where(state["source"], 1.0,
+                            jnp.maximum(width, incoming))
+        return jnp.abs(relaxed - width)
+
+    def batched_cold_seeds(self, batch_state):
+        # widths are nonzero only on the set reachable from the sources
+        return batch_state["source"]
 
     def result_view(self, state):
         return state["width"]

@@ -1,0 +1,246 @@
+"""Closed-loop quality control: drift estimation + an SLO-targeting knob
+controller (the GraphGuess-style adaptive correction of ROADMAP's
+"close the accuracy loop" item).
+
+The open-loop engine exposes the paper's model knobs (r, n, Δ) and
+whatever accuracy falls out of them is unmeasured at runtime.  This
+module closes the loop with two pieces:
+
+**On-device drift estimation** (:func:`drift_signals`) — computed inside
+the fused query step (no extra host sync; the two f32 scalars ride the
+existing :class:`~repro.core.fused.QueryStepStats` transfer):
+
+- ``drift_probe`` — the algorithm's own fixed-point residual
+  (:meth:`~repro.core.algorithm.StreamingAlgorithm.drift_residual`, e.g.
+  ``|(1-β)t + β·push(r) − r|`` for PageRank) sampled on a small fixed
+  vertex probe set and scaled to an estimate of the *relative* L1 error
+  of the whole vector.  This is the "sampled exact-vs-summarized delta":
+  at the true fixed point the residual is zero everywhere, so probe
+  residual mass measures how far the summarized state has drifted from
+  the exact answer.
+- ``drift_cold`` — the residual mass on vertices *outside* the hot set K,
+  as a fraction of total result mass.  A summarized sweep freezes cold
+  vertices by construction, so this is exactly the error the current
+  hot-set selection chose to ignore this query; the controller
+  accumulates it across queries (frozen error compounds until a refresh).
+
+**A host-side controller** (:class:`QualityController`) — pure python
+floats, no device work — that turns ``quality_target`` (e.g. 0.95) into
+an error budget and steers two things per query/wave:
+
+- *hot-set sizing*: multiplicative tighten/relax of the effective ``r``
+  and ``Δ`` knobs (both runtime scalars — adjusting them never
+  recompiles) with a deadband, so the hot set grows under drift and
+  shrinks back when the stream quiets down;
+- *refresh cadence*: when the accumulated error estimate exceeds the
+  budget the controller requests a refresh — the engine recomputes
+  exactly (serving: the next wave re-runs every live slot with full
+  coverage), resetting the accumulated drift to zero.
+
+Knob precedence: an explicitly passed ``r``/``delta`` wins over the
+controller (``adjust_r=False`` / ``adjust_delta=False`` — see
+:func:`repro.api.session`).  The estimator is deliberately conservative
+(``gain`` inflates the one-sweep residual toward the true error bound
+``resid/(1−contraction)``), so the measured rank quality typically sits
+well above the target while summarized work stays far below the
+open-loop full-accuracy configuration — the numbers recorded in
+``BENCH_sweeps.json`` (``controller_*`` rows).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def default_probe_ids(node_capacity: int, num_probes: int = 64) -> jax.Array:
+    """A fixed, deterministic probe set: ``num_probes`` vertex ids strided
+    evenly across the id space.  Static shape (jit-friendly), independent
+    of the stream — the same vertices are probed every query, so
+    successive probe readings are comparable."""
+    num = max(1, min(int(num_probes), int(node_capacity)))
+    stride = max(node_capacity // num, 1)
+    ids = (np.arange(num, dtype=np.int64) * stride) % node_capacity
+    return jnp.asarray(ids, jnp.int32)
+
+
+def drift_signals(
+    resid: jax.Array,
+    result: jax.Array,
+    hot: jax.Array,
+    active: jax.Array,
+    probe_ids: jax.Array,
+    *,
+    normalize: str = "mass",
+) -> Tuple[jax.Array, jax.Array]:
+    """The two on-device drift scalars from one residual vector.
+
+    ``resid`` is the per-vertex fixed-point residual (f32[N], >= 0 where
+    meaningful), ``result`` the algorithm's result view (any dtype),
+    ``hot``/``active`` the wave's hot and active masks, ``probe_ids`` the
+    fixed probe set.  Everything is gathers + reductions — no scatters,
+    no host syncs; returns ``(drift_probe, drift_cold)`` f32 scalars,
+    both normalized so they read as *relative* L1 error estimates:
+    ``normalize="mass"`` divides by total |result| mass (the ranking /
+    distance workloads), ``"count"`` by the active-vertex count (for
+    0/1 changed-indicator residuals, e.g. connected components' label
+    flips — see ``StreamingAlgorithm.drift_normalize``).
+
+    Non-finite entries (±∞ sentinels of the min/max-semiring workloads)
+    are excluded from both the residual and the mass — a vertex that is
+    unreachable in both states contributes nothing, while reachability
+    flips show up through the residual's own churn encoding.
+    """
+    res_f = result.astype(jnp.float32)
+    resid = resid.astype(jnp.float32)
+    finite = active & jnp.isfinite(res_f) & jnp.isfinite(resid)
+    resid = jnp.where(finite, jnp.maximum(resid, 0.0), 0.0)
+    n_active = jnp.maximum(jnp.sum(active.astype(jnp.float32)), 1.0)
+    if normalize == "count":
+        mass = n_active
+    else:
+        mass = jnp.maximum(
+            jnp.sum(jnp.where(finite, jnp.abs(res_f), 0.0)), 1e-30)
+
+    # residual mass the hot-set selection chose to freeze this query
+    drift_cold = jnp.sum(jnp.where(hot, 0.0, resid)) / mass
+
+    # sampled residual on the fixed probe set, extrapolated to the full
+    # active set: mean probe residual × n_active ≈ total residual mass
+    p_resid = resid[probe_ids]
+    p_live = finite[probe_ids].astype(jnp.float32)
+    p_mean = (jnp.sum(p_resid * p_live)
+              / jnp.maximum(jnp.sum(p_live), 1.0))
+    drift_probe = p_mean * n_active / mass
+    return drift_probe, drift_cold
+
+
+@dataclass
+class ControlDecision:
+    """One controller step's output: the knobs to use next, the current
+    error estimate, and whether a refresh (exact recompute / full-coverage
+    wave) is required to stay inside the SLO."""
+
+    refresh: bool
+    r_eff: float
+    delta_eff: float
+    err_est: float
+    quality_est: float
+
+
+class QualityController:
+    """Host-side SLO controller: drift in, effective knobs + refresh out.
+
+    ``quality_target`` in (0, 1) sets the error budget
+    ``1 − quality_target``.  Per observation (one query / one serving
+    wave) the controller
+
+    1. accumulates ``drift_cold`` (frozen-error compounds until a
+       refresh) and takes ``err = gain · max(drift_probe, accum)`` —
+       ``gain`` inflates the one-sweep residual toward the true error
+       bound ``resid / (1 − contraction)``, erring conservative;
+    2. requests a **refresh** when ``err`` exceeds the budget (the
+       caller recomputes exactly and then calls :meth:`refreshed`);
+    3. steers the knobs multiplicatively with a deadband: *tighten*
+       (×``tighten`` < 1 → bigger hot set) above ``tighten_at`` of the
+       budget, *relax* (×``relax`` > 1 → smaller hot set, less work)
+       below ``relax_at`` of it, clamped to ``r_bounds``/
+       ``delta_bounds``.  ``adjust_r=False`` / ``adjust_delta=False``
+       pin a knob (explicit user knobs win — see
+       :func:`repro.api.session`).
+
+    All state is python floats — observing never touches the device; the
+    caller feeds it the two scalars that already ride the per-query
+    stats transfer.
+    """
+
+    def __init__(
+        self,
+        quality_target: float,
+        *,
+        r0: float,
+        delta0: float,
+        adjust_r: bool = True,
+        adjust_delta: bool = True,
+        gain: float = 3.0,
+        tighten: float = 0.5,
+        relax: float = 1.35,
+        tighten_at: float = 0.5,
+        relax_at: float = 0.125,
+        r_bounds: Tuple[float, float] = (1e-3, 4.0),
+        delta_bounds: Tuple[float, float] = (1e-4, 16.0),
+    ):
+        if not 0.0 < quality_target < 1.0:
+            raise ValueError(
+                f"quality_target must be in (0, 1); got {quality_target}")
+        self.quality_target = float(quality_target)
+        self.budget = 1.0 - self.quality_target
+        self.adjust_r = bool(adjust_r)
+        self.adjust_delta = bool(adjust_delta)
+        self.gain = float(gain)
+        self.tighten = float(tighten)
+        self.relax = float(relax)
+        self.tighten_at = float(tighten_at)
+        self.relax_at = float(relax_at)
+        self.r_bounds = (float(r_bounds[0]), float(r_bounds[1]))
+        self.delta_bounds = (float(delta_bounds[0]), float(delta_bounds[1]))
+        self.r_eff = float(np.clip(r0, *self.r_bounds))
+        self.delta_eff = float(np.clip(delta0, *self.delta_bounds))
+        # accumulated frozen (cold) drift since the last refresh, and the
+        # last total error estimate — observability for stats rows
+        self.accum = 0.0
+        self.last_err = 0.0
+        self.refreshes = 0
+        self.observations = 0
+
+    def observe(self, drift_probe: float,
+                drift_cold: float) -> ControlDecision:
+        """Fold one query/wave's drift reading into the loop.
+
+        Two error readings drive two different levers: the *instantaneous*
+        estimate (this query's probe residual / freshly frozen mass)
+        steers the knobs — so a quiet stream relaxes them even while old
+        frozen error persists — while the *accumulated* estimate (probe +
+        compounded cold drift since the last refresh) gates the refresh
+        decision, because only an exact recompute can pay that debt."""
+        self.observations += 1
+        probe = max(float(drift_probe), 0.0)
+        cold = max(float(drift_cold), 0.0)
+        self.accum += cold
+        inst = self.gain * max(probe, cold)
+        err = self.gain * max(probe, self.accum)
+        self.last_err = err
+        refresh = err > self.budget
+
+        if inst > self.tighten_at * self.budget:
+            if self.adjust_r:
+                self.r_eff = max(self.r_eff * self.tighten,
+                                 self.r_bounds[0])
+            if self.adjust_delta:
+                self.delta_eff = max(self.delta_eff * self.tighten,
+                                     self.delta_bounds[0])
+        elif inst < self.relax_at * self.budget:
+            if self.adjust_r:
+                self.r_eff = min(self.r_eff * self.relax, self.r_bounds[1])
+            if self.adjust_delta:
+                self.delta_eff = min(self.delta_eff * self.relax,
+                                     self.delta_bounds[1])
+
+        return ControlDecision(
+            refresh=refresh,
+            r_eff=self.r_eff,
+            delta_eff=self.delta_eff,
+            err_est=err,
+            quality_est=max(0.0, 1.0 - err),
+        )
+
+    def refreshed(self) -> None:
+        """The caller ran an exact recompute (or a full-coverage wave):
+        the summarized baseline is accurate again, so accumulated frozen
+        drift resets to zero."""
+        self.accum = 0.0
+        self.refreshes += 1

@@ -123,6 +123,22 @@ class EngineConfig:
     # contiguous-cut behaviour); rebalances are counted in
     # `engine.rebalances`.
     rebalance_threshold: Optional[float] = 1.0
+    # closed-loop quality control (repro.core.control): an accuracy SLO in
+    # (0, 1) — e.g. 0.95 — that replaces open-loop r/Δ tuning.  The fused
+    # query step additionally computes an on-device drift estimate (the
+    # algorithm's fixed-point residual sampled on `drift_probes` fixed
+    # vertices + the residual mass frozen outside K), and a host-side
+    # QualityController steers the *effective* r/Δ and requests exact
+    # refreshes to keep the estimated error inside 1 - quality_target.
+    # control_r/control_delta=False pin a knob at its configured value
+    # (knob precedence: an explicitly passed r/delta wins — repro.api
+    # clears the matching control_* flag).  None = open loop (no drift
+    # computation, no controller).  Requires fused=True and an algorithm
+    # with supports_fused.
+    quality_target: Optional[float] = None
+    control_r: bool = True
+    control_delta: bool = True
+    drift_probes: int = 64
 
 
 @dataclass
@@ -155,6 +171,15 @@ class QueryStats:
     # imbalance past the threshold and the edge partition was recut
     rebalanced: bool = False
     algorithm: str = "pagerank"
+    # closed-loop quality columns (quality_target engines only): the drift
+    # estimate this query observed, the controller's error-based quality
+    # estimate, the effective knobs it chose, and whether it forced an
+    # exact refresh to stay inside the SLO
+    drift: float = 0.0
+    quality_est: float = 1.0
+    r_eff: float = 0.0
+    delta_eff: float = 0.0
+    refreshed: bool = False
 
     @property
     def vertex_ratio(self) -> float:
@@ -244,6 +269,29 @@ class VeilGraphEngine:
         self._pending_removals: List = []
         self._pending_count = 0
         self._pending_removal_count = 0
+        # closed-loop quality control: host-side SLO controller + fixed
+        # on-device probe set (built once; rides the fused step under
+        # with_drift=True at zero extra host syncs)
+        self.controller = None
+        self._probe_ids = None
+        if config.quality_target is not None:
+            from repro.core.control import (QualityController,
+                                            default_probe_ids)
+
+            if not (config.fused and self.algorithm.supports_fused):
+                raise ValueError(
+                    "quality_target requires the fused query path "
+                    f"(fused=True and a supports_fused algorithm; got "
+                    f"fused={config.fused}, "
+                    f"algorithm={self.algorithm.name!r})")
+            self.controller = QualityController(
+                config.quality_target,
+                r0=config.r, delta0=config.delta,
+                adjust_r=config.control_r,
+                adjust_delta=config.control_delta,
+            )
+            self._probe_ids = default_probe_ids(
+                config.node_capacity, config.drift_probes)
         # updates integrated while serving repeat-last answers — lets
         # policies threshold on staleness, not just the current batch
         self._stale_updates = 0
@@ -629,17 +677,25 @@ class VeilGraphEngine:
             self.ranks.block_until_ready()
             self.deg_prev = self._degree_snapshot()
             self.active_prev = jnp.copy(self.state.node_active)
+            if self.controller is not None:
+                # an exact recompute is a refresh: accumulated drift resets
+                self.controller.refreshed()
+                st.refreshed = True
         elif cfg.fused and self.algorithm.supports_fused:
             # APPROXIMATE, single fused XLA program for any algorithm
             from repro.core.fused import fused_query_step
 
+            ctl = self.controller
+            r_now = ctl.r_eff if ctl is not None else cfg.r
+            delta_now = ctl.delta_eff if ctl is not None else cfg.delta
             new_state, qs = fused_query_step(
                 self.state,
                 self.algo_state,
                 self.deg_prev,
                 self.active_prev,
-                jnp.float32(cfg.r),
-                jnp.float32(cfg.delta),
+                jnp.float32(r_now),
+                jnp.float32(delta_now),
+                self._probe_ids,
                 algo=self.algorithm,
                 hot_node_capacity=cfg.hot_node_capacity,
                 hot_edge_capacity=cfg.hot_edge_capacity,
@@ -650,12 +706,16 @@ class VeilGraphEngine:
                 layouts=self.edge_layouts(),
                 backend=self.backend,
                 shard_bucket_capacity=cfg.shard_hot_edge_capacity,
+                with_drift=ctl is not None,
             )
             if bool(qs.used_fallback):
                 # capacities exceeded: the summarized state is invalid;
                 # discard it and recompute exactly (graceful degradation)
                 self._run_exact(st)
                 qs = qs._replace(iterations=st.iterations)
+                if ctl is not None:
+                    ctl.refreshed()  # exact fallback = accurate baseline
+                    st.refreshed = True
             else:
                 self.algo_state = new_state
             self.ranks.block_until_ready()
@@ -668,6 +728,26 @@ class VeilGraphEngine:
             st.num_eb = int(qs.num_eb)
             st.iterations = int(qs.iterations)
             st.overflow_fallback = bool(qs.used_fallback)
+            if ctl is not None and not st.overflow_fallback:
+                # fold the drift reading (rode the stats transfer above)
+                # into the loop: knobs for the *next* query, and possibly
+                # an exact refresh to pull the state back inside the SLO
+                dec = ctl.observe(float(qs.drift_probe),
+                                  float(qs.drift_cold))
+                st.drift = max(float(qs.drift_probe), float(qs.drift_cold))
+                st.r_eff = float(r_now)
+                st.delta_eff = float(delta_now)
+                st.quality_est = dec.quality_est
+                if dec.refresh:
+                    self._run_exact(st)
+                    self.ranks.block_until_ready()
+                    ctl.refreshed()
+                    st.refreshed = True
+                    st.quality_est = 1.0
+            elif ctl is not None:
+                st.r_eff = float(r_now)
+                st.delta_eff = float(delta_now)
+                st.quality_est = 1.0
             self.deg_prev = self._degree_snapshot()
             self.active_prev = jnp.copy(self.state.node_active)
         else:  # APPROXIMATE — unfused reference path

@@ -37,7 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.graph.graph import GraphState
-from repro.core.hotset import select_hot_set
+from repro.core.hotset import _frontier_sweep, select_hot_set
 from repro.core.pagerank import (build_summary, pagerank,
                                  summarized_pagerank)
 
@@ -52,6 +52,35 @@ class QueryStepStats(NamedTuple):
     num_eb: jax.Array
     iterations: jax.Array
     used_fallback: jax.Array  # bool
+    # drift estimator outputs (repro.core.control) — populated only under
+    # with_drift=True; they ride the same single stats transfer, so the
+    # quality controller costs no extra host sync
+    drift_probe: jax.Array = 0.0  # sampled fixed-point residual (relative)
+    drift_cold: jax.Array = 0.0   # residual mass frozen outside K (relative)
+
+
+def _drift_from_state(algo, new_state, old_state, graph, hot, probe_ids,
+                      *, layouts, backend):
+    """(drift_probe, drift_cold) for one fused step — the algorithm's
+    fixed-point residual when it defines one, else the per-query churn of
+    its result view as a proxy.  Works unchanged for batched ``[B, N]``
+    states (push is batch-polymorphic); batched callers vmap the signal
+    reduction instead."""
+    from repro.core.algorithm import _finite_churn
+    from repro.core.control import drift_signals
+
+    resid = algo.drift_residual(
+        new_state, graph, layouts=layouts, backend=backend)
+    if resid is None:
+        resid = _finite_churn(algo.result_view(new_state),
+                              algo.result_view(old_state))
+    result = algo.result_view(new_state)
+    if result.ndim == 1:
+        return drift_signals(resid, result, hot, graph.node_active,
+                             probe_ids, normalize=algo.drift_normalize)
+    sig = functools.partial(drift_signals, normalize=algo.drift_normalize)
+    return jax.vmap(sig, in_axes=(0, 0, None, None, None))(
+        resid, result, hot, graph.node_active, probe_ids)
 
 
 @functools.partial(
@@ -131,7 +160,7 @@ def approximate_query_step(
     static_argnames=(
         "algo", "hot_node_capacity", "hot_edge_capacity",
         "n", "delta_hop_cap", "degree_mode", "expand_both", "backend",
-        "mesh", "mesh_axes", "shard_bucket_capacity",
+        "mesh", "mesh_axes", "shard_bucket_capacity", "with_drift",
     ),
 )
 def fused_query_step(
@@ -141,6 +170,7 @@ def fused_query_step(
     active_prev: jax.Array,
     r: jax.Array,
     delta: jax.Array,
+    probe_ids: jax.Array | None = None,
     *,
     algo,
     hot_node_capacity: int,
@@ -154,6 +184,7 @@ def fused_query_step(
     mesh=None,
     mesh_axes=None,
     shard_bucket_capacity: int | None = None,
+    with_drift: bool = False,
 ):
     """One summarized query for *any* :class:`StreamingAlgorithm`.
 
@@ -178,6 +209,13 @@ def fused_query_step(
     whole query step compiles sharded with zero unsorted ``push_coo``
     calls.  ``backend`` picks the propagation implementation inside each
     shard for the summarized sweep and the frozen big-vertex pass.
+
+    ``probe_ids`` (i32[P]) + static ``with_drift=True`` additionally
+    compute the on-device drift estimator (:mod:`repro.core.control`):
+    the algorithm's fixed-point residual sampled on the probe set and its
+    mass outside the hot set, folded into the returned stats'
+    ``drift_probe``/``drift_cold`` fields — same single host transfer,
+    no extra sync.
 
     Returns ``(new_algo_state, QueryStepStats)``.  Like the specialized
     path, overflow does not branch on device — the caller discards
@@ -228,6 +266,12 @@ def fused_query_step(
         iterations=iters,
         used_fallback=summaries_overflow(summaries),
     )
+    if with_drift:
+        drift_probe, drift_cold = _drift_from_state(
+            algo, new_state, algo_state, state, hot, probe_ids,
+            layouts=layouts, backend=backend)
+        stats = stats._replace(drift_probe=drift_probe,
+                               drift_cold=drift_cold)
     return new_state, stats
 
 
@@ -241,7 +285,7 @@ def fused_query_step(
     static_argnames=(
         "algo", "hot_node_capacity", "hot_edge_capacity",
         "n", "delta_hop_cap", "degree_mode", "expand_both", "backend",
-        "mesh", "mesh_axes", "shard_bucket_capacity",
+        "mesh", "mesh_axes", "shard_bucket_capacity", "with_drift",
     ),
 )
 def fused_query_step_batched(
@@ -252,7 +296,8 @@ def fused_query_step_batched(
     r: jax.Array,
     delta: jax.Array,
     row_mask: jax.Array,
-    full_hot: jax.Array | None = None,
+    cold_rows: jax.Array | None = None,
+    probe_ids: jax.Array | None = None,
     *,
     algo,
     hot_node_capacity: int,
@@ -266,6 +311,7 @@ def fused_query_step_batched(
     mesh=None,
     mesh_axes=None,
     shard_bucket_capacity: int | None = None,
+    with_drift: bool = False,
 ):
     """One summarized wave for B concurrent queries of one algorithm.
 
@@ -286,19 +332,38 @@ def fused_query_step_batched(
       live) freezing finished/vacant serving slots so they stop
       contributing work and report zero delta.
 
-    ``full_hot`` (traced bool scalar, optional) widens the wave's hot
-    set to the whole active vertex set.  The paper's selection is driven
+    ``cold_rows`` (traced bool[B], optional) marks freshly seated slots
+    that have not yet converged once.  The paper's selection is driven
     by degree churn and score volatility *since the last measurement
-    point* — a freshly seated query has neither (its state is brand
-    new), so its cold-start waves need full coverage, exactly as the
-    single-query protocol computes initial results over all of G before
-    streaming.  The serving engine raises the flag while any live slot
-    has not yet converged once; on a quiet graph this makes the wave a
-    batched full-width sweep (capacities permitting — bounded caps
-    overflow into the exact fallback as usual).
+    point* — a cold query has neither (its state is brand new), so its
+    first waves need coverage beyond the churn-selected K, exactly as
+    the single-query protocol computes initial results over all of G
+    before streaming.  Instead of widening to the whole active set, the
+    wave expands the cold rows' **seed-local reachability**: the
+    algorithm's :meth:`~repro.core.algorithm.StreamingAlgorithm.\
+batched_cold_seeds` masks (PPR teleport support, SSSP/widest sources)
+    are OR-reduced over the live cold rows and grown to their forward
+    reachability fixpoint in a growth-conditioned ``while_loop`` — zero
+    sweeps when no row is cold.  The fixpoint is closed under out-edges,
+    so no hot→cold edge exists: E_K contains every edge among reachable
+    vertices, unreachable cold vertices hold their ⊕-identity values,
+    and the seed-local wave is result-identical to the old full-width
+    one (bitwise for the min/max semirings).  Algorithms without seed
+    structure (``batched_cold_seeds() is None`` — global workloads like
+    PageRank/CC) fall back to full-active coverage when any live row is
+    cold.  Capacities permitting — bounded caps overflow into the exact
+    fallback as usual.
+
+    ``probe_ids`` + static ``with_drift=True`` additionally compute the
+    per-slot drift estimator (:mod:`repro.core.control`) and return a
+    fourth value ``row_drift f32[B, 2]`` (columns: drift_probe,
+    drift_cold per slot, zeroed for vacant rows), riding the same
+    transfer as ``row_delta`` — no extra host sync.  The wave-level
+    stats carry the max over live slots.
 
     Returns ``(new_batch_state, QueryStepStats, row_delta f32[B])`` —
-    stats describe the shared wave (hot-set sizes, E_K/E_B, overflow);
+    plus ``row_drift`` under ``with_drift`` — where stats describe the
+    shared wave (hot-set sizes, E_K/E_B, overflow);
     ``row_delta`` is the per-slot convergence signal the serving engine's
     harvest step compares against each request's tolerance.  Overflow
     semantics are unchanged: no device-side branch, the caller discards
@@ -324,8 +389,31 @@ def fused_query_step_batched(
         degree_mode=degree_mode, expand_both=expand_both,
         normalize_scores=algo.normalize_selection_scores,
     )
-    if full_hot is not None:
-        hot = hot | (state.node_active & full_hot)
+    if cold_rows is not None:
+        live_cold = cold_rows & row_mask
+        any_cold = jnp.any(live_cold)
+        seeds = algo.batched_cold_seeds(batch_state)
+        if seeds is None:
+            # no per-query seed structure (global workloads): cold-start
+            # coverage is the whole active set, as before
+            hot = hot | (state.node_active & any_cold)
+        else:
+            # seed-local delta expansion: grow the live cold rows' seed
+            # union to its forward-reachability fixpoint.  Closed under
+            # out-edges ⇒ no hot→cold edge ⇒ identical results to full
+            # coverage, at seed-local cost.  Initial continue flag is
+            # any_cold, so a wave with no cold rows runs zero sweeps.
+            seed_mask = (jnp.any(seeds & live_cold[:, None], axis=0)
+                         & state.node_active)
+
+            def _grow(carry):
+                mark, _ = carry
+                nxt = _frontier_sweep(state, mark, both=False)
+                return nxt, jnp.any(nxt != mark)
+
+            reach, _ = jax.lax.while_loop(
+                lambda c: c[1], _grow, (seed_mask, any_cold))
+            hot = hot | reach
         hstats = hstats._replace(num_hot=jnp.sum(hot.astype(jnp.int32)))
     extra = ({} if shard_bucket_capacity is None
              else {"shard_bucket_capacity": shard_bucket_capacity})
@@ -351,4 +439,13 @@ def fused_query_step_batched(
         iterations=iters,
         used_fallback=summaries_overflow(summaries),
     )
+    if with_drift:
+        probe_b, cold_b = _drift_from_state(
+            algo, new_state, batch_state, state, hot, probe_ids,
+            layouts=layouts, backend=backend)
+        live = row_mask.astype(jnp.float32)
+        row_drift = jnp.stack([probe_b, cold_b], axis=-1) * live[:, None]
+        stats = stats._replace(drift_probe=jnp.max(probe_b * live),
+                               drift_cold=jnp.max(cold_b * live))
+        return new_state, stats, row_delta, row_drift
     return new_state, stats, row_delta

@@ -114,10 +114,18 @@ def select_hot_set(
     else:
         was_seen = active_prev
     is_new = active & ~was_seen
+    # Zero-prior-degree audit: the paper's relative-degree-change test
+    # divides by deg_prev, which is 0 for brand-new vertices and for
+    # pre-existing zero-degree ones (sinks under out-degree mode).  Both
+    # paths are deterministic and division-free here:
+    #  - brand-new vertices (active now, unseen before) are unconditionally
+    #    hot via `is_new`, regardless of r — a vertex with no prior result
+    #    has nothing valid to freeze;
+    #  - the ratio clamps its denominator to >= 1, so it is always finite
+    #    (never NaN/inf) and only *consulted* where deg_prev > 0 — the
+    #    deg_prev == 0 branch of `changed` triggers purely on gaining
+    #    degree, at any r including r = inf.
     ratio = jnp.abs(deg_now_f / jnp.maximum(deg_prev_f, 1.0) - 1.0)
-    # pre-existing vertices: threshold on relative degree change.  A vertex
-    # whose degree was 0 at t-1 but existed (e.g. a sink under out-degree
-    # mode) triggers only when it gains degree.
     changed = jnp.where(deg_prev > 0, ratio > r, deg_now > 0)
     k_r = active & (is_new | (was_seen & changed))
 

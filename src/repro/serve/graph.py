@@ -114,22 +114,41 @@ class ServeStats:
     overflow_fallbacks: int = 0
     occupancy_sum: float = 0.0
     wave_latencies_s: List[float] = field(default_factory=list)
+    # closed-loop quality columns (quality_target engines only): refresh
+    # count across lanes, the last wave's worst-slot drift reading, and
+    # the controller's current/worst-case quality estimate
+    refreshes: int = 0
+    last_drift: float = 0.0
+    quality_est: float = 1.0
+    min_quality_est: float = 1.0
 
     @property
     def queries_per_s(self) -> float:
-        """Completed queries per second of wave wall time."""
-        return self.queries_completed / self.wall_s if self.wall_s else 0.0
+        """Completed queries per second of wave wall time.  Guarded: a
+        run with zero waves (or waves too fast for the clock to resolve)
+        reports 0.0 rather than dividing by zero."""
+        return self.queries_completed / self.wall_s if self.wall_s > 0 else 0.0
 
     @property
     def mean_occupancy(self) -> float:
-        """Mean fraction of slots occupied per wave, in [0, 1]."""
+        """Mean fraction of slots occupied per wave, in [0, 1].  0.0
+        before the first wave (never a division by zero)."""
         return self.occupancy_sum / self.waves if self.waves else 0.0
 
     def _latency_quantile(self, q: float) -> float:
+        """Nearest-rank quantile of the wave latencies.
+
+        Guarded for the empty/single-sample runs that used to misbehave:
+        no samples -> 0.0, one sample -> that sample for every q.  The
+        previous ``int(q * len)`` rank was also off by one — p95 of 20
+        samples indexed element 19 (the maximum, i.e. p100); nearest
+        rank is ``ceil(q * len)`` 1-indexed, so p95 of 20 reads the 19th
+        order statistic."""
         lat = sorted(self.wave_latencies_s)
         if not lat:
             return 0.0
-        idx = min(int(q * len(lat)), len(lat) - 1)
+        q = min(max(q, 0.0), 1.0)
+        idx = min(max(int(np.ceil(q * len(lat))) - 1, 0), len(lat) - 1)
         return lat[idx]
 
     @property
@@ -164,6 +183,9 @@ class _Lane:
     # convergence signal reaches its tolerance
     cold: List[bool] = field(default_factory=list)
     queue: List[QueryTicket] = field(default_factory=list)
+    # per-lane SLO controller (quality_target engines only): each lane
+    # runs its own accuracy loop, since lanes disagree on residual scale
+    controller: Optional["QualityController"] = None
 
     @property
     def row_mask(self) -> jax.Array:
@@ -293,12 +315,24 @@ class GraphServingEngine:
                 lambda a: jnp.broadcast_to(
                     a[None], (self.slots,) + a.shape).copy(), proto)
             algo.validate_batch_state(bank, self.slots)
+            cfg = self.engine.config
+            controller = None
+            if cfg.quality_target is not None:
+                from repro.core.control import QualityController
+
+                controller = QualityController(
+                    cfg.quality_target,
+                    r0=cfg.r, delta0=cfg.delta,
+                    adjust_r=cfg.control_r,
+                    adjust_delta=cfg.control_delta,
+                )
             lane = _Lane(
                 template=algo,
                 bank=bank,
                 tickets=[None] * self.slots,
                 waves=[0] * self.slots,
                 cold=[False] * self.slots,
+                controller=controller,
             )
             self._lanes[key] = lane
         return lane
@@ -418,6 +452,9 @@ class GraphServingEngine:
                 k: lane.bank[k].at[i].set(new_row[k]) for k in lane.bank}
             ticket.exact_fallback = True
         self.stats.overflow_fallbacks += 1
+        if lane.controller is not None:
+            # exact answers = accurate baseline; accumulated drift resets
+            lane.controller.refreshed()
         self._harvest(lane, deltas, force=True)
 
     # ---- the wave loop ---------------------------------------------------
@@ -440,21 +477,26 @@ class GraphServingEngine:
             if lane.occupied == 0:
                 continue
             row_mask = lane.row_mask
-            # cold-start coverage: while any live row has never converged,
-            # the wave's hot set is the full active set (see
-            # fused_query_step_batched's full_hot contract)
-            full_hot = jnp.bool_(any(
-                c and t is not None
-                for c, t in zip(lane.cold, lane.tickets)))
-            new_bank, qs, row_delta = fused_query_step_batched(
+            ctl = lane.controller
+            r_now = ctl.r_eff if ctl is not None else cfg.r
+            delta_now = ctl.delta_eff if ctl is not None else cfg.delta
+            # cold-start coverage: rows whose occupant has never converged
+            # get seed-local delta expansion inside the fused step (see
+            # fused_query_step_batched's cold_rows contract) — no cold
+            # rows costs zero extra sweeps
+            cold_rows = jnp.asarray(
+                [c and t is not None
+                 for c, t in zip(lane.cold, lane.tickets)], bool)
+            out = fused_query_step_batched(
                 eng.state,
                 lane.bank,
                 eng.deg_prev,
                 eng.active_prev,
-                jnp.float32(cfg.r),
-                jnp.float32(cfg.delta),
+                jnp.float32(r_now),
+                jnp.float32(delta_now),
                 row_mask,
-                full_hot,
+                cold_rows,
+                eng._probe_ids,
                 algo=lane.template,
                 hot_node_capacity=cfg.hot_node_capacity,
                 hot_edge_capacity=cfg.hot_edge_capacity,
@@ -465,7 +507,13 @@ class GraphServingEngine:
                 layouts=self._spec_layouts(lane.template),
                 backend=eng.backend,
                 shard_bucket_capacity=cfg.shard_hot_edge_capacity,
+                with_drift=ctl is not None,
             )
+            if ctl is not None:
+                new_bank, qs, row_delta, row_drift = out
+            else:
+                new_bank, qs, row_delta = out
+                row_drift = None
             if bool(qs.used_fallback):
                 # batch result is invalid — discard, serve rows exactly
                 self._exact_fallback(lane)
@@ -474,7 +522,30 @@ class GraphServingEngine:
             for i in range(self.slots):
                 if lane.tickets[i] is not None:
                     lane.waves[i] += 1
-            self._harvest(lane, np.asarray(jax.device_get(row_delta)))
+            if ctl is not None:
+                # one combined transfer: per-slot deltas + drift columns
+                rd, drift = jax.device_get((row_delta, row_drift))
+                drift = np.asarray(drift)
+                probe = float(drift[:, 0].max(initial=0.0))
+                cold_d = float(drift[:, 1].max(initial=0.0))
+                dec = ctl.observe(probe, cold_d)
+                self.stats.last_drift = max(probe, cold_d)
+                self.stats.quality_est = dec.quality_est
+                self.stats.min_quality_est = min(
+                    self.stats.min_quality_est, dec.quality_est)
+                if dec.refresh:
+                    # SLO breach: re-mark every live slot cold so the next
+                    # wave re-covers them (the batched analogue of the
+                    # single-query engine's exact refresh), and reset the
+                    # accumulated drift
+                    for i, t in enumerate(lane.tickets):
+                        if t is not None:
+                            lane.cold[i] = True
+                    self.stats.refreshes += 1
+                    ctl.refreshed()
+                self._harvest(lane, np.asarray(rd))
+            else:
+                self._harvest(lane, np.asarray(jax.device_get(row_delta)))
 
         # hot-set snapshots advance exactly like engine.query()'s epilogue
         eng.deg_prev = eng._degree_snapshot()

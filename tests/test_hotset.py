@@ -50,6 +50,53 @@ def test_new_vertices_always_in_kr():
     assert bool(np.asarray(hot)[fresh])
 
 
+def test_zero_prior_degree_vertices_audit():
+    """Zero-prior-degree audit pins: the ratio test divides by deg_prev,
+    which is 0 both for brand-new vertices and for pre-existing
+    zero-out-degree sinks.  Both paths must be division-free and
+    r-independent: a brand-new vertex is hot at ANY r (including inf);
+    a pre-existing sink that *gains* degree is hot at any r; one whose
+    degree stays zero is never selected; and r = inf selects nothing
+    through the ratio branch (finite ratio, no NaN comparisons)."""
+    zeros = jnp.zeros(8, jnp.float32)
+
+    def base():
+        src = np.array([0, 0], np.int32)  # 0→1, 0→2; 1 and 2 are sinks
+        dst = np.array([1, 2], np.int32)
+        return G.from_edges(src, dst, 8, 16)
+
+    for r in (0.0, 1e9, np.inf):
+        # brand-new vertex: unconditionally hot, nothing valid to freeze
+        g = base()
+        deg_prev = jnp.copy(g.out_deg)
+        active_prev = jnp.copy(g.node_active)
+        fresh = 6
+        g2 = G.add_edges(g, jnp.array([fresh], jnp.int32),
+                         jnp.array([0], jnp.int32))
+        hot, _ = select_hot_set(
+            g2, deg_prev, zeros, jnp.float32(r), jnp.float32(1e9),
+            active_prev=active_prev, n=0, delta_hop_cap=0)
+        hot = np.asarray(hot)
+        assert hot[fresh], r
+        # unchanged vertices (incl. the zero-degree sinks): never selected,
+        # even at r = 0 (the threshold is strict) or r = inf (finite ratio)
+        assert not hot[0] and not hot[1] and not hot[2], r
+
+        # pre-existing sink gains its first out-edge: 0 → >0 degree is a
+        # change at any threshold — the deg_prev == 0 branch, not a ratio
+        g = base()
+        deg_prev = jnp.copy(g.out_deg)
+        active_prev = jnp.copy(g.node_active)
+        g2 = G.add_edges(g, jnp.array([2], jnp.int32),
+                         jnp.array([0], jnp.int32))
+        hot, _ = select_hot_set(
+            g2, deg_prev, zeros, jnp.float32(r), jnp.float32(1e9),
+            active_prev=active_prev, n=0, delta_hop_cap=0)
+        hot = np.asarray(hot)
+        assert hot[2], r
+        assert not hot[1], r  # the other sink's degree stayed 0: cold
+
+
 def test_kn_expansion_follows_out_edges():
     # tiny chain: 0 -> 1 -> 2 -> 3
     src = np.array([0, 1, 2], np.int32)

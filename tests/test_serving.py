@@ -358,6 +358,87 @@ def test_overflow_falls_back_to_exact():
     srv.close()
 
 
+def test_serve_stats_empty_and_single_sample_guards():
+    """ServeStats aggregates are total functions: a fresh (or idle)
+    engine reports zeros instead of dividing by zero, and a single
+    sample is its own p50 and p95."""
+    from repro.serve.graph import ServeStats
+
+    empty = ServeStats()
+    assert empty.queries_per_s == 0.0
+    assert empty.mean_occupancy == 0.0
+    assert empty.p50_wave_latency_s == 0.0
+    assert empty.p95_wave_latency_s == 0.0
+
+    one = ServeStats(queries_completed=1, waves=1, wall_s=0.25,
+                     occupancy_sum=0.5, wave_latencies_s=[0.25])
+    assert one.p50_wave_latency_s == 0.25
+    assert one.p95_wave_latency_s == 0.25
+    assert one.queries_per_s == 4.0
+    assert one.mean_occupancy == 0.5
+
+    # a wave too fast for the clock to resolve must not divide by zero
+    zero_wall = ServeStats(queries_completed=3, waves=1, wall_s=0.0)
+    assert zero_wall.queries_per_s == 0.0
+
+
+def test_serve_stats_nearest_rank_quantiles():
+    """Nearest-rank pins: with 20 samples 0.01..0.20, p95 is the 19th
+    order statistic (0.19), NOT the maximum — the old ``int(q * len)``
+    rank read element 19 (p100).  q is clamped into [0, 1]."""
+    from repro.serve.graph import ServeStats
+
+    lat = [round(0.01 * k, 2) for k in range(20, 0, -1)]  # unsorted
+    s = ServeStats(wave_latencies_s=lat)
+    assert s.p95_wave_latency_s == 0.19
+    assert s.p50_wave_latency_s == 0.10
+    assert s._latency_quantile(0.0) == 0.01
+    assert s._latency_quantile(1.0) == 0.20
+    assert s._latency_quantile(-3.0) == 0.01   # clamped
+    assert s._latency_quantile(7.0) == 0.20    # clamped
+
+
+def test_seed_local_cold_start_covers_only_reachable():
+    """Cold-start coverage is seed-local, not graph-global: an SSSP row
+    whose source sits in a 10-vertex component hot-covers exactly that
+    component's forward reachability, while a global algorithm
+    (``batched_cold_seeds`` is None) still covers the full active set.
+    Churn/hub selection is pinned off (r, Δ huge; n=0) so the measured
+    hot count is the cold expansion alone."""
+    from repro.core.fused import fused_query_step_batched
+
+    path_s = np.arange(9, dtype=np.int32)          # component A: 0→1→…→9
+    gs, gd = gnm_edges(120, 700, seed=4)           # component B: 20..139
+    src = np.concatenate([path_s, gs.astype(np.int32) + 20])
+    dst = np.concatenate([path_s + 1, gd.astype(np.int32) + 20])
+    srv = _serve((src, dst), slots=2, n=0, r=1e9, delta=1e9)
+    eng = srv.engine
+    cfg = eng.config
+
+    def cold_wave_hot_count(algo):
+        bank = _stack([algo.init_state(eng.state)] * 2)
+        _, qs, _ = fused_query_step_batched(
+            eng.state, bank, eng.deg_prev, eng.active_prev,
+            jnp.float32(cfg.r), jnp.float32(cfg.delta),
+            jnp.asarray([True, True]), jnp.asarray([True, True]),
+            eng._probe_ids,
+            algo=algo, hot_node_capacity=cfg.hot_node_capacity,
+            hot_edge_capacity=cfg.hot_edge_capacity, n=cfg.n,
+            delta_hop_cap=cfg.delta_hop_cap, degree_mode=cfg.degree_mode,
+            expand_both=cfg.expand_both, layouts=srv._spec_layouts(algo),
+            backend=eng.backend,
+            shard_bucket_capacity=cfg.shard_hot_edge_capacity)
+        return int(qs.num_hot)
+
+    n_active = int(jnp.sum(eng.state.node_active.astype(jnp.int32)))
+    hot_sssp = cold_wave_hot_count(make_algorithm("sssp", sources=(0,)))
+    hot_global = cold_wave_hot_count(make_algorithm("pagerank"))
+    assert hot_sssp == 10            # exactly the source's component
+    assert hot_global == n_active    # seedless → full active coverage
+    assert hot_sssp < hot_global
+    srv.close()
+
+
 def test_submit_rejects_unbatched_algorithm():
     """Legacy plugins without ``summarized_batched`` are rejected at
     submit time, not at trace time mid-wave."""
