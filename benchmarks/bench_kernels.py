@@ -340,6 +340,75 @@ def _controller_cases(*, smoke: bool = False):
     return cases, meta
 
 
+def _async_overlap_cases(*, smoke: bool = False):
+    """``async_overlap_*`` rows: query latency during a write burst,
+    synchronous vs async-rebuild (``async_rebuild=True``) engine.
+
+    Two sessions replay the identical stream — every query preceded by a
+    ``chunk``-edge write burst, every query followed by a fixed host
+    think-time (the inter-query gap a serving loop naturally has).  The
+    sync engine pays layout sort + summary rebuild inside ``query()``;
+    the async engine dispatches the same rebuild un-awaited, so it drains
+    into the think-time gap and the measured ``query()`` wall collapses
+    to the fused step + stats fetch.  Rows are query-wall p50/p95 per
+    mode; the meta dict carries the ISSUE 10 acceptance number (async
+    p95 < sync p95 under the burst).
+    """
+    from repro.api import session
+    from repro.graph.generators import gnm_edges
+
+    n, m = (4_000, 30_000) if smoke else (20_000, 120_000)
+    steps = 8 if smoke else 30
+    chunk = 256 if smoke else 1024
+    # think-time sized to absorb the deferred rebuild (~35ms of layout
+    # sort + preserving apply at the full config): shorter gaps push the
+    # un-drained remainder onto the next query's fetch and the async
+    # advantage shrinks toward zero
+    think_s = 0.05
+    src, dst = gnm_edges(n, m, seed=5)
+    rng = np.random.default_rng(3)
+    stream = [(rng.integers(0, n, chunk).astype(np.int32),
+               rng.integers(0, n, chunk).astype(np.int32))
+              for _ in range(steps)]
+    caps = dict(node_capacity=n, edge_capacity=m + steps * chunk + 1024,
+                update_pad=chunk)
+
+    def _replay(async_rebuild):
+        lats = []
+        with session((src, dst), algorithm="pagerank",
+                     async_rebuild=async_rebuild, **caps) as s:
+            for a, b in stream:
+                s.add_edges(a, b)
+                t0 = time.perf_counter()
+                s.query()
+                lats.append(time.perf_counter() - t0)
+                time.sleep(think_s)   # think-time: async dispatch drains here
+        return np.asarray(lats[2:]) * 1e6  # drop compile warm-up queries
+
+    sync_us = _replay(False)
+    async_us = _replay(True)
+    pct = lambda a, q: float(np.percentile(a, q))
+    s50, s95 = pct(sync_us, 50), pct(sync_us, 95)
+    a50, a95 = pct(async_us, 50), pct(async_us, 95)
+    burst = f"burst={chunk}e,think={think_s * 1e3:.0f}ms"
+    cases = [
+        ("async_overlap_sync_query_p50", s50, burst),
+        ("async_overlap_sync_query_p95", s95, burst),
+        ("async_overlap_async_query_p50", a50,
+         f"{burst},x{s50 / a50:.2f} vs sync"),
+        ("async_overlap_async_query_p95", a95,
+         f"{burst},x{s95 / a95:.2f} vs sync"),
+    ]
+    meta = {
+        "stream": {"nodes": n, "edges": m, "steps": steps, "chunk": chunk},
+        "think_time_us": think_s * 1e6,
+        "sync_p50_us": s50, "sync_p95_us": s95,
+        "async_p50_us": a50, "async_p95_us": a95,
+        "p95_speedup": s95 / a95,
+    }
+    return cases, meta
+
+
 def bench_sweep_backends(*, smoke: bool = False, nodes=50_000, edges=500_000):
     """Backend-vs-backend rows: a plus_times push + summarized PageRank
     sweep, and a min_plus push + summarized SSSP sweep, per backend on the
@@ -395,6 +464,8 @@ def bench_sweep_backends(*, smoke: bool = False, nodes=50_000, edges=500_000):
     cases.extend(_serving_cases(g, ranks, live_edges, iters=iters))
     controller_cases, controller_meta = _controller_cases(smoke=smoke)
     cases.extend(controller_cases)
+    overlap_cases, overlap_meta = _async_overlap_cases(smoke=smoke)
+    cases.extend(overlap_cases)
     records = [
         {"name": name, "us_per_call": round(us, 1), "derived": derived,
          # pallas rows carry _interp in the name when they ran in interpret
@@ -420,6 +491,9 @@ def bench_sweep_backends(*, smoke: bool = False, nodes=50_000, edges=500_000):
         # ISSUE 9 acceptance numbers: closed-loop quality/work vs the
         # open-loop full-accuracy replay of the same drifting stream
         "controller": controller_meta,
+        # ISSUE 10 acceptance numbers: query p50/p95 during a write
+        # burst, sync vs async-rebuild engine (async p95 must win)
+        "async_overlap": overlap_meta,
     }
     return cases, {"meta": meta, "rows": records}
 

@@ -69,6 +69,7 @@ SKIP_LIST: tuple = (
 #: are the host orchestration boundary and intentionally absent.
 HOT_MODULES: tuple = (
     "src/repro/core/backend.py",
+    "src/repro/core/epoch.py",
     "src/repro/core/fused.py",
     "src/repro/core/hits.py",
     "src/repro/core/hotset.py",

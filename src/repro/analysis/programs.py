@@ -41,7 +41,9 @@ from repro.core.control import default_probe_ids
 from repro.core.fused import fused_query_step, fused_query_step_batched
 from repro.core.pagerank import build_summary
 from repro.graph import generators
-from repro.graph.graph import GraphState, add_edges, from_edges
+from repro.core.epoch import snapshot_counts
+from repro.graph.graph import (GraphState, add_edges, add_edges_preserving,
+                               from_edges)
 from repro.graph.partition import build_sharded_layout
 
 
@@ -260,6 +262,19 @@ def catalog(spec: Optional[GraphSpec] = None, *,
         lambda st, s, d: add_edges(st, s, d),
         (state, new_src, new_dst), spec))
 
+    # the async pipeline's variants: the non-donating apply (served
+    # snapshot buffers must survive the mutation) and the per-epoch
+    # count vector dispatched at build / fetched at promotion — both
+    # must clear the same jaxpr/HLO gates as the donating path
+    progs.append(Program(
+        "engine_apply[add_edges,preserving]",
+        lambda st, s, d: add_edges_preserving(st, s, d),
+        (state, new_src, new_dst), spec))
+    progs.append(Program(
+        "epoch[snapshot_counts]",
+        lambda st: snapshot_counts(st),
+        (state,), spec))
+
     # --- mesh-sharded variants ---------------------------------------------
     if mesh is not None:
         sh_mesh = build_sharded_layout(
@@ -329,3 +344,39 @@ def run_retrace_scenario(spec: Optional[GraphSpec] = None) -> List:
             for _ in range(2):
                 round_(s)
     return mon.check_warm(warm, scenario="engine-loop[pagerank]")
+
+
+def run_async_retrace_scenario(spec: Optional[GraphSpec] = None) -> List:
+    """The async pipeline's retrace pass: one ``async_rebuild=True``
+    session, same-shape update batches and queries.  Round 1 warms every
+    program (the fused step on the served snapshot, the *preserving*
+    apply, ``snapshot_counts``, the layout builds dispatched per epoch);
+    rounds 2–3 each flip an epoch — promote, serve, integrate, dispatch —
+    and must add **zero** traces, proving the epoch machinery reuses the
+    sync engine's compiled programs (the fused step's trace is
+    epoch-agnostic: snapshots only rebind the same-shape inputs).
+    """
+    from repro.analysis.retrace import TraceMonitor
+    from repro.api import session
+
+    spec = spec or GraphSpec()
+    rng = np.random.default_rng(0)
+    n = min(spec.node_capacity, 256)
+    src, dst = generators.gnm_edges(n, 512, seed=1)
+    chunk = 32
+
+    def round_(s):
+        s.add_edges(rng.integers(0, n, chunk).astype(np.int32),
+                    rng.integers(0, n, chunk).astype(np.int32))
+        s.query()
+
+    with TraceMonitor() as mon:
+        with session((src, dst), algorithm="pagerank", async_rebuild=True,
+                     node_capacity=n, edge_capacity=2048) as s:
+            round_(s)   # epoch 0 served, epoch 1 dispatched
+            round_(s)   # first full flip: promote 1, dispatch 2
+            warm = mon.snapshot()
+            for _ in range(2):
+                round_(s)   # two more epoch flips, zero new traces
+            assert s.engine._pipeline.current.epoch >= 3
+    return mon.check_warm(warm, scenario="engine-loop[pagerank,async]")

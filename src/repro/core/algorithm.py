@@ -156,6 +156,17 @@ class StreamingAlgorithm(abc.ABC):
     #: (connected components' label flips), where result magnitudes are
     #: ids and carry no error meaning.
     drift_normalize: str = "mass"
+    #: declared contraction factor of the algorithm's update operator,
+    #: consumed by the :class:`~repro.core.control.QualityController` to
+    #: calibrate its drift→error gain: an observed residual amplifies to
+    #: at most ``residual / (1 - contraction)`` steady-state error, so the
+    #: effective gain is ``1 / (1 - contraction)``.  ``None`` (the
+    #: default) keeps the conservative legacy ``gain=3`` bound — right
+    #: for damped ranking algebras whose contraction (β ≈ 0.85) is weak.
+    #: Min-semiring relaxations (CC, SSSP, widest path) converge to their
+    #: fixed point in finitely many sweeps with no geometric tail — they
+    #: declare ``0.0`` (gain 1) so a quiet stream stops over-refreshing.
+    drift_contraction: Optional[float] = None
     #: constructor knobs whose whole effect is captured by
     #: :meth:`init_state` (seed sets, source sets) — the per-query
     #: *identity* as opposed to numeric sweep knobs.  The serving engine
@@ -893,6 +904,7 @@ class ConnectedComponentsAlgorithm(StreamingAlgorithm):
     normalize_selection_scores = True
     rank_descending = False  # smaller labels first (component min ids)
     drift_normalize = "count"  # residual = label flips, not id magnitudes
+    drift_contraction = 0.0  # label relaxation has no geometric tail
     semiring = "min_min"
     summary_weight = "unit"
     state_dtypes = {"labels": "int32", "churn": "float32"}
@@ -1009,6 +1021,7 @@ class SSSPAlgorithm(StreamingAlgorithm):
     name = "sssp"
     normalize_selection_scores = True
     rank_descending = False  # nearest vertices first
+    drift_contraction = 0.0  # Bellman-Ford settles, no geometric tail
     semiring = "min_plus"
     summary_weight = "length"
     state_dtypes = {"dist": "float32", "source": "bool",
@@ -1126,6 +1139,7 @@ class WidestPathAlgorithm(StreamingAlgorithm):
 
     name = "widest-path"
     normalize_selection_scores = True
+    drift_contraction = 0.0  # bottleneck relaxation settles in finite sweeps
     semiring = "max_times"
     summary_weight = "length"
     state_dtypes = {"width": "float32", "source": "bool",

@@ -166,7 +166,8 @@ class QualityController:
         delta0: float,
         adjust_r: bool = True,
         adjust_delta: bool = True,
-        gain: float = 3.0,
+        gain: Optional[float] = None,
+        contraction: Optional[float] = None,
         tighten: float = 0.5,
         relax: float = 1.35,
         tighten_at: float = 0.5,
@@ -181,7 +182,23 @@ class QualityController:
         self.budget = 1.0 - self.quality_target
         self.adjust_r = bool(adjust_r)
         self.adjust_delta = bool(adjust_delta)
-        self.gain = float(gain)
+        # drift→error gain calibration: an explicit ``gain`` wins; else an
+        # algorithm-declared contraction c (StreamingAlgorithm.
+        # drift_contraction) gives the tight amplification bound
+        # 1/(1−c) — e.g. the min-semiring relaxations declare c=0 (gain 1)
+        # and stop over-refreshing on quiet streams; else the conservative
+        # legacy 3.0 (right for weakly-contracting damped ranking algebras
+        # that declare nothing).
+        if gain is not None:
+            self.gain = float(gain)
+        elif contraction is not None:
+            c = float(contraction)
+            if not 0.0 <= c < 1.0:
+                raise ValueError(
+                    f"contraction must be in [0, 1); got {contraction}")
+            self.gain = 1.0 / max(1.0 - c, 1e-6)
+        else:
+            self.gain = 3.0
         self.tighten = float(tighten)
         self.relax = float(relax)
         self.tighten_at = float(tighten_at)

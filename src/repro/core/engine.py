@@ -139,6 +139,15 @@ class EngineConfig:
     control_r: bool = True
     control_delta: bool = True
     drift_probes: int = 64
+    # epoch-versioned async rebuild (repro.core.epoch): queries serve an
+    # immutable EpochSnapshot N while snapshot N+1's update application,
+    # layout sorts and rebalance probe are dispatched-but-not-awaited —
+    # JAX's async dispatch overlaps the rebuild with the host loop because
+    # the engine stops forcing results between apply and query.  Epochs
+    # promote at query/wave boundaries only (snapshot_lag ∈ {0, 1});
+    # QueryStats/ServeStats grow epoch/snapshot_lag columns.  Requires
+    # fused=True and a supports_fused algorithm (like quality_target).
+    async_rebuild: bool = False
 
 
 @dataclass
@@ -180,6 +189,12 @@ class QueryStats:
     r_eff: float = 0.0
     delta_eff: float = 0.0
     refreshed: bool = False
+    # async-pipeline staleness columns (async_rebuild engines; sync engines
+    # keep the zeros): the epoch this query was served from, and how many
+    # epochs the served snapshot trailed the newest dispatched build when
+    # the answer was computed (0 = caught up; never exceeds 1)
+    epoch: int = 0
+    snapshot_lag: int = 0
 
     @property
     def vertex_ratio(self) -> float:
@@ -289,9 +304,27 @@ class VeilGraphEngine:
                 r0=config.r, delta0=config.delta,
                 adjust_r=config.control_r,
                 adjust_delta=config.control_delta,
+                contraction=self.algorithm.drift_contraction,
             )
             self._probe_ids = default_probe_ids(
                 config.node_capacity, config.drift_probes)
+        # epoch-versioned async rebuild (repro.core.epoch): the pipeline
+        # holds the served snapshot + the in-flight build; _async_specs is
+        # the ordered set of normalized layout specs every new snapshot
+        # eagerly dispatches (seeded from the algorithm, extended by the
+        # serving engine's per-lane algorithms)
+        self._pipeline = None
+        self._async_specs: Dict = {}
+        if config.async_rebuild:
+            if not (config.fused and self.algorithm.supports_fused):
+                raise ValueError(
+                    "async_rebuild requires the fused query path "
+                    f"(fused=True and a supports_fused algorithm; got "
+                    f"fused={config.fused}, "
+                    f"algorithm={self.algorithm.name!r})")
+            for spec in map(B.normalize_layout_spec,
+                            self.algorithm.layout_specs):
+                self._async_specs[spec] = True
         # updates integrated while serving repeat-last answers — lets
         # policies threshold on staleness, not just the current batch
         self._stale_updates = 0
@@ -341,6 +374,16 @@ class VeilGraphEngine:
         wall = time.perf_counter() - t0
         self.deg_prev = self._degree_snapshot()
         self.active_prev = jnp.copy(self.state.node_active)
+        if self.config.async_rebuild:
+            from repro.core.epoch import AsyncRebuildPipeline
+
+            # epoch 0 = the initial graph; its layouts were just built for
+            # the exact pass, so _make_snapshot seeds them without
+            # re-sorting.  Epoch 0 is never promoted, so fetch its count
+            # vector here (start() is a host boundary anyway).
+            snap0 = self._make_snapshot(0)
+            self._finalize_promotion(snap0)
+            self._pipeline = AsyncRebuildPipeline(snap0)
         self._started = True
         st = QueryStats(
             query_id=-1,
@@ -437,36 +480,43 @@ class VeilGraphEngine:
         through the shard_map-ed push automatically.
         """
         if self._edge_layouts is None:
-            if self.config.mesh is not None:
-                from repro.graph.partition import (build_sharded_layout,
-                                                   place_sharded_layout)
-
-                def build(w, rev, s):
-                    tile_n, chunk = self._tuned_geometry(s)
-                    return place_sharded_layout(
-                        build_sharded_layout(
-                            self.state, mesh=self.config.mesh,
-                            axes=self.config.mesh_axes,
-                            num_shards=self.config.num_shards,
-                            weight=w, reverse=rev,
-                            semiring=s, slots=self._shard_slots,
-                            chunk=chunk, tile_n=tile_n,
-                            weight_dtype=self._weight_dtype_for(s)))
-            else:
-                def build(w, rev, s):
-                    tile_n, chunk = self._tuned_geometry(s)
-                    return B.build_layout(
-                        self.state, weight=w, reverse=rev, semiring=s,
-                        chunk=B.CHUNK if chunk is None else chunk,
-                        tile_n=tile_n,
-                        weight_dtype=self._weight_dtype_for(s))
             self._edge_layouts = tuple(
-                build(w, rev, s)
-                for (w, rev, s) in map(B.normalize_layout_spec,
-                                       self.algorithm.layout_specs)
+                self._build_spec_layout(self.state, spec)
+                for spec in map(B.normalize_layout_spec,
+                                self.algorithm.layout_specs)
             )
             self.layout_builds += 1
         return self._edge_layouts
+
+    def _build_spec_layout(self, state: G.GraphState,
+                           spec: Tuple) -> B.AnyEdgeLayout:
+        """Build (dispatch) the sorted layout for one *normalized* spec
+        against an explicit graph state — the single layout constructor
+        shared by the sync cache (:meth:`edge_layouts`), the serving
+        engine's per-lane cache, and :class:`~repro.core.epoch.
+        EpochSnapshot` builds (which pass a frozen snapshot state rather
+        than ``self.state``).  Mesh engines get a placed
+        ``ShardedEdgeLayout`` cut at the current slot assignment."""
+        w, rev, s = spec
+        tile_n, chunk = self._tuned_geometry(s)
+        if self.config.mesh is not None:
+            from repro.graph.partition import (build_sharded_layout,
+                                               place_sharded_layout)
+
+            return place_sharded_layout(
+                build_sharded_layout(
+                    state, mesh=self.config.mesh,
+                    axes=self.config.mesh_axes,
+                    num_shards=self.config.num_shards,
+                    weight=w, reverse=rev,
+                    semiring=s, slots=self._shard_slots,
+                    chunk=chunk, tile_n=tile_n,
+                    weight_dtype=self._weight_dtype_for(s)))
+        return B.build_layout(
+            state, weight=w, reverse=rev, semiring=s,
+            chunk=B.CHUNK if chunk is None else chunk,
+            tile_n=tile_n,
+            weight_dtype=self._weight_dtype_for(s))
 
     def _tuned_geometry(self, semiring) -> Tuple[Optional[int], Optional[int]]:
         """Autotuned ``(tile_n, chunk)`` for one layout spec, resolved at
@@ -567,19 +617,26 @@ class VeilGraphEngine:
             return jnp.copy(self.state.in_deg)
         return self.state.out_deg + self.state.in_deg
 
-    def _apply_pending(self) -> Tuple[int, int, int]:
+    def _apply_pending(self, preserve: bool = False) -> Tuple[int, int, int]:
         """Apply buffered updates.  Returns
         ``(applied, removals_requested, removals_resolved)`` where
-        ``applied`` counts additions + resolved removals."""
+        ``applied`` counts additions + resolved removals.
+
+        ``preserve=True`` (the async pipeline) applies through the
+        non-donating mutation variants so the served snapshot's buffers —
+        which alias the pre-update state — stay valid."""
         if not self._pending_count:
             return 0, 0, 0
+        remove_fn = (G.remove_edges_by_slot_preserving if preserve
+                     else G.remove_edges_by_slot)
+        add_fn = G.add_edges_preserving if preserve else G.add_edges
         removals_requested = self._pending_removal_count
         removals_resolved = 0
         if self._pending_removals:
             r_src = np.concatenate([a for a, _ in self._pending_removals])
             r_dst = np.concatenate([b for _, b in self._pending_removals])
             slots = G.find_edge_slots(self.state, r_src, r_dst)
-            self.state = G.remove_edges_by_slot(self.state, jnp.asarray(slots))
+            self.state = remove_fn(self.state, jnp.asarray(slots))
             removals_resolved = int((slots >= 0).sum())
             if removals_resolved:
                 self._invalidate_layouts()
@@ -607,7 +664,7 @@ class VeilGraphEngine:
         # recompiles at most `update_pad` distinct sizes.
         for lo in range(0, k, pad):
             hi = min(lo + pad, k)
-            self.state = G.add_edges(
+            self.state = add_fn(
                 self.state, jnp.asarray(src[lo:hi]), jnp.asarray(dst[lo:hi]),
                 None if lens is None else jnp.asarray(lens[lo:hi]),
             )
@@ -636,10 +693,289 @@ class VeilGraphEngine:
             layouts=self.edge_layouts(), backend=self.backend)
         st.iterations = int(iters)
 
+    # ---- epoch-versioned async rebuild -----------------------------------
+    def _make_snapshot(self, epoch: int, *, applied: int = 0,
+                       removals_requested: int = 0,
+                       removals_resolved: int = 0):
+        """Freeze the current state as :class:`EpochSnapshot` ``epoch`` and
+        *dispatch* everything the snapshot serves from: layout sorts for
+        every spec the engine has ever served, the count vector, the
+        hot-set baselines, and (mesh engines, post-update epochs) the
+        rebalance verdict.  Nothing here is awaited — the snapshot's
+        device work overlaps with whatever the host does next."""
+        from repro.core.epoch import EpochSnapshot, snapshot_counts
+
+        snap = EpochSnapshot(
+            epoch=epoch,
+            state=self.state,
+            deg=self._degree_snapshot(),
+            active=jnp.copy(self.state.node_active),
+            counts=snapshot_counts(self.state),
+            applied=applied,
+            removals_requested=removals_requested,
+            removals_resolved=removals_resolved,
+            rebalance_probe=(self._dispatch_rebalance_probe()
+                             if applied else None),
+        )
+        if self._edge_layouts is not None:
+            # the sync cache is valid for this exact state (start() path):
+            # seed it into the snapshot instead of re-sorting
+            for spec, layout in zip(
+                    map(B.normalize_layout_spec, self.algorithm.layout_specs),
+                    self._edge_layouts):
+                snap.layouts[spec] = layout
+        built = False
+        for spec in self._async_specs:
+            if spec not in snap.layouts:
+                snap.layout_for(spec, self._build_spec_layout)
+                built = True
+        if built:
+            self.layout_builds += 1
+        return snap
+
+    def _snapshot_layouts(self, snap) -> Tuple[B.AnyEdgeLayout, ...]:
+        """The snapshot-bound equivalent of :meth:`edge_layouts`: this
+        epoch's sorted layouts per ``algorithm.layout_specs``."""
+        return tuple(
+            snap.layout_for(spec, self._build_spec_layout)
+            for spec in map(B.normalize_layout_spec,
+                            self.algorithm.layout_specs))
+
+    def _dispatch_rebalance_probe(self):
+        """Dispatch (never await) the on-device rebalance verdict for the
+        state being snapshotted; the (bool, f32) pair is fetched once at
+        promotion by :meth:`_finalize_promotion` — the async replacement
+        for the sync path's per-batch :meth:`_maybe_rebalance` sync."""
+        cfg = self.config
+        if cfg.mesh is None or cfg.rebalance_threshold is None:
+            return None
+        from repro.graph.partition import (mesh_shard_count,
+                                           rebalance_decision, shard_slots)
+
+        num_shards = (cfg.num_shards if cfg.num_shards is not None
+                      else mesh_shard_count(cfg.mesh, cfg.mesh_axes))
+        slots = self._shard_slots
+        if slots is None:
+            slots = jnp.asarray(
+                shard_slots(self.state.edge_capacity, num_shards))
+        return rebalance_decision(
+            self.state, slots, jnp.float32(cfg.rebalance_threshold))
+
+    def _finalize_promotion(self, snap) -> bool:
+        """Host-side bookkeeping for a freshly promoted snapshot: fetch its
+        dispatched count vector (the per-epoch replacement for the sync
+        path's per-query ``int(num_active_nodes())``) and, on mesh
+        engines, its rebalance verdict — recutting the slot partition for
+        the *next* epoch's builds when streaming has skewed the shards.
+        Returns True when a recut happened."""
+        counts = np.asarray(jax.device_get(snap.counts))
+        snap.num_nodes = int(counts[0])
+        snap.num_edges = int(counts[1])
+        if snap.rebalance_probe is None:
+            return False
+        should, imbalance = jax.device_get(snap.rebalance_probe)
+        snap.rebalance_probe = None
+        self.last_imbalance = float(imbalance)
+        if not bool(should):
+            return False
+        from repro.graph.partition import (balanced_shard_slots,
+                                           mesh_shard_count)
+
+        cfg = self.config
+        num_shards = (cfg.num_shards if cfg.num_shards is not None
+                      else mesh_shard_count(cfg.mesh, cfg.mesh_axes))
+        self._shard_slots = balanced_shard_slots(
+            self.state, num_shards=num_shards)
+        self.rebalances += 1
+        self._invalidate_layouts()
+        return True
+
+    def _async_integrate(self) -> Tuple[int, int, int]:
+        """ApplyUpdates, async flavour: apply buffered updates through the
+        non-donating variants and dispatch the next epoch's snapshot build
+        (the served snapshot keeps its buffers).  Called *after* the
+        query's compute has been dispatched against the served snapshot,
+        so the result fetch never waits on this work.  Returns the applied
+        counts; an all-unresolved removal batch mutates nothing and
+        dispatches no epoch."""
+        pipe = self._pipeline
+        applied, requested, resolved = self._apply_pending(preserve=True)
+        if applied:
+            pipe.dispatch(self._make_snapshot(
+                pipe.latest_epoch + 1, applied=applied,
+                removals_requested=requested, removals_resolved=resolved))
+        return applied, requested, resolved
+
+    def _run_exact_on(self, snap, st: QueryStats):
+        """Exact recompute pinned to the served snapshot (refresh/fallback
+        in the async path must not leak the in-flight epoch's graph)."""
+        self.algo_state, iters = self.algorithm.exact(
+            self.algo_state, snap.state,
+            layouts=self._snapshot_layouts(snap), backend=self.backend)
+        st.iterations = int(iters)
+
+    def _query_async(self, msg: Optional[Dict]) -> Tuple[np.ndarray, QueryStats]:
+        """Serve one query from the epoch pipeline.
+
+        The wave order is what buys the overlap: (1) promote the finished
+        build at the boundary, (2) dispatch this query's compute against
+        the served snapshot, (3) integrate pending updates + dispatch the
+        next epoch, and only then (4) fetch the result — which was
+        enqueued before the rebuild work, so the fetch waits on the query
+        compute alone.  Updates integrated at query q become visible at
+        q+1's promotion and are charged to that promoted epoch's stats
+        row."""
+        from repro.core.fused import fused_query_step
+
+        qid = self._query_id
+        self._query_id += 1
+        cfg = self.config
+        pipe = self._pipeline
+
+        # (1) wave boundary: flip in the finished build, if any
+        promoted = pipe.promote()
+        rebalanced = False
+        if promoted is not None:
+            rebalanced = self._finalize_promotion(promoted)
+        snap = pipe.current
+        applied = promoted.applied if promoted is not None else 0
+        removals_requested = (promoted.removals_requested
+                              if promoted is not None else 0)
+        removals_resolved = (promoted.removals_resolved
+                             if promoted is not None else 0)
+
+        view = {
+            "pending": self._pending_count,
+            "applied": applied,
+            "since_compute": (self._stale_updates + applied
+                              + self._pending_count),
+            "num_nodes": snap.num_nodes,
+            "num_edges": snap.num_edges,
+            "algorithm": self.algorithm.name,
+            "epoch": snap.epoch,
+        }
+        integrate = self._before_updates(self._pending_count, view)
+        action = self._on_query(qid, view)
+        t0 = time.perf_counter()
+        st = QueryStats(
+            query_id=qid,
+            action=action.value,
+            wall_time_s=0.0,
+            num_nodes=snap.num_nodes,
+            num_edges=snap.num_edges,
+            pending_applied=applied,
+            removals_requested=removals_requested,
+            removals_resolved=removals_resolved,
+            rebalanced=rebalanced,
+            algorithm=self.algorithm.name,
+            epoch=snap.epoch,
+        )
+
+        # (2) dispatch this query's compute on the served snapshot — no
+        # block_until_ready, no host transfer until step (4)
+        ctl = self.controller
+        new_state = qs = None
+        if action == Action.APPROXIMATE:
+            r_now = ctl.r_eff if ctl is not None else cfg.r
+            delta_now = ctl.delta_eff if ctl is not None else cfg.delta
+            new_state, qs = fused_query_step(
+                snap.state,
+                self.algo_state,
+                self.deg_prev,
+                self.active_prev,
+                jnp.float32(r_now),
+                jnp.float32(delta_now),
+                self._probe_ids,
+                algo=self.algorithm,
+                hot_node_capacity=cfg.hot_node_capacity,
+                hot_edge_capacity=cfg.hot_edge_capacity,
+                n=cfg.n,
+                delta_hop_cap=cfg.delta_hop_cap,
+                degree_mode=cfg.degree_mode,
+                expand_both=cfg.expand_both,
+                layouts=self._snapshot_layouts(snap),
+                backend=self.backend,
+                shard_bucket_capacity=cfg.shard_hot_edge_capacity,
+                with_drift=ctl is not None,
+            )
+        elif action == Action.EXACT:
+            self._run_exact_on(snap, st)
+
+        # (3) integrate buffered updates and dispatch epoch N+1; its sorts
+        # and probe overlap with the compute already in the device queue
+        if integrate and self._pending_count:
+            _, extra_req, extra_res = self._async_integrate()
+            if pipe.building is None and extra_req:
+                # nothing mutated (all removals unresolved): no new epoch,
+                # so the request is only observable on this row
+                st.removals_requested += extra_req - extra_res
+        st.snapshot_lag = pipe.snapshot_lag
+
+        # (4) fetch — waits on the query compute dispatched in step (2)
+        if action == Action.REPEAT_LAST:
+            self._stale_updates += applied
+        elif action == Action.EXACT:
+            self.deg_prev = snap.deg
+            self.active_prev = snap.active
+            if ctl is not None:
+                ctl.refreshed()
+                st.refreshed = True
+        elif qs is not None:
+            qs = jax.device_get(qs)  # one host transfer for all stats
+            if bool(qs.used_fallback):
+                # capacities exceeded: the summarized state is invalid;
+                # recompute exactly on the *served* snapshot
+                self._run_exact_on(snap, st)
+                qs = qs._replace(iterations=st.iterations)
+                if ctl is not None:
+                    ctl.refreshed()
+                    st.refreshed = True
+            else:
+                self.algo_state = new_state
+            st.num_hot = int(qs.num_hot)
+            st.num_kr = int(qs.num_kr)
+            st.num_kn = int(qs.num_kn)
+            st.num_kdelta = int(qs.num_kdelta)
+            st.num_ek = int(qs.num_ek)
+            st.num_eb = int(qs.num_eb)
+            st.iterations = int(qs.iterations)
+            st.overflow_fallback = bool(qs.used_fallback)
+            if ctl is not None and not st.overflow_fallback:
+                dec = ctl.observe(float(qs.drift_probe),
+                                  float(qs.drift_cold))
+                st.drift = max(float(qs.drift_probe), float(qs.drift_cold))
+                st.r_eff = float(r_now)
+                st.delta_eff = float(delta_now)
+                st.quality_est = dec.quality_est
+                if dec.refresh:
+                    self._run_exact_on(snap, st)
+                    ctl.refreshed()
+                    st.refreshed = True
+                    st.quality_est = 1.0
+            elif ctl is not None:
+                st.r_eff = float(r_now)
+                st.delta_eff = float(delta_now)
+                st.quality_est = 1.0
+            # the epoch's own baselines become the next query's deg_prev/
+            # active_prev, so drift is always measured across whole epochs
+            self.deg_prev = snap.deg
+            self.active_prev = snap.active
+
+        if action != Action.REPEAT_LAST:
+            self._stale_updates = 0
+        st.wall_time_s = time.perf_counter() - t0
+        self.stats_log.append(st)
+        scores = self.ranks
+        if self._on_query_result:
+            self._on_query_result(qid, msg, action, scores, st)
+        return np.asarray(jax.device_get(scores)), st
+
     # ---- query serving ---------------------------------------------------
     def query(self, msg: Optional[Dict] = None) -> Tuple[np.ndarray, QueryStats]:
         """Serve one query (Alg. 1 lines 6-21). Returns (scores, stats)."""
         assert self._started, "call start() first"
+        if self._pipeline is not None:
+            return self._query_async(msg)
         qid = self._query_id
         self._query_id += 1
         cfg = self.config

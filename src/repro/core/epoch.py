@@ -1,0 +1,164 @@
+"""Epoch-versioned snapshots: the async rebuild pipeline's data model.
+
+The synchronous engine rebuilds between apply and query — layout sorts,
+summary builds and rebalance recuts all sit on the query's critical path.
+The async pipeline (``EngineConfig.async_rebuild=True``) double-buffers
+instead: queries serve a frozen :class:`EpochSnapshot` N while snapshot
+N+1's rebuild work is *dispatched but never awaited* — JAX's async
+dispatch overlaps it with the host-side serving loop for free, because
+nothing in this module (or in the apply→query gap it models) forces a
+result.  This file is deliberately sync-free and is linted as a hot
+module (AST-HOST-SYNC): every host transfer of the async pipeline lives
+at the engine/serving boundary, never here.
+
+An :class:`EpochSnapshot` freezes everything a query reads:
+
+- the graph buffers (``GraphState``) — the async apply path uses the
+  *non-donating* mutation variants
+  (:func:`repro.graph.graph.add_edges_preserving`), so a snapshot's
+  arrays stay valid while the engine's live state advances past it;
+- the cached sorted ``EdgeLayout``/``ShardedEdgeLayout`` per normalized
+  layout spec (built lazily per spec, dispatched eagerly for every spec
+  the engine has served so far, at the autotuned geometry);
+- the hot-set baselines (degree/activity snapshot at this epoch) that
+  become ``deg_prev``/``active_prev`` once a query serves the epoch;
+- dispatched-not-awaited device scalars: the node/edge counts
+  (:func:`snapshot_counts`) and, for mesh engines, the rebalance
+  verdict — both fetched by the engine at *promotion* time, one small
+  transfer per epoch flip instead of one per applied batch.
+
+The :class:`AsyncRebuildPipeline` owns exactly two slots — ``current``
+(served) and ``building`` (dispatched) — so ``snapshot_lag`` is always 0
+or 1.  Promotion happens at wave boundaries only, via :meth:`promote`;
+:meth:`dispatch` refuses to overwrite an unpromoted build and enforces
+monotone epoch ids, so a completed build can never be skipped.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.graph import GraphState
+
+#: a normalized (weight, reverse, semiring) layout spec — the snapshot
+#: layout cache's key type (see ``repro.core.backend.normalize_layout_spec``).
+LayoutSpec = Tuple
+
+
+@jax.jit
+def snapshot_counts(state: GraphState) -> jax.Array:
+    """int32[2] device vector ``[active_nodes, live_edges]`` for one
+    snapshot — dispatched at build time, fetched at promotion time, so
+    the serving loop's stats views never force a sync on the live state
+    (the sync engine's ``int(num_active_nodes())`` per query)."""
+    return jnp.stack([state.num_active_nodes().astype(jnp.int32),
+                      state.num_live_edges().astype(jnp.int32)])
+
+
+@dataclass
+class EpochSnapshot:
+    """One immutable serving epoch: graph buffers + everything derived
+    from them that a query reads, stamped with a monotone epoch id.
+
+    ``deg``/``active`` are this epoch's own hot-set baselines (copies of
+    the degree/activity vectors at build time); the engine installs them
+    as ``deg_prev``/``active_prev`` after serving a query at this epoch,
+    so the first query after a flip sees exactly the inter-epoch churn.
+    ``counts`` and ``rebalance_probe`` are dispatched device scalars the
+    engine reads once, at promotion (``num_nodes``/``num_edges`` are
+    their host-side values, filled at that point).  ``applied`` /
+    ``removals_*`` record the update batch this epoch integrated over
+    its parent — charged to the stats row of the query that promotes it
+    (the query at which the updates become visible).
+    """
+
+    epoch: int
+    state: GraphState
+    deg: jax.Array
+    active: jax.Array
+    counts: jax.Array
+    num_nodes: Optional[int] = None
+    num_edges: Optional[int] = None
+    applied: int = 0
+    removals_requested: int = 0
+    removals_resolved: int = 0
+    rebalance_probe: Optional[Tuple[jax.Array, jax.Array]] = None
+    layouts: Dict[LayoutSpec, Any] = field(default_factory=dict)
+
+    def layout_for(self, spec: LayoutSpec,
+                   builder: Callable[[GraphState, LayoutSpec], Any]) -> Any:
+        """The snapshot's sorted layout for one normalized spec — built
+        (dispatched) on first request against *this epoch's* buffers and
+        cached for every later consumer; a layout built here is never
+        rebuilt and never observes a later epoch's mutations."""
+        layout = self.layouts.get(spec)
+        if layout is None:
+            layout = builder(self.state, spec)
+            self.layouts[spec] = layout
+        return layout
+
+
+class AsyncRebuildPipeline:
+    """Double-buffered epoch store: serve ``current`` while ``building``
+    is in flight.  Pure host bookkeeping — no device work, no syncs.
+
+    Invariants (the property suite in ``tests/test_async_pipeline.py``
+    pins all four): epoch ids are strictly monotone; ``snapshot_lag`` is
+    0 or 1; a dispatched build is promoted before the next dispatch
+    (never skipped, never overwritten); promotion only ever installs the
+    build dispatched for ``current.epoch + 1``.
+    """
+
+    def __init__(self, initial: EpochSnapshot):
+        self.current = initial
+        self.building: Optional[EpochSnapshot] = None
+        self.promotions = 0
+        self.dispatches = 0
+
+    @property
+    def epoch(self) -> int:
+        """The served epoch id."""
+        return self.current.epoch
+
+    @property
+    def latest_epoch(self) -> int:
+        """The newest epoch that exists (building if in flight)."""
+        return (self.building.epoch if self.building is not None
+                else self.current.epoch)
+
+    @property
+    def snapshot_lag(self) -> int:
+        """How many epochs the served snapshot trails the newest build
+        (0 = fully caught up; never exceeds 1 by construction)."""
+        return self.latest_epoch - self.current.epoch
+
+    def dispatch(self, snapshot: EpochSnapshot) -> None:
+        """Register epoch N+1 (its device work is already enqueued).
+        Refuses to overwrite an unpromoted build or accept a
+        non-successor epoch id — promotion can never skip a build."""
+        if self.building is not None:
+            raise RuntimeError(
+                f"epoch {self.building.epoch} was dispatched but never "
+                f"promoted; promote at the wave boundary before "
+                f"dispatching epoch {snapshot.epoch}")
+        if snapshot.epoch != self.current.epoch + 1:
+            raise RuntimeError(
+                f"non-monotone epoch dispatch: serving "
+                f"{self.current.epoch}, got {snapshot.epoch}")
+        self.building = snapshot
+        self.dispatches += 1
+
+    def promote(self) -> Optional[EpochSnapshot]:
+        """Wave-boundary flip: install the building snapshot as current
+        (a pure host reference swap — never blocks on its device work)
+        and return it; ``None`` when no build is in flight."""
+        if self.building is None:
+            return None
+        snapshot, self.building = self.building, None
+        self.current = snapshot
+        self.promotions += 1
+        return snapshot

@@ -26,6 +26,15 @@ Differences vs the unfused engine path:
   offsets — see :func:`repro.core.pagerank._build_summary_sharded`), so
   the lowered program contains no replicated edge-space gathers and no
   unsorted ``push_coo``.
+- under ``EngineConfig.async_rebuild`` every input here is *epoch-bound*:
+  the graph state, the layouts and the ``deg_prev``/``active_prev``
+  baselines all come from one frozen
+  :class:`~repro.core.epoch.EpochSnapshot`, never from the engine's live
+  (possibly mid-apply) state — and the caller fetches the stats/result
+  only after dispatching the next epoch's rebuild, so this program's
+  execution overlaps the apply+sort work queued behind it.  The program
+  itself is identical in both modes (same trace, zero retraces across an
+  epoch flip — pinned by ``analysis/programs.py``).
 """
 
 from __future__ import annotations

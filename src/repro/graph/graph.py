@@ -139,21 +139,8 @@ def from_edges(
     )
 
 
-@functools.partial(jax.jit, donate_argnums=(0,))
-def add_edges(state: GraphState, new_src: jax.Array, new_dst: jax.Array,
-              new_len: Optional[jax.Array] = None) -> GraphState:
-    """Append a fixed-size chunk of edges.
-
-    ``new_src``/``new_dst`` have a *static* chunk length (the stream chunk
-    size), so this compiles once per chunk size.  Slots past
-    ``edge_capacity`` are silently dropped (callers check ``has_capacity``
-    first; the engine's BeforeUpdates stage enforces it).
-
-    ``new_len`` optionally streams a per-edge length column alongside the
-    endpoints (f32[k]); the first weighted chunk materializes
-    ``edge_len`` (previous slots default to 1.0), and later unweighted
-    chunks leave their slots at 1.0.
-    """
+def _add_edges_impl(state: GraphState, new_src: jax.Array, new_dst: jax.Array,
+                    new_len: Optional[jax.Array] = None) -> GraphState:
     k = new_src.shape[0]
     e_cap = state.edge_capacity
     base = state.num_edges
@@ -191,14 +178,30 @@ def add_edges(state: GraphState, new_src: jax.Array, new_dst: jax.Array,
                       node_active, edge_len)
 
 
-@functools.partial(jax.jit, donate_argnums=(0,))
-def remove_edges_by_slot(state: GraphState, slots: jax.Array) -> GraphState:
-    """Tombstone the edges stored at ``slots`` (int32[k]); -1 entries are no-ops.
+#: Append a fixed-size chunk of edges.
+#:
+#: ``new_src``/``new_dst`` have a *static* chunk length (the stream chunk
+#: size), so this compiles once per chunk size.  Slots past
+#: ``edge_capacity`` are silently dropped (callers check ``has_capacity``
+#: first; the engine's BeforeUpdates stage enforces it).
+#:
+#: ``new_len`` optionally streams a per-edge length column alongside the
+#: endpoints (f32[k]); the first weighted chunk materializes ``edge_len``
+#: (previous slots default to 1.0), and later unweighted chunks leave
+#: their slots at 1.0.
+#:
+#: Donates the input state: the previous epoch's buffers are reused in
+#: place, so the caller must not hold references to them.
+add_edges = functools.partial(jax.jit, donate_argnums=(0,))(_add_edges_impl)
 
-    Beyond-paper: the paper restricts its evaluation to edge additions (e+)
-    and leaves removals to future work; the substrate supports them so the
-    engine's stream model is complete.
-    """
+#: Non-donating ``add_edges``: same program, but the input state's buffers
+#: survive the call.  The async rebuild pipeline applies updates with this
+#: variant so the served ``EpochSnapshot`` (which aliases the pre-update
+#: buffers) stays immutable while the live state advances past it.
+add_edges_preserving = jax.jit(_add_edges_impl)
+
+
+def _remove_edges_by_slot_impl(state: GraphState, slots: jax.Array) -> GraphState:
     valid = (slots >= 0) & (slots < state.edge_capacity)
     slots_c = jnp.clip(slots, 0, state.edge_capacity - 1)
     was_alive = state.edge_alive[slots_c] & valid & (
@@ -211,6 +214,20 @@ def remove_edges_by_slot(state: GraphState, slots: jax.Array) -> GraphState:
     out_deg = state.out_deg.at[state.src[slots_c]].add(-dec)
     in_deg = state.in_deg.at[state.dst[slots_c]].add(-dec)
     return state._replace(edge_alive=alive, out_deg=out_deg, in_deg=in_deg)
+
+
+#: Tombstone the edges stored at ``slots`` (int32[k]); -1 entries are
+#: no-ops.  Donates the input state (buffers reused in place).
+#:
+#: Beyond-paper: the paper restricts its evaluation to edge additions (e+)
+#: and leaves removals to future work; the substrate supports them so the
+#: engine's stream model is complete.
+remove_edges_by_slot = functools.partial(
+    jax.jit, donate_argnums=(0,))(_remove_edges_by_slot_impl)
+
+#: Non-donating ``remove_edges_by_slot`` — see ``add_edges_preserving``;
+#: used by the async pipeline so served snapshots keep their buffers.
+remove_edges_by_slot_preserving = jax.jit(_remove_edges_by_slot_impl)
 
 
 def find_edge_slots(state: GraphState, src: np.ndarray, dst: np.ndarray) -> np.ndarray:

@@ -347,6 +347,13 @@ def rebalance_decision(state: GraphState, slots: jax.Array,
     balance check transfers exactly one (bool, f32) pair to host instead
     of syncing on an eager ``float(...)`` mid-pipeline.  ``threshold``
     may be a python float (weak-typed scalar traces once).
+
+    The async rebuild pipeline (``EngineConfig.async_rebuild``) goes one
+    step further: the verdict is *dispatched but not awaited* alongside
+    each :class:`~repro.core.epoch.EpochSnapshot` build and the (bool,
+    f32) pair is fetched only when the snapshot is promoted at a wave
+    boundary — a recut then applies to the *next* epoch's layout cuts,
+    never to the already-sorted snapshot being promoted.
     """
     imbalance = shard_imbalance(shard_live_counts(state, slots))
     return imbalance > threshold, imbalance

@@ -121,6 +121,11 @@ class ServeStats:
     last_drift: float = 0.0
     quality_est: float = 1.0
     min_quality_est: float = 1.0
+    # async-pipeline staleness columns (async_rebuild engines; sync
+    # engines keep the zeros): the epoch the last wave served from, and
+    # how far it trailed the newest dispatched build (0 or 1)
+    epoch: int = 0
+    snapshot_lag: int = 0
 
     @property
     def queries_per_s(self) -> float:
@@ -325,6 +330,7 @@ class GraphServingEngine:
                     r0=cfg.r, delta0=cfg.delta,
                     adjust_r=cfg.control_r,
                     adjust_delta=cfg.control_delta,
+                    contraction=algo.drift_contraction,
                 )
             lane = _Lane(
                 template=algo,
@@ -337,36 +343,28 @@ class GraphServingEngine:
             self._lanes[key] = lane
         return lane
 
-    def _spec_layouts(self, algo: StreamingAlgorithm) -> Tuple:
+    def _spec_layouts(self, algo: StreamingAlgorithm, snap=None) -> Tuple:
         """Cached edge layouts for an algorithm's ``layout_specs`` —
         shared across lanes that declare the same spec, rebuilt only
         after graph mutations (mirrors ``VeilGraphEngine.edge_layouts``
         but keyed by spec, since lanes disagree on which specs they
-        need)."""
+        need).
+
+        With ``snap`` (the async pipeline's served
+        :class:`~repro.core.epoch.EpochSnapshot`), layouts come from the
+        snapshot's own epoch-bound cache instead, and the spec is
+        registered with the engine so every *future* snapshot pre-sorts
+        it at build (dispatch) time."""
         eng = self.engine
-        cfg = eng.config
         out = []
         for spec in map(B.normalize_layout_spec, algo.layout_specs):
+            if snap is not None:
+                eng._async_specs[spec] = True
+                out.append(snap.layout_for(spec, eng._build_spec_layout))
+                continue
             layout = self._layouts.get(spec)
             if layout is None:
-                w, rev, s = spec
-                tile_n, chunk = eng._tuned_geometry(s)
-                if cfg.mesh is not None:
-                    from repro.graph.partition import (build_sharded_layout,
-                                                       place_sharded_layout)
-                    layout = place_sharded_layout(build_sharded_layout(
-                        eng.state, mesh=cfg.mesh, axes=cfg.mesh_axes,
-                        num_shards=cfg.num_shards,
-                        weight=w, reverse=rev, semiring=s,
-                        slots=eng._shard_slots,
-                        chunk=chunk, tile_n=tile_n,
-                        weight_dtype=eng._weight_dtype_for(s)))
-                else:
-                    layout = B.build_layout(
-                        eng.state, weight=w, reverse=rev, semiring=s,
-                        chunk=B.CHUNK if chunk is None else chunk,
-                        tile_n=tile_n,
-                        weight_dtype=eng._weight_dtype_for(s))
+                layout = eng._build_spec_layout(eng.state, spec)
                 self._layouts[spec] = layout
             out.append(layout)
         return tuple(out)
@@ -383,19 +381,23 @@ class GraphServingEngine:
             eng._maybe_rebalance()
             self._layouts.clear()
 
-    def _refill(self, lane: _Lane):
+    def _refill(self, lane: _Lane, state=None):
         """Seat queued requests in vacant slots (wave boundary only).
 
         A fresh occupant's state rows come from *its own* algorithm
         instance (its seeds/sources), written into the shared bank with
         static-shaped row scatters — the bank's pytree structure, and
         therefore the lane's compiled wave program, never changes.
+        ``state`` pins the graph the rows initialize against (the async
+        pipeline passes the served snapshot's state).
         """
+        if state is None:
+            state = self.engine.state
         for i in range(self.slots):
             if lane.tickets[i] is not None or not lane.queue:
                 continue
             ticket = lane.queue.pop(0)
-            row = ticket._instance.init_state(self.engine.state)
+            row = ticket._instance.init_state(state)
             lane.bank = {
                 k: lane.bank[k].at[i].set(row[k]) for k in lane.bank}
             lane.tickets[i] = ticket
@@ -434,19 +436,23 @@ class GraphServingEngine:
             lane.cold[i] = False
             self.stats.queries_completed += 1
 
-    def _exact_fallback(self, lane: _Lane):
+    def _exact_fallback(self, lane: _Lane, state=None, snap=None):
         """Summary overflow: serve every live row with a per-row exact
         recompute (graceful degradation, same contract as
-        ``engine.query``), then harvest them all."""
+        ``engine.query``), then harvest them all.  ``state``/``snap``
+        pin the recompute to the wave's served snapshot in async mode —
+        the fallback must answer at the epoch the wave was serving."""
         eng = self.engine
+        if state is None:
+            state = eng.state
         deltas = np.zeros((self.slots,), np.float32)
         for i, ticket in enumerate(lane.tickets):
             if ticket is None:
                 continue
             row = {k: lane.bank[k][i] for k in lane.bank}
             new_row, _ = ticket._instance.exact(
-                row, eng.state,
-                layouts=self._spec_layouts(ticket._instance),
+                row, state,
+                layouts=self._spec_layouts(ticket._instance, snap),
                 backend=eng.backend)
             lane.bank = {
                 k: lane.bank[k].at[i].set(new_row[k]) for k in lane.bank}
@@ -461,16 +467,35 @@ class GraphServingEngine:
     def step(self) -> int:
         """Run one wave: apply updates, refill, one batched fused step
         per non-empty lane, harvest.  Returns the number of queries
-        completed this wave."""
+        completed this wave.
+
+        Async engines (``EngineConfig.async_rebuild``) reorder the
+        boundary work: the wave *promotes* the finished epoch build,
+        serves every lane from the promoted snapshot, and only then
+        integrates buffered updates — dispatching (never awaiting) the
+        next epoch's apply + sorts + rebalance probe, which overlap with
+        the harvest transfers and the next wave's host-side boundary
+        work."""
         eng = self.engine
         cfg = eng.config
+        pipe = eng._pipeline
         t0 = time.perf_counter()
         completed_before = self.stats.queries_completed
 
-        self._apply_updates()
+        snap = None
+        if pipe is not None:
+            promoted = pipe.promote()
+            if promoted is not None:
+                eng._finalize_promotion(promoted)
+            snap = pipe.current
+            state = snap.state
+            self.stats.epoch = snap.epoch
+        else:
+            self._apply_updates()
+            state = eng.state
         occupied = 0
         for lane in self._lanes.values():
-            self._refill(lane)
+            self._refill(lane, state)
             occupied += lane.occupied
 
         for lane in self._lanes.values():
@@ -488,7 +513,7 @@ class GraphServingEngine:
                 [c and t is not None
                  for c, t in zip(lane.cold, lane.tickets)], bool)
             out = fused_query_step_batched(
-                eng.state,
+                state,
                 lane.bank,
                 eng.deg_prev,
                 eng.active_prev,
@@ -504,7 +529,7 @@ class GraphServingEngine:
                 delta_hop_cap=cfg.delta_hop_cap,
                 degree_mode=cfg.degree_mode,
                 expand_both=cfg.expand_both,
-                layouts=self._spec_layouts(lane.template),
+                layouts=self._spec_layouts(lane.template, snap),
                 backend=eng.backend,
                 shard_bucket_capacity=cfg.shard_hot_edge_capacity,
                 with_drift=ctl is not None,
@@ -516,7 +541,8 @@ class GraphServingEngine:
                 row_drift = None
             if bool(qs.used_fallback):
                 # batch result is invalid — discard, serve rows exactly
-                self._exact_fallback(lane)
+                # (pinned to this wave's snapshot in async mode)
+                self._exact_fallback(lane, state, snap)
                 continue
             lane.bank = new_bank
             for i in range(self.slots):
@@ -547,9 +573,23 @@ class GraphServingEngine:
             else:
                 self._harvest(lane, np.asarray(jax.device_get(row_delta)))
 
-        # hot-set snapshots advance exactly like engine.query()'s epilogue
-        eng.deg_prev = eng._degree_snapshot()
-        eng.active_prev = jnp.copy(eng.state.node_active)
+        if pipe is not None:
+            # every lane's result for this wave is already fetched: apply
+            # buffered updates and dispatch epoch N+1's build — it drains
+            # behind this wave's compute while the host runs the epilogue
+            # and the next wave's boundary work
+            if eng._pending_count:
+                eng._async_integrate()
+            self.stats.snapshot_lag = pipe.snapshot_lag
+            # the served epoch's own baselines become the next wave's
+            # deg_prev/active_prev (drift measured across whole epochs)
+            eng.deg_prev = snap.deg
+            eng.active_prev = snap.active
+        else:
+            # hot-set snapshots advance exactly like engine.query()'s
+            # epilogue
+            eng.deg_prev = eng._degree_snapshot()
+            eng.active_prev = jnp.copy(eng.state.node_active)
 
         wave_s = time.perf_counter() - t0
         self.stats.waves += 1

@@ -446,3 +446,79 @@ def test_bench_sweeps_records_controller_acceptance():
     names = {row["name"] for row in record["rows"]}
     assert {"controller_closedloop_query",
             "controller_openloop_full_query"} <= names
+
+
+# ---------------------------------------------------------------------------
+# layer 7: per-workload gain calibration (drift_contraction)
+# ---------------------------------------------------------------------------
+
+
+def test_gain_resolution_precedence():
+    """Explicit gain > declared contraction (1/(1-c)) > legacy 3.0, and
+    a declared contraction outside [0, 1) is rejected."""
+    kw = dict(r0=0.2, delta0=0.1)
+    assert QualityController(0.95, **kw).gain == 3.0
+    assert QualityController(0.95, contraction=0.0, **kw).gain == 1.0
+    assert QualityController(0.95, contraction=0.5, **kw).gain == 2.0
+    assert QualityController(0.95, gain=5.0, contraction=0.5, **kw).gain == 5.0
+    with pytest.raises(ValueError, match="contraction"):
+        QualityController(0.95, contraction=1.0, **kw)
+
+
+def test_algorithms_declare_contraction_and_engine_wires_it():
+    """The min/max-semiring relaxations declare contraction 0 (their
+    sweeps settle — residuals don't amplify geometrically), the damped
+    ranking algebras declare nothing (conservative legacy gain), and the
+    engine threads the declaration into its controller."""
+    src, dst = gnm_edges(120, 700, seed=2)
+    caps = dict(node_capacity=120, edge_capacity=2048)
+    with repro.session((src, dst), algorithm="sssp",
+                       quality_target=0.9, **caps) as s:
+        assert s.algorithm.drift_contraction == 0.0
+        assert s.engine.controller.gain == 1.0
+    with repro.session((src, dst), algorithm="pagerank",
+                       quality_target=0.9, **caps) as s:
+        assert s.algorithm.drift_contraction is None
+        assert s.engine.controller.gain == 3.0
+
+
+def test_calibrated_gain_cuts_refreshes_on_quiet_min_plus_stream():
+    """The ISSUE 10 calibration pin: on a low-churn min_plus stream the
+    calibrated controller (sssp declares contraction 0 -> gain 1)
+    refreshes strictly less often than the legacy blanket gain=3 -- same
+    stream, same budget -- while its measured rank quality (RBO@100 vs
+    an exact-oracle replay) never drops below 0.95."""
+    n, m, steps, chunk = 300, 1_800, 10, 6
+    src, dst = gnm_edges(n, m, seed=21)
+    stream = _drifting_stream(n, steps, chunk, seed=11)
+    caps = dict(node_capacity=n, edge_capacity=m + steps * chunk + 512)
+
+    def replay(legacy_gain):
+        with repro.session((src, dst), algorithm="sssp", sources=(0, 7),
+                           quality_target=0.95, **caps) as s:
+            if legacy_gain:
+                # reproduce the pre-calibration controller byte-for-byte:
+                # identical loop, only the blanket gain restored
+                s.engine.controller.gain = 3.0
+            scores = []
+            for a, b in stream:
+                s.add_edges(a, b)
+                scores.append(np.asarray(s.query().scores))
+            return scores, s.engine.controller.refreshes
+
+    cal_scores, cal_refreshes = replay(False)
+    _, leg_refreshes = replay(True)
+    assert leg_refreshes >= 1            # legacy over-refreshes here...
+    assert cal_refreshes < leg_refreshes  # ...calibration stops paying
+
+    with repro.session((src, dst), algorithm="sssp", sources=(0, 7),
+                       on_query=lambda q, v: Action.EXACT, **caps) as oracle:
+        quality = []
+        for (a, b), approx in zip(stream, cal_scores):
+            oracle.add_edges(a, b)
+            exact = np.asarray(oracle.query().scores)
+            # distances rank ascending: negate so rbo's descending sort
+            # puts nearest vertices first (unreachable +inf -> last)
+            quality.append(rbo_from_scores(
+                jnp.asarray(-approx), jnp.asarray(-exact), depth=100))
+    assert min(quality) >= 0.95

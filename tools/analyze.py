@@ -109,6 +109,9 @@ def main(argv=None) -> int:
         got = PR.run_retrace_scenario()
         all_findings.extend(got)
         print(f"  retrace engine-loop[pagerank]: {len(got)} finding(s)")
+        got = PR.run_async_retrace_scenario()
+        all_findings.extend(got)
+        print(f"  retrace engine-loop[pagerank,async]: {len(got)} finding(s)")
 
     if "ast" in passes:
         from repro.analysis import ast_lint

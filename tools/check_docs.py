@@ -45,6 +45,7 @@ PUBLIC_API_MODULES = [
     "src/repro/core/algorithm.py",
     "src/repro/core/backend.py",
     "src/repro/core/engine.py",
+    "src/repro/core/epoch.py",
     "src/repro/core/fused.py",
     "src/repro/core/hits.py",
     "src/repro/core/hotset.py",
